@@ -1,0 +1,136 @@
+"""Benchmarks reproducing the paper's figures (reduced sizes for CPU).
+
+fig4_convergence_case1 / fig5_convergence_case2:
+    test error vs outer iterations T for the three fusion rules, against the
+    centralized baseline (paper Figs. 4-5).
+fig6_connectivity_case1 / fig6_connectivity_case2:
+    test error vs connectivity radius r for SN-Train vs local-only vs
+    centralized, single-sensor fusion (paper Fig. 6).
+
+Each returns rows of (label, value) and asserts nothing — the CSV is the
+artifact; EXPERIMENTS.md quotes it.
+"""
+
+from __future__ import annotations
+
+import os
+
+# Paper-faithful numerics: lambda_i ~ 1e-5 needs f64 solves (see sn_train).
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    build_topology,
+    colored_sweep,
+    fit_krr,
+    init_state,
+    local_only,
+    make_problem,
+)
+from repro.core import fusion
+from repro.core.centralized import predict
+from repro.data import case1, case2, sample_field
+
+
+def _avg_errors(case, radius, t_values, *, n=50, trials=8, rule_list=("single", "nn", "conn")):
+    """Mean test error per fusion rule per T, averaged over random networks."""
+    errs = {r: np.zeros(len(t_values)) for r in rule_list}
+    cent = 0.0
+    for s in range(trials):
+        d = sample_field(case, n, seed=100 + s)
+        topo = build_topology(d["x"], radius)
+        prob = make_problem(topo, case.kernel, d["y"], dtype=jnp.float64)
+        xq, yq = d["x_test"], d["y_test"]
+        state = init_state(prob)
+        done = 0
+        for ti, t in enumerate(t_values):
+            state = colored_sweep(prob, state, n_sweeps=t - done)
+            done = t
+            for r in rule_list:
+                pred = fusion.fuse(prob, state, xq, r)
+                errs[r][ti] += float(jnp.mean((pred - yq) ** 2)) / trials
+        model = fit_krr(d["x"], d["y"], case.kernel, lam=0.01 / n**2, dtype=jnp.float64)
+        cent += float(jnp.mean((predict(model, xq) - yq) ** 2)) / trials
+    return errs, cent
+
+
+def fig4_convergence_case1(rows):
+    t_values = [1, 2, 3, 5, 10, 25, 50]
+    t0 = time.time()
+    errs, cent = _avg_errors(case1(), radius=0.4, t_values=t_values)
+    dt = (time.time() - t0) * 1e6
+    for r, v in errs.items():
+        for t, e in zip(t_values, v):
+            rows.append((f"fig4.case1.{r}.T{t}", dt / len(t_values), f"{e:.4f}"))
+    rows.append(("fig4.case1.centralized", dt, f"{cent:.4f}"))
+
+
+def fig5_convergence_case2(rows):
+    t_values = [1, 2, 3, 5, 10, 25, 50]
+    t0 = time.time()
+    errs, cent = _avg_errors(case2(), radius=0.8, t_values=t_values)
+    dt = (time.time() - t0) * 1e6
+    for r, v in errs.items():
+        for t, e in zip(t_values, v):
+            rows.append((f"fig5.case2.{r}.T{t}", dt / len(t_values), f"{e:.4f}"))
+    rows.append(("fig5.case2.centralized", dt, f"{cent:.4f}"))
+
+
+def _connectivity(case, radii, *, n=50, trials=6, sweeps=80):
+    out = []
+    for r in radii:
+        sn, lo, ce = 0.0, 0.0, 0.0
+        for s in range(trials):
+            d = sample_field(case, n, seed=200 + s)
+            topo = build_topology(d["x"], r)
+            prob = make_problem(topo, case.kernel, d["y"], dtype=jnp.float64)
+            xq, yq = d["x_test"], d["y_test"]
+            st = colored_sweep(prob, init_state(prob), n_sweeps=sweeps)
+            sn += float(jnp.mean((fusion.fuse(prob, st, xq, "single") - yq) ** 2)) / trials
+            lo += float(
+                jnp.mean((fusion.fuse(prob, local_only(prob), xq, "single") - yq) ** 2)
+            ) / trials
+            model = fit_krr(d["x"], d["y"], case.kernel, lam=0.01 / n**2, dtype=jnp.float64)
+            ce += float(jnp.mean((predict(model, xq) - yq) ** 2)) / trials
+        out.append((r, sn, lo, ce))
+    return out
+
+
+def fig6_connectivity_case1(rows):
+    t0 = time.time()
+    data = _connectivity(case1(), radii=[0.1, 0.2, 0.3, 0.45, 0.6])
+    dt = (time.time() - t0) * 1e6 / len(data)
+    for r, sn, lo, ce in data:
+        rows.append((f"fig6.case1.sn_train.r{r}", dt, f"{sn:.4f}"))
+        rows.append((f"fig6.case1.local_only.r{r}", dt, f"{lo:.4f}"))
+        rows.append((f"fig6.case1.centralized.r{r}", dt, f"{ce:.4f}"))
+
+
+def fig6_connectivity_case2(rows):
+    t0 = time.time()
+    data = _connectivity(case2(), radii=[0.1, 0.5, 1.0, 1.5, 2.1])
+    dt = (time.time() - t0) * 1e6 / len(data)
+    for r, sn, lo, ce in data:
+        rows.append((f"fig6.case2.sn_train.r{r}", dt, f"{sn:.4f}"))
+        rows.append((f"fig6.case2.local_only.r{r}", dt, f"{lo:.4f}"))
+        rows.append((f"fig6.case2.centralized.r{r}", dt, f"{ce:.4f}"))
+
+
+def knn_k_sweep(rows):
+    """Paper Sec. 3.3: k-NN fusion interpolates between nearest-neighbor
+    (k=1) and the network average (k=n).  Sweep k for Case 2."""
+    case = case2()
+    d = sample_field(case, 50, seed=42)
+    topo = build_topology(d["x"], 0.8)
+    prob = make_problem(topo, case.kernel, d["y"], dtype=jnp.float64)
+    t0 = time.time()
+    state = colored_sweep(prob, init_state(prob), n_sweeps=60)
+    xq, yq = d["x_test"], d["y_test"]
+    us = (time.time() - t0) * 1e6
+    for k in (1, 2, 5, 10, 25, 50):
+        e = float(jnp.mean((fusion.fuse(prob, state, xq, "knn", k=k) - yq) ** 2))
+        rows.append((f"knn_sweep.case2.k{k}", us, f"{e:.4f}"))

@@ -1,0 +1,54 @@
+"""Benchmark harness — one function per paper table/figure plus kernel and
+consensus benches.  Prints ``name,us_per_call,derived`` CSV.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only PREFIX] [--fast]
+"""
+
+from __future__ import annotations
+
+import os
+
+# Must precede any jax import: the paper-figure benches solve the paper's
+# lambda ~ 1e-5 systems, which need f64 (explicit f32 arrays elsewhere are
+# unaffected by the x64 flag).
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="run benches whose name starts with this")
+    ap.add_argument("--fast", action="store_true", help="skip the slow paper figures")
+    args = ap.parse_args()
+
+    from . import consensus_bench, kernels_bench, paper_figs
+
+    benches = [
+        ("fig4_convergence_case1", paper_figs.fig4_convergence_case1, True),
+        ("fig5_convergence_case2", paper_figs.fig5_convergence_case2, True),
+        ("fig6_connectivity_case1", paper_figs.fig6_connectivity_case1, True),
+        ("fig6_connectivity_case2", paper_figs.fig6_connectivity_case2, True),
+        ("knn_k_sweep", paper_figs.knn_k_sweep, True),
+        ("kernel_matvec_bytes", kernels_bench.kernel_matvec_bytes, False),
+        ("kernel_matvec_correctness", kernels_bench.kernel_matvec_correctness, False),
+        ("gossip_vs_allreduce", consensus_bench.gossip_vs_allreduce, False),
+    ]
+
+    rows: list[tuple[str, float, str]] = []
+    for name, fn, slow in benches:
+        if args.only and not name.startswith(args.only):
+            continue
+        if args.fast and slow:
+            continue
+        print(f"# running {name} ...", file=sys.stderr, flush=True)
+        fn(rows)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

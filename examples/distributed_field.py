@@ -1,0 +1,66 @@
+"""Distributed SN-Train over a device mesh (the paper's algorithm sharded).
+
+Sensors are distributed across devices with shard_map; each color step runs
+the batched local Cholesky solves in parallel on every device and exchanges
+the Update messages as a psum of disjoint deltas (DESIGN.md Sec. 2).
+
+Run (8 simulated devices):
+  PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python examples/distributed_field.py
+"""
+
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    )
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    Kernel,
+    build_topology,
+    colored_sweep,
+    init_state,
+    make_problem,
+    sharded_sweep,
+)
+from repro.core import fusion
+from repro.data import case2, sample_field
+
+
+def main():
+    n_dev = len(jax.devices())
+    print(f"devices: {n_dev}")
+    case = case2()
+    data = sample_field(case, 200, seed=0)
+    topo = build_topology(data["x"], radius=0.5)
+    prob = make_problem(topo, case.kernel, data["y"])
+    st0 = init_state(prob)
+
+    mesh = jax.make_mesh((n_dev,), ("sensors",), axis_types=(jax.sharding.AxisType.Auto,))
+
+    t0 = time.time()
+    ref = colored_sweep(prob, st0, n_sweeps=20)
+    t_ref = time.time() - t0
+    t0 = time.time()
+    sh = sharded_sweep(prob, st0, mesh, n_sweeps=20)
+    t_sh = time.time() - t0
+
+    diff = float(jnp.max(jnp.abs(ref.z - sh.z)))
+    print(f"single-device colored sweep: {t_ref:.2f}s")
+    print(f"sharded sweep ({n_dev} devices): {t_sh:.2f}s")
+    print(f"max |z_single - z_sharded| = {diff:.2e} (identical message fixed point)")
+
+    xq, yq = data["x_test"], data["y_test"]
+    mse = float(jnp.mean((fusion.fuse(prob, sh, xq, "nn") - yq) ** 2))
+    print(f"nn-fusion test MSE (200 sensors, distributed training): {mse:.4f}")
+
+
+if __name__ == "__main__":
+    main()

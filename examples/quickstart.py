@@ -1,0 +1,105 @@
+"""Quickstart: the paper's field-estimation experiment end to end.
+
+Reproduces the Case-2 setup (Sec. 4.1): 50 sensors on [-1,1] observe
+eta(x) = sin(pi x) + N(0,1); SN-Train runs T outer iterations of local
+message passing; the fusion center aggregates with the three rules of
+Sec. 3.3 and is compared against the centralized kernel estimator (Eq. 6).
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--case 1|2] [--sweeps 50]
+"""
+
+import os
+
+# The paper's lambda_i = 0.01/|N_i|^2 conditions the local solves at ~1e9,
+# so the faithful reproduction runs in float64 (see DESIGN.md / sn_train).
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    build_topology,
+    colored_sweep,
+    fit_krr,
+    init_state,
+    local_only,
+    make_problem,
+)
+from repro.core import fusion
+from repro.core.centralized import predict
+from repro.data import case1, case2, sample_field
+
+
+def ascii_plot(xq, curves, width=72, height=16):
+    """Tiny terminal plot: one char per curve."""
+    lo = min(float(np.min(v)) for v in curves.values())
+    hi = max(float(np.max(v)) for v in curves.values())
+    grid = [[" "] * width for _ in range(height)]
+    for (label, v), ch in zip(curves.items(), "*o+x#"):
+        for i in range(width):
+            xi = int(i / width * (len(v) - 1))
+            yi = int((float(v[xi]) - lo) / (hi - lo + 1e-9) * (height - 1))
+            grid[height - 1 - yi][i] = ch
+    print(f"  y in [{lo:.2f}, {hi:.2f}]")
+    for row in grid:
+        print("  " + "".join(row))
+    for (label, _), ch in zip(curves.items(), "*o+x#"):
+        print(f"    {ch} = {label}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--case", type=int, default=2, choices=[1, 2])
+    ap.add_argument("--n", type=int, default=50)
+    ap.add_argument("--radius", type=float, default=0.0)
+    ap.add_argument("--sweeps", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    case = case1() if args.case == 1 else case2()
+    radius = args.radius or (0.4 if args.case == 1 else 0.8)
+    data = sample_field(case, args.n, seed=args.seed)
+    print(f"case={case.name}  n={args.n}  r={radius}  kernel={case.kernel.name}")
+
+    topo = build_topology(data["x"], radius)
+    print(f"topology: max degree={int(np.asarray(topo.degrees).max())}, "
+          f"colors={topo.n_colors} (distance-2 greedy)")
+
+    import jax.numpy as jnp
+    prob = make_problem(topo, case.kernel, data["y"], dtype=jnp.float64)
+    state = colored_sweep(prob, init_state(prob), n_sweeps=args.sweeps)
+
+    xq = np.linspace(-1, 1, 200)[:, None].astype(np.float32)
+    truth = case.eta(xq[:, 0])
+    cent = fit_krr(data["x"], data["y"], case.kernel, lam=0.01 / args.n**2,
+                   dtype=jnp.float64)
+
+    preds = {
+        "truth": truth,
+        "sn-train nn-fusion": np.asarray(fusion.fuse(prob, state, xq, "nn")),
+        "sn-train single": np.asarray(fusion.fuse(prob, state, xq, "single")),
+        "centralized": np.asarray(predict(cent, xq)),
+        "local-only single": np.asarray(
+            fusion.fuse(prob, local_only(prob), xq, "single")
+        ),
+    }
+    xt, yt = data["x_test"], data["y_test"]
+    print("\ntest MSE (vs clean field, 500 held-out points):")
+    for name in ["sn-train nn-fusion", "sn-train single", "centralized", "local-only single"]:
+        rule = {"sn-train nn-fusion": "nn", "sn-train single": "single"}.get(name)
+        if rule:
+            e = float(jnp.mean((fusion.fuse(prob, state, xt, rule) - yt) ** 2))
+        elif name == "centralized":
+            e = float(jnp.mean((predict(cent, xt) - yt) ** 2))
+        else:
+            e = float(jnp.mean((fusion.fuse(prob, local_only(prob), xt, "single") - yt) ** 2))
+        print(f"  {name:22s} {e:8.4f}")
+
+    print()
+    ascii_plot(xq[:, 0], preds)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Pytree checkpointing: flat .npz + treedef manifest (no orbax offline)."""
+
+from .ckpt import latest_step, restore, save
+
+__all__ = ["latest_step", "restore", "save"]

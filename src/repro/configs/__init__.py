@@ -1,0 +1,94 @@
+"""Architecture registry: the 10 assigned configs + the paper's own workload.
+
+Usage:  cfg = get_config("mamba2-370m")
+        cfg = get_config("mamba2-370m", variant="long")   # sub-quadratic decode
+        cfg = get_config("mamba2-370m", variant="smoke")  # reduced smoke config
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig, reduced
+
+from . import (
+    internlm2_1_8b,
+    jamba_1_5_large_398b,
+    llama4_scout_17b_a16e,
+    mamba2_370m,
+    nemotron_4_15b,
+    qwen1_5_32b,
+    qwen2_vl_2b,
+    qwen3_moe_30b_a3b,
+    sensor_field,
+    smollm_135m,
+    whisper_tiny,
+)
+from .shapes import SHAPES, InputShape, batch_specs, concrete_batch, decode_specs, input_specs
+
+_MODULES = {
+    "smollm-135m": smollm_135m,
+    "llama4-scout-17b-a16e": llama4_scout_17b_a16e,
+    "internlm2-1.8b": internlm2_1_8b,
+    "qwen2-vl-2b": qwen2_vl_2b,
+    "jamba-1.5-large-398b": jamba_1_5_large_398b,
+    "mamba2-370m": mamba2_370m,
+    "nemotron-4-15b": nemotron_4_15b,
+    "whisper-tiny": whisper_tiny,
+    "qwen3-moe-30b-a3b": qwen3_moe_30b_a3b,
+    "qwen1.5-32b": qwen1_5_32b,
+}
+
+ARCH_NAMES = list(_MODULES)
+
+# sliding window used for the long_500k sub-quadratic variant of attention archs
+LONG_CONTEXT_WINDOW = 8192
+
+
+def long_context_variant(cfg: ModelConfig) -> ModelConfig:
+    """Sub-quadratic variant for long_500k (DESIGN.md Sec. 5).
+
+    SSM is natively O(1)-state.  Attention-bearing archs get a sliding
+    window (ring-buffer KV cache of LONG_CONTEXT_WINDOW).  Whisper has no
+    long-context analogue and is skipped by the dry-run driver.
+    """
+    if cfg.family == "ssm":
+        return cfg
+    if cfg.is_encoder_decoder:
+        raise ValueError(f"{cfg.name}: long_500k is skipped for enc-dec (DESIGN.md)")
+    return dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+
+
+def supports_shape(name: str, shape_name: str) -> bool:
+    return not (shape_name == "long_500k" and name == "whisper-tiny")
+
+
+def get_config(name: str, *, variant: str | None = None) -> ModelConfig:
+    cfg = _MODULES[name].config()
+    if variant in (None, "full"):
+        return cfg
+    if variant == "long":
+        return long_context_variant(cfg)
+    if variant == "smoke":
+        return reduced(cfg)
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def sensor_field_config() -> sensor_field.SensorFieldConfig:
+    return sensor_field.config()
+
+
+__all__ = [
+    "ARCH_NAMES",
+    "LONG_CONTEXT_WINDOW",
+    "SHAPES",
+    "InputShape",
+    "batch_specs",
+    "concrete_batch",
+    "decode_specs",
+    "get_config",
+    "input_specs",
+    "long_context_variant",
+    "sensor_field_config",
+    "supports_shape",
+]

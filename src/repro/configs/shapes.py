@@ -1,0 +1,108 @@
+"""Assigned input shapes and abstract input specs for the dry-run.
+
+Shapes (from the assignment):
+  train_4k     seq=4096    global_batch=256   -> train_step
+  prefill_32k  seq=32768   global_batch=32    -> prefill (forward + cache fill)
+  decode_32k   seq=32768   global_batch=128   -> serve_step (1 token vs cache)
+  long_500k    seq=524288  global_batch=1     -> serve_step, sub-quadratic only
+
+`input_specs` returns jax.ShapeDtypeStruct stand-ins (weak-type-correct, no
+allocation) for everything the step function consumes besides params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import model as M
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, InputShape] = {
+    s.name: s
+    for s in [
+        InputShape("train_4k", "train", 4096, 256),
+        InputShape("prefill_32k", "prefill", 32768, 32),
+        InputShape("decode_32k", "decode", 32768, 128),
+        InputShape("long_500k", "decode", 524288, 1),
+    ]
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, *, batch: int | None = None):
+    """Abstract batch for train/prefill. `batch` overrides global_batch."""
+    b = batch if batch is not None else shape.global_batch
+    s = shape.seq_len
+    itok = jnp.int32
+    f = jnp.dtype(cfg.dtype)
+    if cfg.is_encoder_decoder:
+        return {
+            "tokens": _sds((b, s), itok),
+            "labels": _sds((b, s), itok),
+            "mask": _sds((b, s), jnp.float32),
+            "frames": _sds((b, cfg.encoder_seq, cfg.d_model), f),
+        }
+    spec = {
+        "tokens": _sds((b, max(s - cfg.n_patches, 1)), itok),
+        "labels": _sds((b, max(s - cfg.n_patches, 1)), itok),
+        "mask": _sds((b, max(s - cfg.n_patches, 1)), jnp.float32),
+    }
+    if cfg.n_patches:
+        spec["patch_embeds"] = _sds((b, cfg.n_patches, cfg.d_model), f)
+    return spec
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape, *, batch: int | None = None):
+    """Abstract (token, cache, position) for a serve step with a seq_len cache."""
+    b = batch if batch is not None else shape.global_batch
+    f = jnp.dtype(cfg.dtype)
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, b, shape.seq_len, f))
+    return {
+        "token": _sds((b, 1), jnp.int32),
+        "cache": cache,
+        "position": _sds((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, **kw):
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode":
+        return decode_specs(cfg, shape, **kw)
+    return batch_specs(cfg, shape, **kw)
+
+
+def concrete_batch(cfg: ModelConfig, seq: int, batch: int, *, seed: int = 0):
+    """Small concrete batch for smoke tests (reduced configs only)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_text = max(seq - cfg.n_patches, 1)
+    out = {
+        "tokens": jax.random.randint(k1, (batch, s_text), 0, cfg.vocab_size),
+        "labels": jax.random.randint(k2, (batch, s_text), 0, cfg.vocab_size),
+        "mask": jnp.ones((batch, s_text), jnp.float32),
+    }
+    if cfg.is_encoder_decoder:
+        out["frames"] = jax.random.normal(
+            k3, (batch, cfg.encoder_seq, cfg.d_model), jnp.float32
+        )
+    if cfg.n_patches:
+        out["patch_embeds"] = jax.random.normal(
+            k3, (batch, cfg.n_patches, cfg.d_model), jnp.float32
+        )
+    return out

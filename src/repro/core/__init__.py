@@ -1,0 +1,66 @@
+"""The paper's primary contribution: distributed kernel regression via
+alternating projections (SN-Train), plus the SOP-consensus generalization
+used by the LLM training stack.
+
+Public surface:
+  kernels_math — RKHS kernels (linear / RBF / Matern / poly)
+  topology     — geometric sensor graphs, distance-2 coloring
+  sop          — generic successive-orthogonal-projection machinery
+  centralized  — fusion-center regularized kernel least squares (Eq. 6)
+  sn_train     — the paper's SN-Train message-passing algorithm (Eq. 18)
+  fusion       — single-sensor / kNN / connectivity-averaged aggregation
+  consensus    — SOP-gossip data parallelism (pairwise projections == gossip)
+"""
+
+from . import centralized, consensus, fusion, kernels_math, sn_train, sop, topology
+from .centralized import KRRModel, fit_krr, predict
+from .kernels_math import Kernel
+from .sn_train import (
+    SNTrainProblem,
+    SNTrainState,
+    colored_sweep,
+    default_lambdas,
+    init_state,
+    local_only,
+    make_problem,
+    random_sweep,
+    robust_sweep,
+    serial_sweep,
+    sharded_sweep,
+    weighted_norm_sq,
+    weighted_norm_sq_hetero,
+    weighted_sweep,
+)
+from .topology import SensorTopology, build_topology, ring_topology, uniform_sensors
+
+__all__ = [
+    "Kernel",
+    "KRRModel",
+    "SNTrainProblem",
+    "SNTrainState",
+    "SensorTopology",
+    "build_topology",
+    "centralized",
+    "colored_sweep",
+    "consensus",
+    "default_lambdas",
+    "fit_krr",
+    "fusion",
+    "init_state",
+    "kernels_math",
+    "local_only",
+    "make_problem",
+    "predict",
+    "random_sweep",
+    "ring_topology",
+    "robust_sweep",
+    "serial_sweep",
+    "sharded_sweep",
+    "sn_train",
+    "sop",
+    "weighted_norm_sq",
+    "weighted_norm_sq_hetero",
+    "weighted_sweep",
+    "topology",
+    "uniform_sensors",
+]

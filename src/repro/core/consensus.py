@@ -1,0 +1,150 @@
+"""SOP-consensus ("gossip") data parallelism — the paper's technique applied
+to distributed neural-network training (DESIGN.md Sec. 3).
+
+Mapping: data-parallel replica i  <->  sensor i; replica parameters theta_i
+<->  the sensor's local function f_i; the coupling constraint f_i = f_j for
+neighbors  <->  the consensus subspace C_ij = {theta : theta_i = theta_j}.
+
+The orthogonal projection of (theta_1..theta_n) onto C_ij replaces theta_i
+and theta_j by their average and leaves everything else unchanged — so SOP
+over a *pairing schedule* is a sequence of exact pairwise parameter
+averagings, implemented on hardware with `jax.lax.ppermute` along the `data`
+mesh axis.  The paper's Lemma 3.1 ("fully connected = centralized") maps to:
+a full hypercube sweep of pairwise projections equals the all-reduce mean
+exactly (butterfly all-reduce), which is both a property test and the bridge
+to conventional data parallelism.
+
+Two execution modes:
+  * device mode — inside shard_map/jit with a named axis (production path);
+  * host-sim mode — replicas stacked on a leading array axis (tests,
+    benchmarks, single-device CPU).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+# --------------------------------------------------------------------------
+# Pairing schedules (partner[i] = who replica i projects with this round).
+# --------------------------------------------------------------------------
+
+
+def hypercube_schedule(n: int) -> list[list[int]]:
+    """log2(n) rounds of partner = i XOR 2^d.  Full sweep == global mean."""
+    if n & (n - 1):
+        raise ValueError(f"hypercube schedule needs power-of-two replicas, got {n}")
+    return [[i ^ (1 << d) for i in range(n)] for d in range(int(math.log2(n)))]
+
+
+def ring_schedule(n: int) -> list[list[int]]:
+    """Two alternating even/odd pairings on a ring (the relaxed topology)."""
+    if n % 2:
+        raise ValueError("ring schedule needs an even replica count")
+    even = [i ^ 1 for i in range(n)]  # (0,1)(2,3)...
+    odd = [(i - 1) % n if i % 2 == 0 else (i + 1) % n for i in range(n)]
+    return [even, odd]
+
+
+def one_sided_ring_schedule(n: int) -> list[list[int]]:
+    """Neighborhood averaging with both ring neighbors (Cimmino-style
+    simultaneous projection): theta_i <- (theta_{i-1} + theta_i + theta_{i+1})/3.
+    Returned as two shift permutations; see `neighborhood_average`.
+    """
+    fwd = [(i + 1) % n for i in range(n)]
+    bwd = [(i - 1) % n for i in range(n)]
+    return [fwd, bwd]
+
+
+def schedule(name: str, n: int) -> list[list[int]]:
+    if name == "hypercube":
+        return hypercube_schedule(n)
+    if name == "ring":
+        return ring_schedule(n)
+    raise ValueError(f"unknown gossip schedule {name!r}")
+
+
+# --------------------------------------------------------------------------
+# Device mode (inside shard_map over `axis_name`).
+# --------------------------------------------------------------------------
+
+
+def pairwise_project(params: Pytree, axis_name: str, partners: list[int]) -> Pytree:
+    """One SOP projection onto intersect_{paired (i,j)} C_ij.
+
+    `partners` must be an involution (partner[partner[i]] == i).
+    """
+    perm = [(i, p) for i, p in enumerate(partners)]
+    return jax.tree.map(
+        lambda x: 0.5 * (x + jax.lax.ppermute(x, axis_name, perm)), params
+    )
+
+
+def neighborhood_average(params: Pytree, axis_name: str, n: int) -> Pytree:
+    """Cimmino-style simultaneous projection over ring neighborhoods."""
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    bwd = [(i, (i - 1) % n) for i in range(n)]
+
+    def avg(x):
+        return (
+            x
+            + jax.lax.ppermute(x, axis_name, fwd)
+            + jax.lax.ppermute(x, axis_name, bwd)
+        ) / 3.0
+
+    return jax.tree.map(avg, params)
+
+
+def gossip_round(
+    params: Pytree, axis_name: str, sched: list[list[int]], round_idx: jax.Array
+) -> Pytree:
+    """Apply the round_idx-th pairing of a schedule (round-robin)."""
+    branches = [
+        (lambda p, s=s: pairwise_project(p, axis_name, s)) for s in sched
+    ]
+    return jax.lax.switch(round_idx % len(sched), branches, params)
+
+
+def allreduce_average(params: Pytree, axis_name: str) -> Pytree:
+    """The centralized special case (complete graph; paper Lemma 3.1)."""
+    return jax.tree.map(lambda x: jax.lax.pmean(x, axis_name), params)
+
+
+def consensus_sq_distance(params: Pytree, axis_name: str) -> jax.Array:
+    """sum_i ||theta_i - mean||^2 — the Fejer-monotone disagreement metric."""
+    mean = jax.tree.map(lambda x: jax.lax.pmean(x, axis_name), params)
+    per = jax.tree.reduce(
+        jnp.add,
+        jax.tree.map(lambda x, m: jnp.sum((x - m) ** 2), params, mean),
+    )
+    return jax.lax.psum(per, axis_name)
+
+
+# --------------------------------------------------------------------------
+# Host-sim mode: replicas stacked on axis 0 of every leaf.
+# --------------------------------------------------------------------------
+
+
+def sim_pairwise_project(stacked: Pytree, partners: list[int]) -> Pytree:
+    idx = jnp.asarray(partners)
+    return jax.tree.map(lambda x: 0.5 * (x + x[idx]), stacked)
+
+
+def sim_gossip_sweep(stacked: Pytree, sched: list[list[int]]) -> Pytree:
+    for partners in sched:
+        stacked = sim_pairwise_project(stacked, partners)
+    return stacked
+
+
+def sim_consensus_sq_distance(stacked: Pytree) -> jax.Array:
+    def leaf(x):
+        mean = jnp.mean(x, axis=0, keepdims=True)
+        return jnp.sum((x - mean) ** 2)
+
+    return jax.tree.reduce(jnp.add, jax.tree.map(leaf, stacked))

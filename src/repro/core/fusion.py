@@ -1,0 +1,96 @@
+"""Fusion-center aggregation rules (paper Sec. 3.3 'Aggregation').
+
+After SN-Train, every sensor holds a *global* field estimate
+``f_s(x) = sum_{j in N_s} c_{s,j} K(x, x_j)``.  The fusion center combines
+them with one of three strategies from the paper:
+
+  * single-sensor:         f(x) = f_s(x) for one arbitrary sensor s
+  * k-nearest-neighbor:    f(x) = mean_{s in kNN(x)} f_s(x)        (Eq. 19)
+  * connectivity-averaged: f(x) = sum_s |N_s| f_s(x) / sum_s |N_s| (Eq. 20)
+
+k = 1 is "nearest neighbor", k = n is the plain network average.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .sn_train import SNTrainProblem, SNTrainState
+
+
+@partial(jax.jit, static_argnames=("kernel",))
+def _eval_all(kernel, nbr_pos, nbr_mask, coef, xq):
+    """f_s(xq) for every sensor s: returns (n+1, Q)."""
+
+    def eval_s(pos_s, mask_s, coef_s):
+        k = kernel(xq, pos_s)  # (Q, D)
+        return k @ jnp.where(mask_s, coef_s, 0.0)
+
+    return jax.vmap(eval_s)(nbr_pos, nbr_mask, coef)
+
+
+def evaluate_sensors(
+    problem: SNTrainProblem, state: SNTrainState, xq: jax.Array
+) -> jax.Array:
+    """Per-sensor global estimates at queries: (n, Q)."""
+    xq = jnp.atleast_2d(jnp.asarray(xq, jnp.float32))
+    preds = _eval_all(
+        problem.kernel, problem.nbr_pos, problem.nbr_mask, state.coef, xq
+    )
+    return preds[: problem.n]
+
+
+def single_sensor(preds: jax.Array, s: int = 0) -> jax.Array:
+    return preds[s]
+
+
+def knn_fusion(
+    preds: jax.Array, positions: jax.Array, xq: jax.Array, k: int
+) -> jax.Array:
+    """Average the k sensors nearest each query (paper Eq. 19)."""
+    xq = jnp.atleast_2d(jnp.asarray(xq, jnp.float32))
+    d2 = jnp.sum((xq[:, None, :] - positions[None, :, :]) ** 2, axis=-1)  # (Q, n)
+    _, idx = jax.lax.top_k(-d2, k)  # (Q, k)
+    gathered = jnp.take_along_axis(preds.T, idx, axis=1)  # (Q, k)
+    return jnp.mean(gathered, axis=1)
+
+
+def nearest_neighbor(preds: jax.Array, positions: jax.Array, xq: jax.Array) -> jax.Array:
+    return knn_fusion(preds, positions, xq, k=1)
+
+
+def network_average(preds: jax.Array) -> jax.Array:
+    return jnp.mean(preds, axis=0)
+
+
+def connectivity_averaged(preds: jax.Array, degrees: jax.Array) -> jax.Array:
+    """Degree-weighted average (paper Eq. 20)."""
+    w = degrees.astype(jnp.float32)
+    return (w[:, None] * preds).sum(0) / w.sum()
+
+
+def fuse(
+    problem: SNTrainProblem,
+    state: SNTrainState,
+    xq: jax.Array,
+    rule: str = "nn",
+    *,
+    k: int = 1,
+    sensor: int = 0,
+) -> jax.Array:
+    """Convenience dispatcher over the paper's three rules."""
+    preds = evaluate_sensors(problem, state, xq)
+    if rule == "single":
+        return single_sensor(preds, sensor)
+    if rule == "nn":
+        return nearest_neighbor(preds, problem.topology.positions, xq)
+    if rule == "knn":
+        return knn_fusion(preds, problem.topology.positions, xq, k)
+    if rule == "avg":
+        return network_average(preds)
+    if rule == "conn":
+        return connectivity_averaged(preds, problem.topology.degrees)
+    raise ValueError(f"unknown fusion rule {rule!r}")

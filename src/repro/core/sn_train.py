@@ -1,0 +1,501 @@
+"""SN-Train: distributed kernel regression by alternating projections.
+
+Faithful implementation of the paper's Table 1 / Eq. 18.  Each sensor ``s``
+keeps a local function ``f_s = sum_{j in N_s} c_{s,j} K(., x_j)`` (Lemma 3.3)
+and a shared message vector ``z in R^n`` (the network's running estimate of
+the field at sensor locations).  One projection step at sensor s:
+
+    c_{s,t} = (K_s + lambda_s I)^{-1} (z_{N_s, t-1} + lambda_s c_{s,t-1})
+    z_j <- f_{s,t}(x_j)   for j in N_s
+
+Three execution engines, all with identical fixed points:
+
+  * ``serial_sweep``   — the paper's Table-1 ordering, one sensor at a time
+                         (lax.scan over sensors).
+  * ``colored_sweep``  — the paper's Sec-3.3 "Parallelism": all sensors of one
+                         distance-2 color class update simultaneously as a
+                         single batched Cholesky solve (MXU-shaped), colors
+                         sweep serially.  This is the TPU-native engine.
+  * ``sharded_sweep``  — ``colored_sweep`` distributed with shard_map over a
+                         device axis: each device solves its members of the
+                         current color; the Update messages travel as a psum
+                         of disjoint deltas (the all-reduce transport of the
+                         paper's neighbor messages).
+
+Fixed shapes everywhere: neighborhoods are padded to D_max, color classes to
+M_max, and the message vector carries one sentinel slot (index n) so padded
+scatters are harmless.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .kernels_math import Kernel
+from .topology import SensorTopology
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SNTrainProblem:
+    """Static per-network precomputation for SN-Train.
+
+    All arrays are padded to fixed shapes. ``n`` below is the sensor count,
+    ``D`` the padded neighborhood size, ``C``/``M`` colors and members.
+    """
+
+    topology: SensorTopology
+    kernel: Kernel = dataclasses.field(metadata=dict(static=True))
+    y: jnp.ndarray  # (n,) measurements
+    lambdas: jnp.ndarray  # (n,) per-sensor regularizers
+    nbr_pos: jnp.ndarray  # (n+1, D, d) neighbor positions (padded row n)
+    nbr_idx: jnp.ndarray  # (n+1, D) neighbor indices (sentinel row n)
+    nbr_mask: jnp.ndarray  # (n+1, D)
+    gram: jnp.ndarray  # (n+1, D, D) masked local Gram K_s (zeros off-mask)
+    chol: jnp.ndarray  # (n+1, D, D) lower Cholesky of K_s + lambda_s I (padded dims get identity)
+    lam_pad: jnp.ndarray  # (n+1,)
+
+    @property
+    def n(self) -> int:
+        return self.topology.n
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SNTrainState:
+    z: jnp.ndarray  # (n+1,) messages; z[n] is a write sentinel
+    coef: jnp.ndarray  # (n+1, D) per-sensor representer coefficients
+
+
+def default_lambdas(topology: SensorTopology, kappa: float = 0.01) -> jnp.ndarray:
+    """Paper Sec. 4.1: lambda_i = kappa / |N_i|^2 with kappa = 0.01."""
+    deg = topology.degrees.astype(jnp.float32)
+    return kappa / (deg**2)
+
+
+def make_problem(
+    topology: SensorTopology,
+    kernel: Kernel,
+    y: jax.Array,
+    lambdas: jax.Array | None = None,
+    *,
+    dtype=jnp.float32,
+) -> SNTrainProblem:
+    """Precompute the padded SN-Train problem.
+
+    dtype: float32 is the TPU-friendly default, but the paper's own
+    regularizers (lambda_i = 0.01/|N_i|^2 ~ 1e-5) make the local systems
+    condition at ~1e9 where f32 solves systematically violate the projection
+    property (the weighted norm grows and the sweep diverges).  Pass
+    jnp.float64 (with JAX_ENABLE_X64) to reproduce the paper's numerics;
+    alternatively raise lambda (see tests/test_sn_train.py).
+    """
+    n, d_max = topology.nbr_idx.shape
+    d = topology.positions.shape[1]
+    if lambdas is None:
+        lambdas = default_lambdas(topology)
+    lambdas = jnp.asarray(lambdas, dtype)
+
+    # Pad one sentinel row so color-member gathers at index n are in-bounds.
+    nbr_idx = jnp.concatenate(
+        [topology.nbr_idx, jnp.zeros((1, d_max), jnp.int32)], axis=0
+    )
+    nbr_mask = jnp.concatenate(
+        [topology.nbr_mask, jnp.zeros((1, d_max), bool)], axis=0
+    )
+    pos_pad = jnp.concatenate(
+        [topology.positions.astype(dtype), jnp.zeros((1, d), dtype)], axis=0
+    )
+    nbr_pos = pos_pad[nbr_idx]  # (n+1, D, d)
+    lam_pad = jnp.concatenate([lambdas, jnp.ones((1,), dtype)])
+
+    def local_system(pos_s, mask_s, lam_s):
+        k = kernel(pos_s, pos_s)  # (D, D)
+        outer = mask_s[:, None] & mask_s[None, :]
+        k = jnp.where(outer, k, 0.0)
+        # Solve matrix: valid block gets +lambda on the diagonal; padded
+        # diagonal entries are set to 1 so the factorization is SPD and the
+        # padded coefficients stay exactly 0 (their rhs is 0).
+        diag = jnp.where(mask_s, lam_s, 1.0)
+        a = k + jnp.diag(diag)
+        return k, jsl.cholesky(a, lower=True)
+
+    gram, chol = jax.vmap(local_system)(nbr_pos, nbr_mask, lam_pad)
+    return SNTrainProblem(
+        topology=topology,
+        kernel=kernel,
+        y=jnp.asarray(y, dtype),
+        lambdas=lambdas,
+        nbr_pos=nbr_pos,
+        nbr_idx=nbr_idx,
+        nbr_mask=nbr_mask,
+        gram=gram,
+        chol=chol,
+        lam_pad=lam_pad,
+    )
+
+
+def weighted_norm_sq(problem: SNTrainProblem, state: SNTrainState) -> jax.Array:
+    """The SOP product-space norm  ||z||^2 + sum_i lambda_i ||f_i||^2_{H_K}.
+
+    By Lemma 2.1 (0 is in the intersection C, all C_i are subspaces) this is
+    non-increasing along ANY admissible SOP ordering — the invariant the
+    property tests assert.  Note ||f_i||^2 = c_i^T K_i c_i.
+    """
+    n = problem.n
+    z_part = jnp.sum(state.z[:n] ** 2)
+    quad = jnp.einsum("sd,sde,se->s", state.coef, problem.gram, state.coef)
+    return z_part + jnp.sum(problem.lam_pad * quad)
+
+
+def init_state(problem: SNTrainProblem) -> SNTrainState:
+    """Paper Table 1 initialization: z_{s,0} = y_s, f_{s,0} = 0."""
+    n = problem.n
+    d_max = problem.nbr_idx.shape[1]
+    dt = problem.y.dtype
+    z = jnp.concatenate([problem.y, jnp.zeros((1,), dt)])
+    coef = jnp.zeros((n + 1, d_max), dt)
+    return SNTrainState(z=z, coef=coef)
+
+
+def _sensor_update(z, coef_s, nbr_idx_s, nbr_mask_s, gram_s, chol_s, lam_s):
+    """One P_{C_s} projection (Eq. 18). Returns (coef_s', z-values at N_s)."""
+    z_nbr = z[nbr_idx_s]  # (D,)
+    rhs = jnp.where(nbr_mask_s, z_nbr + lam_s * coef_s, 0.0)
+    coef_new = jsl.cho_solve((chol_s, True), rhs)
+    z_new = gram_s @ coef_new  # f_s(x_j) for j in N_s (masked gram)
+    return coef_new, z_new
+
+
+@partial(jax.jit, static_argnames=("n_sweeps",))
+def serial_sweep(
+    problem: SNTrainProblem, state: SNTrainState, n_sweeps: int = 1
+) -> SNTrainState:
+    """The paper's Table-1 serial ordering: for t: for s: project."""
+    n = problem.n
+    idxs = jnp.arange(n, dtype=jnp.int32)
+
+    def body(carry, s):
+        z, coef = carry
+        coef_s = coef[s]
+        coef_new, z_new = _sensor_update(
+            z,
+            coef_s,
+            problem.nbr_idx[s],
+            problem.nbr_mask[s],
+            problem.gram[s],
+            problem.chol[s],
+            problem.lam_pad[s],
+        )
+        coef = coef.at[s].set(coef_new)
+        scatter_idx = jnp.where(problem.nbr_mask[s], problem.nbr_idx[s], n)
+        z = z.at[scatter_idx].set(jnp.where(problem.nbr_mask[s], z_new, z[n]))
+        return (z, coef), None
+
+    def sweep(carry, _):
+        carry, _ = jax.lax.scan(body, carry, idxs)
+        return carry, None
+
+    (z, coef), _ = jax.lax.scan(sweep, (state.z, state.coef), None, length=n_sweeps)
+    return SNTrainState(z=z, coef=coef)
+
+
+def _color_update(problem: SNTrainProblem, z, coef, members, member_mask):
+    """Simultaneous P_{C_s} for all sensors of one color (disjoint N_s)."""
+    n = problem.n
+    nbr_idx_m = problem.nbr_idx[members]  # (M, D)
+    nbr_mask_m = problem.nbr_mask[members] & member_mask[:, None]
+    gram_m = problem.gram[members]
+    chol_m = problem.chol[members]
+    lam_m = problem.lam_pad[members]
+    coef_m = coef[members]
+
+    coef_new, z_new = jax.vmap(
+        lambda c, ni, nm, g, ch, lm: _sensor_update(z, c, ni, nm, g, ch, lm)
+    )(coef_m, nbr_idx_m, nbr_mask_m, gram_m, chol_m, lam_m)
+
+    coef = coef.at[members].set(jnp.where(member_mask[:, None], coef_new, coef[members]))
+    scatter_idx = jnp.where(nbr_mask_m, nbr_idx_m, n)  # (M, D)
+    z = z.at[scatter_idx.reshape(-1)].set(
+        jnp.where(nbr_mask_m, z_new, z[n]).reshape(-1)
+    )
+    return z, coef
+
+
+@partial(jax.jit, static_argnames=("n_sweeps",))
+def colored_sweep(
+    problem: SNTrainProblem, state: SNTrainState, n_sweeps: int = 1
+) -> SNTrainState:
+    """Distance-2-colored parallel SOP (paper Sec. 3.3 'Parallelism')."""
+    topo = problem.topology
+
+    def color_body(carry, cm):
+        z, coef = carry
+        members, member_mask = cm
+        z, coef = _color_update(problem, z, coef, members, member_mask)
+        return (z, coef), None
+
+    def sweep(carry, _):
+        carry, _ = jax.lax.scan(
+            color_body, carry, (topo.color_members, topo.color_mask)
+        )
+        return carry, None
+
+    (z, coef), _ = jax.lax.scan(sweep, (state.z, state.coef), None, length=n_sweeps)
+    return SNTrainState(z=z, coef=coef)
+
+
+def local_only(problem: SNTrainProblem) -> SNTrainState:
+    """The paper's Sec-4.3 ablation: one local fit, no Update messages.
+
+    Each sensor fits its neighborhood's raw measurements; information never
+    propagates. Equivalent to SN-Train's first inner solve with the Update
+    step removed.
+    """
+    n = problem.n
+    y_pad = jnp.concatenate([problem.y, jnp.zeros((1,), jnp.float32)])
+
+    def solve_s(nbr_idx_s, nbr_mask_s, chol_s):
+        rhs = jnp.where(nbr_mask_s, y_pad[nbr_idx_s], 0.0)
+        return jsl.cho_solve((chol_s, True), rhs)
+
+    coef = jax.vmap(solve_s)(problem.nbr_idx, problem.nbr_mask, problem.chol)
+    return SNTrainState(z=y_pad, coef=coef)
+
+
+# ---------------------------------------------------------------------------
+# Sharded engine: sensors distributed over a device axis via shard_map.
+# ---------------------------------------------------------------------------
+
+
+def sharded_sweep(
+    problem: SNTrainProblem,
+    state: SNTrainState,
+    mesh: Mesh,
+    *,
+    axis: str = "sensors",
+    n_sweeps: int = 1,
+) -> SNTrainState:
+    """colored_sweep with color members sharded across `axis`.
+
+    Every device updates its shard of the current color class; because a
+    color's neighborhoods are disjoint, the per-device message updates are
+    disjoint scatters, and the transport reduces to one psum of deltas per
+    color step — the all-reduce realization of the paper's neighbor messages
+    (DESIGN.md Sec. 2).  z and coef are replicated; the heavy per-sensor
+    solves are fully parallel.
+    """
+    topo = problem.topology
+    n = problem.n
+    n_dev = mesh.shape[axis]
+    n_colors, m_max = topo.color_members.shape
+    m_pad = -(-m_max // n_dev) * n_dev  # round up to device multiple
+    pad = m_pad - m_max
+    members = jnp.pad(topo.color_members, ((0, 0), (0, pad)), constant_values=n)
+    mask = jnp.pad(topo.color_mask, ((0, 0), (0, pad)))
+    # (n_colors, n_dev, m_pad // n_dev): device axis second for sharding.
+    members = members.reshape(n_colors, n_dev, -1)
+    mask = mask.reshape(n_colors, n_dev, -1)
+
+    def device_fn(z, coef, members_l, mask_l):
+        # members_l: (n_colors, 1, m_local) local shard.
+        members_l = members_l[:, 0]
+        mask_l = mask_l[:, 0]
+
+        def color_body(carry, cm):
+            z, coef = carry
+            mem, mmask = cm
+            z_new, coef_new = _color_update(problem, z, coef, mem, mmask)
+            dz = jax.lax.psum(z_new - z, axis)
+            dcoef = jax.lax.psum(coef_new - coef, axis)
+            return (z + dz, coef + dcoef), None
+
+        def sweep(carry, _):
+            carry, _ = jax.lax.scan(color_body, carry, (members_l, mask_l))
+            return carry, None
+
+        (z, coef), _ = jax.lax.scan(sweep, (z, coef), None, length=n_sweeps)
+        return z, coef
+
+    fn = jax.shard_map(
+        device_fn,
+        mesh=mesh,
+        in_specs=(P(), P(), P(None, axis, None), P(None, axis, None)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    z, coef = jax.jit(fn)(state.z, state.coef, members, mask)
+    return SNTrainState(z=z, coef=coef)
+
+
+# ---------------------------------------------------------------------------
+# Paper Sec. 3.3 optional features: random orderings and robustness.
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("n_sweeps",))
+def random_sweep(
+    problem: SNTrainProblem,
+    state: SNTrainState,
+    key: jax.Array,
+    n_sweeps: int = 1,
+) -> SNTrainState:
+    """ALOHA-style randomized control ordering (paper Sec. 3.3 'Parallelism').
+
+    Each outer iteration visits the sensors in a fresh uniformly-random
+    permutation.  Admissible under the Bauschke-Borwein generalized control
+    conditions (every sensor appears once per sweep), so Lemma 3.2 carries
+    over: same fixed point as the serial Table-1 ordering.
+    """
+    n = problem.n
+
+    def body(carry, s):
+        z, coef = carry
+        coef_new, z_new = _sensor_update(
+            z, coef[s], problem.nbr_idx[s], problem.nbr_mask[s],
+            problem.gram[s], problem.chol[s], problem.lam_pad[s],
+        )
+        coef = coef.at[s].set(coef_new)
+        scatter_idx = jnp.where(problem.nbr_mask[s], problem.nbr_idx[s], n)
+        z = z.at[scatter_idx].set(jnp.where(problem.nbr_mask[s], z_new, z[n]))
+        return (z, coef), None
+
+    def sweep(carry, k):
+        order = jax.random.permutation(k, n).astype(jnp.int32)
+        carry, _ = jax.lax.scan(body, carry, order)
+        return carry, None
+
+    keys = jax.random.split(key, n_sweeps)
+    (z, coef), _ = jax.lax.scan(sweep, (state.z, state.coef), keys)
+    return SNTrainState(z=z, coef=coef)
+
+
+def _dynamic_sensor_update(problem, z, coef_s, s, alive_s):
+    """P_{C_s} with the CURRENT neighborhood N_{s,t} = N_s & alive_s.
+
+    Solves the masked system directly (no cached Cholesky — the active set
+    changes per step).  Padded/dead entries keep coefficient 0.
+    """
+    n = problem.n
+    mask = problem.nbr_mask[s] & alive_s
+    gram = jnp.where(mask[:, None] & mask[None, :], problem.gram[s], 0.0)
+    lam = problem.lam_pad[s]
+    diag = jnp.where(mask, lam, 1.0)
+    a = gram + jnp.diag(diag)
+    coef_prev = jnp.where(mask, coef_s, 0.0)
+    z_nbr = z[problem.nbr_idx[s]]
+    rhs = jnp.where(mask, z_nbr + lam * coef_prev, 0.0)
+    coef_new = jnp.linalg.solve(a, rhs)
+    z_new = gram @ coef_new
+    return coef_new, z_new, mask
+
+
+@partial(jax.jit, static_argnames=("n_sweeps",))
+def robust_sweep(
+    problem: SNTrainProblem,
+    state: SNTrainState,
+    link_alive: jax.Array,  # (n_sweeps, n, D) bool: per-sweep link liveness
+    n_sweeps: int = 1,
+) -> SNTrainState:
+    """SN-Train with a changing topology (paper Sec. 3.3 'Robustness').
+
+    Each sweep t uses neighborhoods N_{s,t} = N_s intersected with the alive
+    links; per the paper, the iteration still makes progress every step and
+    converges to the solution implied by the largest neighborhood occurring
+    infinitely often.  With link_alive all-True this is exactly serial_sweep
+    (up to solver choice) — asserted in tests.
+    """
+    n = problem.n
+    assert link_alive.shape[0] == n_sweeps
+
+    def body(carry, inp):
+        s, alive_s = inp
+        z, coef = carry
+        coef_new, z_new, mask = _dynamic_sensor_update(problem, z, coef[s], s, alive_s)
+        coef = coef.at[s].set(coef_new)
+        scatter_idx = jnp.where(mask, problem.nbr_idx[s], n)
+        z = z.at[scatter_idx].set(jnp.where(mask, z_new, z[n]))
+        return (z, coef), None
+
+    def sweep(carry, alive_t):
+        idxs = jnp.arange(n, dtype=jnp.int32)
+        carry, _ = jax.lax.scan(body, carry, (idxs, alive_t))
+        return carry, None
+
+    (z, coef), _ = jax.lax.scan(sweep, (state.z, state.coef), link_alive)
+    return SNTrainState(z=z, coef=coef)
+
+
+# ---------------------------------------------------------------------------
+# Paper Sec. 5.2 extension: weighted (heteroscedastic) losses.
+#
+# The paper notes SOP generalizes to Bregman projections for other losses.
+# The simplest non-trivial instance keeps orthogonality by reweighting the
+# product-space norm:   sum_j w_j z_j^2 + sum_i lambda_i ||f_i||^2,
+# i.e. per-sensor measurement confidences w_j (inverse noise variances).
+# The local solve becomes  (W_s K_s + lambda_s I) c = W_s z + lambda_s c_prev
+# (non-symmetric; solved directly, no cached Cholesky).
+# ---------------------------------------------------------------------------
+
+
+def _weighted_sensor_update(problem, z, coef_s, s, w_pad):
+    n = problem.n
+    mask = problem.nbr_mask[s]
+    gram = problem.gram[s]
+    lam = problem.lam_pad[s]
+    w_nbr = jnp.where(mask, w_pad[problem.nbr_idx[s]], 0.0)
+    diag = jnp.where(mask, lam, 1.0)
+    a = w_nbr[:, None] * gram + jnp.diag(diag)
+    z_nbr = z[problem.nbr_idx[s]]
+    rhs = jnp.where(mask, w_nbr * z_nbr + lam * coef_s, 0.0)
+    coef_new = jnp.linalg.solve(a, rhs)
+    z_new = gram @ coef_new
+    return coef_new, z_new
+
+
+@partial(jax.jit, static_argnames=("n_sweeps",))
+def weighted_sweep(
+    problem: SNTrainProblem,
+    state: SNTrainState,
+    weights: jax.Array,  # (n,) per-sensor measurement confidences w_j > 0
+    n_sweeps: int = 1,
+) -> SNTrainState:
+    """SN-Train under the reweighted norm (heteroscedastic measurements).
+
+    weights == 1 reduces exactly to serial_sweep.  Fejér monotonicity holds
+    in the reweighted norm (see weighted_norm_sq_hetero)."""
+    n = problem.n
+    w_pad = jnp.concatenate([jnp.asarray(weights, state.z.dtype), jnp.zeros((1,), state.z.dtype)])
+    idxs = jnp.arange(n, dtype=jnp.int32)
+
+    def body(carry, s):
+        z, coef = carry
+        coef_new, z_new = _weighted_sensor_update(problem, z, coef[s], s, w_pad)
+        coef = coef.at[s].set(coef_new)
+        scatter_idx = jnp.where(problem.nbr_mask[s], problem.nbr_idx[s], n)
+        z = z.at[scatter_idx].set(jnp.where(problem.nbr_mask[s], z_new, z[n]))
+        return (z, coef), None
+
+    def sweep(carry, _):
+        carry, _ = jax.lax.scan(body, carry, idxs)
+        return carry, None
+
+    (z, coef), _ = jax.lax.scan(sweep, (state.z, state.coef), None, length=n_sweeps)
+    return SNTrainState(z=z, coef=coef)
+
+
+def weighted_norm_sq_hetero(
+    problem: SNTrainProblem, state: SNTrainState, weights: jax.Array
+) -> jax.Array:
+    """sum_j w_j z_j^2 + sum_i lambda_i ||f_i||^2 — the Fejér invariant of
+    weighted_sweep."""
+    n = problem.n
+    z_part = jnp.sum(jnp.asarray(weights) * state.z[:n] ** 2)
+    quad = jnp.einsum("sd,sde,se->s", state.coef, problem.gram, state.coef)
+    return z_part + jnp.sum(problem.lam_pad * quad)

@@ -1,0 +1,93 @@
+"""Generic successive-orthogonal-projection (SOP) machinery (paper Sec. 2.1).
+
+Given closed convex sets C_1..C_m with projections P_i, SOP iterates
+
+    x_0 = x_hat,   x_k = P_{C_{k mod m + 1}}(x_{k-1})            (paper Eq. 1)
+
+Lemma 2.1 (Fejer monotonicity): ||x_k - x|| <= ||x_{k-1} - x|| for any
+x in C = intersection; for subspaces, x_k -> P_C(x_hat).
+
+This module provides:
+  * affine-subspace projectors P(x) = x - A^T (A A^T)^+ (A x - b),
+  * a `sop_sweep` runner (lax control flow) over a stack of affine sets,
+  * Fejer monitors used by the property tests.
+
+These generic pieces back the property tests of the paper's lemmas; the
+specialized, padded sensor instantiation lives in `sn_train.py`.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def project_affine(x: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Orthogonal projection of x onto {v : A v = b} (A full row rank-ish).
+
+    Uses a pseudo-inverse-stable solve: P(x) = x - A^T (A A^T + eps I)^{-1}(Ax - b).
+    """
+    m = a.shape[0]
+    gram = a @ a.T + 1e-10 * jnp.eye(m, dtype=x.dtype)
+    resid = a @ x - b
+    return x - a.T @ jnp.linalg.solve(gram, resid)
+
+
+@partial(jax.jit, static_argnames=("n_sweeps",))
+def sop_sweep(
+    x0: jax.Array, a_stack: jax.Array, b_stack: jax.Array, n_sweeps: int = 1
+) -> jax.Array:
+    """Run `n_sweeps` full passes of SOP over m affine sets.
+
+    a_stack: (m, k, dim), b_stack: (m, k). Serial by definition (Eq. 1).
+    """
+
+    def one_set(x, ab):
+        a, b = ab
+        return project_affine(x, a, b), None
+
+    def one_sweep(x, _):
+        x, _ = jax.lax.scan(one_set, x, (a_stack, b_stack))
+        return x, None
+
+    x, _ = jax.lax.scan(one_sweep, x0, None, length=n_sweeps)
+    return x
+
+
+@partial(jax.jit, static_argnames=("n_sweeps",))
+def sop_sweep_with_trace(
+    x0: jax.Array, a_stack: jax.Array, b_stack: jax.Array, n_sweeps: int = 1
+) -> tuple[jax.Array, jax.Array]:
+    """Like sop_sweep but also returns every post-projection iterate.
+
+    Trace shape: (n_sweeps * m, dim) — used to verify Lemma 2.1 pointwise.
+    """
+
+    def one_set(x, ab):
+        a, b = ab
+        x = project_affine(x, a, b)
+        return x, x
+
+    def one_sweep(x, _):
+        x, trace = jax.lax.scan(one_set, x, (a_stack, b_stack))
+        return x, trace
+
+    x, traces = jax.lax.scan(one_sweep, x0, None, length=n_sweeps)
+    return x, traces.reshape(-1, x0.shape[-1])
+
+
+def project_intersection(
+    x0: jax.Array, a_stack: jax.Array, b_stack: jax.Array
+) -> jax.Array:
+    """Direct projection onto the intersection of all affine sets (oracle)."""
+    a = a_stack.reshape(-1, a_stack.shape[-1])
+    b = b_stack.reshape(-1)
+    # Least-norm correction via pinv handles rank deficiency from overlap.
+    return x0 - jnp.linalg.pinv(a) @ (a @ x0 - b)
+
+
+def fejer_distances(trace: jax.Array, feasible_point: jax.Array) -> jax.Array:
+    """||x_k - x*|| for every iterate in the trace (must be non-increasing)."""
+    return jnp.linalg.norm(trace - feasible_point[None, :], axis=-1)

@@ -1,0 +1,194 @@
+"""Sensor-network topology: geometric graphs, padded neighborhoods, coloring.
+
+The paper's model (Sec. 3.1): sensors at positions ``x_i`` form an ad-hoc
+graph; two sensors are neighbors iff within radius ``r``; every sensor is its
+own neighbor (``i in N_i``).
+
+Topology is *static program data*: it is computed host-side with numpy and
+frozen into padded jnp arrays (fixed shapes) so the training sweeps are pure
+``lax`` control flow.
+
+Parallelism (paper Sec. 3.3): two sensors may update simultaneously iff they
+share no neighbor, i.e. iff they are non-adjacent in the *square* of the
+graph.  We greedily color G^2 and sweep color classes; this is the TPU
+adaptation of the serial mote sweep (same fixed points, per the generalized
+control orderings of Bauschke & Borwein cited by the paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SensorTopology:
+    """Frozen, padded representation of a sensor network graph.
+
+    Attributes:
+      positions: (n, d) float32 sensor coordinates.
+      adj: (n, n) bool adjacency WITH self loops (i in N_i).
+      nbr_idx: (n, D) int32 neighbor indices, padded with the sensor's own
+        index (padding entries are masked out everywhere they matter).
+      nbr_mask: (n, D) bool validity of nbr_idx entries.
+      degrees: (n,) int32 |N_i| (self loop included, as in the paper).
+      colors: (n,) int32 distance-2 greedy coloring.
+      n_colors: static int.
+      color_members: (n_colors, M) int32 members per color, padded with n
+        (one-past-the-end sentinel; callers scatter into an (n+1,) buffer).
+      color_mask: (n_colors, M) bool.
+    """
+
+    positions: jnp.ndarray
+    adj: jnp.ndarray
+    nbr_idx: jnp.ndarray
+    nbr_mask: jnp.ndarray
+    degrees: jnp.ndarray
+    colors: jnp.ndarray
+    n_colors: int = dataclasses.field(metadata=dict(static=True))
+    color_members: jnp.ndarray
+    color_mask: jnp.ndarray
+
+    @property
+    def n(self) -> int:
+        return int(self.positions.shape[0])
+
+    @property
+    def d_max(self) -> int:
+        return int(self.nbr_idx.shape[1])
+
+
+def geometric_adjacency(positions: np.ndarray, radius: float) -> np.ndarray:
+    """Bool (n, n) adjacency: ||x_i - x_j|| < radius, self loops included."""
+    pos = np.asarray(positions, dtype=np.float64)
+    if pos.ndim == 1:
+        pos = pos[:, None]
+    d2 = np.sum((pos[:, None, :] - pos[None, :, :]) ** 2, axis=-1)
+    adj = d2 < radius**2
+    np.fill_diagonal(adj, True)
+    return adj
+
+
+def greedy_coloring(conflict: np.ndarray) -> tuple[np.ndarray, int]:
+    """Greedy coloring of an undirected conflict graph (bool adjacency).
+
+    Orders vertices by decreasing degree (Welsh-Powell) for fewer colors.
+    """
+    n = conflict.shape[0]
+    conflict = conflict.copy()
+    np.fill_diagonal(conflict, False)
+    order = np.argsort(-conflict.sum(axis=1), kind="stable")
+    colors = -np.ones(n, dtype=np.int64)
+    for v in order:
+        used = set(colors[conflict[v]].tolist())
+        c = 0
+        while c in used:
+            c += 1
+        colors[v] = c
+    return colors.astype(np.int32), int(colors.max()) + 1
+
+
+def build_topology(
+    positions: np.ndarray, radius: float, *, d_max: int | None = None
+) -> SensorTopology:
+    """Build the frozen topology for a geometric sensor graph."""
+    pos = np.asarray(positions, dtype=np.float32)
+    if pos.ndim == 1:
+        pos = pos[:, None]
+    n = pos.shape[0]
+    adj = geometric_adjacency(pos, radius)
+    degrees = adj.sum(axis=1).astype(np.int32)
+    dm = int(degrees.max()) if d_max is None else int(d_max)
+    if dm < int(degrees.max()):
+        raise ValueError(f"d_max={dm} < max degree {int(degrees.max())}")
+
+    nbr_idx = np.zeros((n, dm), dtype=np.int32)
+    nbr_mask = np.zeros((n, dm), dtype=bool)
+    for i in range(n):
+        nbrs = np.nonzero(adj[i])[0]
+        nbr_idx[i, : len(nbrs)] = nbrs
+        nbr_idx[i, len(nbrs) :] = i  # pad with self (masked)
+        nbr_mask[i, : len(nbrs)] = True
+
+    # Sensors conflict iff they share a neighbor <=> adjacent in G^2.
+    g2 = (adj.astype(np.int64) @ adj.astype(np.int64)) > 0
+    colors, n_colors = greedy_coloring(g2)
+
+    max_members = int(np.bincount(colors, minlength=n_colors).max())
+    color_members = np.full((n_colors, max_members), n, dtype=np.int32)
+    color_mask = np.zeros((n_colors, max_members), dtype=bool)
+    for c in range(n_colors):
+        members = np.nonzero(colors == c)[0]
+        color_members[c, : len(members)] = members
+        color_mask[c, : len(members)] = True
+
+    return SensorTopology(
+        positions=jnp.asarray(pos),
+        adj=jnp.asarray(adj),
+        nbr_idx=jnp.asarray(nbr_idx),
+        nbr_mask=jnp.asarray(nbr_mask),
+        degrees=jnp.asarray(degrees),
+        colors=jnp.asarray(colors),
+        n_colors=n_colors,
+        color_members=jnp.asarray(color_members),
+        color_mask=jnp.asarray(color_mask),
+    )
+
+
+def uniform_sensors(
+    n: int, *, d: int = 1, lo: float = -1.0, hi: float = 1.0, seed: int = 0
+) -> np.ndarray:
+    """Paper Sec 4.1: n sensors uniform on [-1, 1]^d."""
+    rng = np.random.default_rng(seed)
+    return rng.uniform(lo, hi, size=(n, d)).astype(np.float32)
+
+
+def ring_topology(n: int, *, hops: int = 1) -> SensorTopology:
+    """A ring graph (ICI-like) — used by the SOP-consensus mapping and tests."""
+    pos = np.stack(
+        [
+            np.cos(2 * np.pi * np.arange(n) / n),
+            np.sin(2 * np.pi * np.arange(n) / n),
+        ],
+        axis=1,
+    ).astype(np.float32)
+    adj = np.zeros((n, n), dtype=bool)
+    for i in range(n):
+        for h in range(1, hops + 1):
+            adj[i, (i + h) % n] = True
+            adj[i, (i - h) % n] = True
+    np.fill_diagonal(adj, True)
+    # reuse builder internals by faking a radius via direct construction
+    degrees = adj.sum(axis=1).astype(np.int32)
+    dm = int(degrees.max())
+    nbr_idx = np.zeros((n, dm), dtype=np.int32)
+    nbr_mask = np.zeros((n, dm), dtype=bool)
+    for i in range(n):
+        nbrs = np.nonzero(adj[i])[0]
+        nbr_idx[i, : len(nbrs)] = nbrs
+        nbr_idx[i, len(nbrs) :] = i
+        nbr_mask[i, : len(nbrs)] = True
+    g2 = (adj.astype(np.int64) @ adj.astype(np.int64)) > 0
+    colors, n_colors = greedy_coloring(g2)
+    max_members = int(np.bincount(colors, minlength=n_colors).max())
+    color_members = np.full((n_colors, max_members), n, dtype=np.int32)
+    color_mask = np.zeros((n_colors, max_members), dtype=bool)
+    for c in range(n_colors):
+        members = np.nonzero(colors == c)[0]
+        color_members[c, : len(members)] = members
+        color_mask[c, : len(members)] = True
+    return SensorTopology(
+        positions=jnp.asarray(pos),
+        adj=jnp.asarray(adj),
+        nbr_idx=jnp.asarray(nbr_idx),
+        nbr_mask=jnp.asarray(nbr_mask),
+        degrees=jnp.asarray(degrees),
+        colors=jnp.asarray(colors),
+        n_colors=n_colors,
+        color_members=jnp.asarray(color_members),
+        color_mask=jnp.asarray(color_mask),
+    )

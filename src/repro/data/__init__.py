@@ -1,0 +1,13 @@
+"""Data pipelines: the paper's synthetic sensor fields and an LM token stream."""
+
+from .fields import FieldCase, case1, case2, sample_field
+from .lm import TokenStream, synthetic_lm_stream
+
+__all__ = [
+    "FieldCase",
+    "TokenStream",
+    "case1",
+    "case2",
+    "sample_field",
+    "synthetic_lm_stream",
+]

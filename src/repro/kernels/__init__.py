@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot spots, with jnp oracles.
+
+kernel_matvec — fused Gram x coef streaming evaluation (testing phase)
+gram          — tiled RBF Gram materialization (training-side local solves)
+ops           — general-shape jit wrappers (auto interpret off-TPU)
+ref           — pure-jnp oracles used by tests and benchmarks
+"""
+
+from . import ops, ref
+from .ops import kernel_matvec, rbf_gram, ssd_chunked_fused
+
+__all__ = ["kernel_matvec", "ops", "rbf_gram", "ref", "ssd_chunked_fused"]

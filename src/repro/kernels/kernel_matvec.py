@@ -1,0 +1,84 @@
+"""Fused RBF kernel-matvec Pallas kernel — the paper's testing-phase hot spot.
+
+Computes  out[q] = sum_j coef[j] * exp(-gamma * ||xq[q] - anchors[j]||^2)
+without materializing the (Q, N) Gram matrix in HBM.
+
+TPU adaptation (DESIGN.md Sec. 2): FlashAttention-style streaming.  Queries
+and anchors are tiled into VMEM blocks of (BQ, d) / (BN, d); the pairwise
+squared distances for one (BQ, BN) tile are produced by two MXU matmuls
+(expanded-square form), exponentiated on the VPU, and immediately contracted
+against the coefficient block.  Only the (BQ,) accumulator ever returns to
+HBM, so HBM traffic is O(Q + N) instead of O(Q * N).
+
+Grid: (Q/BQ, N/BN) with the anchor dimension innermost so each output block
+accumulates across anchor tiles in VMEM.  Block sizes default to 128/512 —
+MXU-aligned (multiples of 128) with a VMEM working set of
+BQ*d + BN*d + BQ*BN floats ≈ 0.3 MB, far under the ~16 MB v5e VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xq_ref, an_ref, coef_ref, out_ref, *, gamma: float):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    xq = xq_ref[...].astype(jnp.float32)  # (BQ, d)
+    an = an_ref[...].astype(jnp.float32)  # (BN, d)
+    coef = coef_ref[...].astype(jnp.float32)  # (BN,)
+
+    sq_q = jnp.sum(xq * xq, axis=-1)[:, None]  # (BQ, 1)
+    sq_a = jnp.sum(an * an, axis=-1)[None, :]  # (1, BN)
+    cross = jax.lax.dot_general(
+        xq,
+        an,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (BQ, BN) on the MXU
+    d2 = jnp.maximum(sq_q + sq_a - 2.0 * cross, 0.0)
+    k = jnp.exp(-gamma * d2)
+    out_ref[...] += k @ coef
+
+
+@functools.partial(
+    jax.jit, static_argnames=("gamma", "block_q", "block_n", "interpret")
+)
+def kernel_matvec_pallas(
+    xq: jax.Array,
+    anchors: jax.Array,
+    coef: jax.Array,
+    *,
+    gamma: float = 1.0,
+    block_q: int = 128,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Padded inputs required: Q % block_q == 0, N % block_n == 0.
+
+    Use `repro.kernels.ops.kernel_matvec` for the general-shape wrapper.
+    """
+    q, d = xq.shape
+    n, _ = anchors.shape
+    assert q % block_q == 0 and n % block_n == 0, (q, n, block_q, block_n)
+    grid = (q // block_q, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_kernel, gamma=gamma),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_q,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.float32),
+        interpret=interpret,
+    )(xq, anchors, coef)

@@ -1,0 +1,157 @@
+"""Jit'd general-shape wrappers around the Pallas kernels.
+
+These handle padding to block multiples, choose interpret mode automatically
+on non-TPU backends (this container is CPU: the kernel bodies execute in
+Python via the Pallas interpreter, which is the validation mode), and slice
+results back to the caller's shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .gram import rbf_gram_pallas
+from .kernel_matvec import kernel_matvec_pallas
+
+
+def _auto_interpret(interpret: bool | None) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
+    r = x.shape[0]
+    pad = (-r) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+
+
+def kernel_matvec(
+    xq: jax.Array,
+    anchors: jax.Array,
+    coef: jax.Array,
+    *,
+    gamma: float = 1.0,
+    block_q: int = 128,
+    block_n: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """f(xq) = sum_j coef_j exp(-gamma ||xq - x_j||^2) for arbitrary shapes.
+
+    Padding is exact: padded anchors carry coef 0 (zero contribution) and
+    padded query rows are sliced off.
+    """
+    q = xq.shape[0]
+    n = anchors.shape[0]
+    block_q = min(block_q, max(8, q))
+    block_n = min(block_n, max(8, n))
+    xq_p = _pad_rows(jnp.asarray(xq, jnp.float32), block_q)
+    an_p = _pad_rows(jnp.asarray(anchors, jnp.float32), block_n)
+    coef_p = _pad_rows(jnp.asarray(coef, jnp.float32), block_n)
+    out = kernel_matvec_pallas(
+        xq_p,
+        an_p,
+        coef_p,
+        gamma=gamma,
+        block_q=block_q,
+        block_n=block_n,
+        interpret=_auto_interpret(interpret),
+    )
+    return out[:q]
+
+
+def rbf_gram(
+    x1: jax.Array,
+    x2: jax.Array,
+    *,
+    gamma: float = 1.0,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    m, n = x1.shape[0], x2.shape[0]
+    block_m = min(block_m, max(8, m))
+    block_n = min(block_n, max(8, n))
+    x1_p = _pad_rows(jnp.asarray(x1, jnp.float32), block_m)
+    x2_p = _pad_rows(jnp.asarray(x2, jnp.float32), block_n)
+    out = rbf_gram_pallas(
+        x1_p,
+        x2_p,
+        gamma=gamma,
+        block_m=block_m,
+        block_n=block_n,
+        interpret=_auto_interpret(interpret),
+    )
+    return out[:m, :n]
+
+
+def ssd_chunked_fused(
+    x, dt, a, bmat, cmat, chunk: int, h0=None, *,
+    block_h: int = 8, interpret: bool | None = None,
+):
+    """Drop-in replacement for `repro.models.ssm.ssd_chunked` whose
+    intra-chunk term runs in the fused Pallas kernel (no O(S*cs*H) decay
+    tensor in HBM).  The inter-chunk recurrence stays in jnp (tiny).
+
+    Returns (y (B,S,H,P) f32, final_state (B,H,P,N) f32).
+    """
+    import jax
+
+    from .ssd_intra import ssd_intra_pallas
+
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    pad_s = (-s) % chunk
+    pad_h = (-h) % block_h
+    if pad_s:
+        x = jnp.pad(x, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad_s), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad_s), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad_s), (0, 0)))
+    if pad_h:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad_h), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pad_h)))
+        a = jnp.pad(a, ((0, pad_h),))
+    sp, hp = s + pad_s, h + pad_h
+    nc = sp // chunk
+
+    da = dt * a[None, None, :]
+    da_c = da.reshape(b, nc, chunk, hp)
+    da_cum = jnp.cumsum(da_c, axis=2)
+    da_sum = da_cum[:, :, -1, :]
+
+    y_intra = ssd_intra_pallas(
+        x, dt, da_cum.reshape(b, sp, hp), bmat, cmat,
+        chunk=chunk, block_h=block_h, interpret=_auto_interpret(interpret),
+    )
+
+    # chunk boundary states + inter-chunk recurrence (same math as the ref)
+    xc = x.reshape(b, nc, chunk, hp, p)
+    dtc = dt.reshape(b, nc, chunk, hp)
+    bc = bmat.reshape(b, nc, chunk, n)
+    cc = cmat.reshape(b, nc, chunk, n)
+    decay_to_end = jnp.exp(da_sum[:, :, None, :] - da_cum)
+    states = jnp.einsum("bzmn,bzmh,bzmhp->bzhpn", bc, dtc * decay_to_end, xc)
+    chunk_decay = jnp.exp(da_sum)
+    if h0 is None:
+        h0 = jnp.zeros((b, hp, p, n), jnp.float32)
+    elif pad_h:
+        h0 = jnp.pad(h0, ((0, 0), (0, pad_h), (0, 0), (0, 0)))
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry
+
+    last, h_prev = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)
+    y_inter = jnp.einsum("bzln,bzhpn,bzlh->bzlhp", cc, h_prev, jnp.exp(da_cum))
+    y = y_intra.reshape(b, nc, chunk, hp, p) + y_inter
+    y = y.reshape(b, sp, hp, p)[:, :s, :h]
+    return y, last[:, :h]

@@ -1,0 +1,96 @@
+"""Fused Mamba2/SSD intra-chunk Pallas kernel (§Perf H2 'next lever').
+
+The pure-jnp SSD dual form materializes the per-chunk decay tensor
+L[l,m,h] = exp(dA_cum[l,h] - dA_cum[m,h]) (l >= m) in HBM —
+O(S * cs * H) traffic that dominates the jamba/mamba2 training memory
+roofline.  This kernel computes, entirely in VMEM per (batch, chunk,
+head-block) grid step:
+
+    CB   = C_chunk @ B_chunk^T                       (cs, cs)   MXU
+    M    = CB * tril(exp(dA_cum[l] - dA_cum[m]))     (cs,cs,BH) VPU
+    Y    = M (x) (dt * x)                            (BH batched matmul, MXU)
+
+so only the O(S * H * P) output ever returns to HBM.
+
+VMEM working set per step (cs=64, BH=8, P=64, N=128):
+cs*N*2 + cs*BH*(P+2) + cs*cs*(1+BH) floats ~ 0.2 MB << 16 MB v5e VMEM.
+The inter-chunk recurrence (O(S/cs) scan over (H,P,N) states) stays in jnp —
+it is tiny by comparison.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(dtx_ref, dacum_ref, b_ref, c_ref, out_ref):
+    # block shapes (leading grid dims squeezed by indexing [0, 0]):
+    #   x/dtx: (1, 1, cs, BH, P); dacum: (1, 1, cs, BH); b/c: (1, 1, cs, N)
+    dtx = dtx_ref[0, 0].astype(jnp.float32)  # (cs, BH, P)  dt * x
+    da = dacum_ref[0, 0].astype(jnp.float32)  # (cs, BH)
+    bmat = b_ref[0, 0].astype(jnp.float32)  # (cs, N)
+    cmat = c_ref[0, 0].astype(jnp.float32)  # (cs, N)
+    cs = da.shape[0]
+
+    cb = jax.lax.dot_general(
+        cmat, bmat, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (cs, cs) = C_l . B_m
+    diff = da[:, None, :] - da[None, :, :]  # (cs, cs, BH), l index first
+    tril = jnp.tril(jnp.ones((cs, cs), jnp.bool_))
+    diff = jnp.where(tril[:, :, None], diff, -jnp.inf)
+    m = cb[:, :, None] * jnp.exp(diff)  # (cs, cs, BH)
+
+    # batched-by-head matmul: (BH, cs, cs) @ (BH, cs, P) -> (BH, cs, P)
+    m_h = jnp.transpose(m, (2, 0, 1))
+    v_h = jnp.transpose(dtx, (1, 0, 2))
+    y = jax.lax.dot_general(
+        m_h, v_h, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )  # (BH, cs, P)
+    out_ref[0, 0] = jnp.transpose(y, (1, 0, 2)).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "block_h", "interpret")
+)
+def ssd_intra_pallas(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) post-softplus
+    da_cum: jax.Array,  # (B, S, H) within-chunk inclusive cumsum of dt*A
+    bmat: jax.Array,  # (B, S, N)
+    cmat: jax.Array,  # (B, S, N)
+    *,
+    chunk: int,
+    block_h: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Intra-chunk SSD term; S % chunk == 0 and H % block_h == 0 required
+    (use repro.kernels.ops.ssd_chunked_fused for general shapes)."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    assert s % chunk == 0 and h % block_h == 0, (s, chunk, h, block_h)
+    nc = s // chunk
+    dtx = (dt[..., None] * x).reshape(b, nc, chunk, h, p)
+    dac = da_cum.reshape(b, nc, chunk, h)
+    bc = bmat.reshape(b, nc, chunk, n)
+    cc = cmat.reshape(b, nc, chunk, n)
+    grid = (b, nc, h // block_h)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, block_h, p), lambda i, z, j: (i, z, 0, j, 0)),
+            pl.BlockSpec((1, 1, chunk, block_h), lambda i, z, j: (i, z, 0, j)),
+            pl.BlockSpec((1, 1, chunk, n), lambda i, z, j: (i, z, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda i, z, j: (i, z, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, chunk, block_h, p), lambda i, z, j: (i, z, 0, j, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, nc, chunk, h, p), jnp.float32),
+        interpret=interpret,
+    )(dtx, dac, bc, cc)
+    return out.reshape(b, s, h, p)

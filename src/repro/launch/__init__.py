@@ -1,0 +1,5 @@
+"""Launchers: production mesh, multi-pod dry-run, training, serving."""
+
+from .mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

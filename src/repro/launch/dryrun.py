@@ -1,0 +1,396 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh, extract memory / cost / collective analyses, and emit
+the per-combo JSON that EXPERIMENTS.md §Dry-run / §Roofline read from.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mamba2-370m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
+
+Method notes (DESIGN.md Sec. 7):
+  * The FULL scanned model is lowered+compiled — that is the pass/fail proof
+    that the sharding config is coherent (and the source of
+    memory_analysis()).
+  * XLA's HloCostAnalysis visits a while body ONCE regardless of trip count,
+    so FLOPs/bytes/collective-bytes for the roofline are extracted from two
+    small UNROLLED variants (1 super-block and 2 super-blocks) and
+    extrapolated linearly:  total = c1 + (n_blocks - 1) * (c2 - c1).
+    This is exact because every super-block is structurally identical.
+  * Collective bytes are parsed from compiled.as_text(): the summed output
+    sizes of all-reduce / all-gather / reduce-scatter / all-to-all /
+    collective-permute ops.
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config, input_specs, supports_shape
+from repro.models import init_params, loss_fn
+from repro.models import model as M
+from repro.optim import adamw, apply_updates, cosine_warmup
+from repro.sharding import batch_pspecs, cache_pspecs, opt_state_pspecs, param_pspecs
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(segment):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output bytes per collective op kind over the whole module."""
+    out = {k: 0 for k in _COLL_OPS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        for op in _COLL_OPS:
+            # match `op(` or `op-start(` but not `op-done(`
+            m = re.search(rf"\s{op}(-start)?\(", line)
+            if m:
+                lhs = line.split(f" {op}", 1)[0]
+                out[op] += _shape_bytes(lhs)
+                out["count"] += 1
+                break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def build_train(cfg, mesh, shape_name):
+    opt = adamw(cosine_warmup(3e-4, 100, 10000))
+    abstract_params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = param_pspecs(cfg, abstract_params, mesh)
+    abstract_opt = jax.eval_shape(opt.init, abstract_params)
+    ospecs = opt_state_pspecs(cfg, abstract_opt, pspecs)
+    batch = input_specs(cfg, shape_name)
+    bspecs = batch_pspecs(cfg, batch, mesh)
+
+    grad_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True
+        )(params)
+        if cfg.fsdp:
+            # ZeRO-style: force gradients onto the parameter sharding so the
+            # partitioner emits reduce-scatter instead of full all-reduce
+            # before the (sharded) optimizer update (§Perf H2 iterC).
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    abstract_m = jax.eval_shape(train_step, abstract_params, abstract_opt, batch)[2]
+    mspecs = jax.tree.map(lambda _: P(), abstract_m)
+    args = (abstract_params, abstract_opt, batch)
+    in_s = (pspecs, ospecs, bspecs)
+    out_s = (pspecs, ospecs, mspecs)
+    return train_step, args, in_s, out_s
+
+
+def build_prefill(cfg, mesh, shape_name):
+    abstract_params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = param_pspecs(cfg, abstract_params, mesh)
+    batch = input_specs(cfg, shape_name)
+    bspecs = batch_pspecs(cfg, batch, mesh)
+    shape = SHAPES[shape_name]
+    b = shape.global_batch
+
+    def prefill_step(params, batch):
+        cache = M.init_cache(cfg, b, shape.seq_len)
+        logits, cache = M.prefill(cfg, params, batch, cache)
+        return logits, cache
+
+    abstract_out = jax.eval_shape(prefill_step, abstract_params, batch)
+    logits_spec = (
+        None if abstract_out[0] is None else P(("pod", "data") if "pod" in mesh.shape else ("data",))
+    )
+    cspecs = cache_pspecs(cfg, abstract_out[1], mesh)
+    args = (abstract_params, batch)
+    return prefill_step, args, (pspecs, bspecs), (logits_spec, cspecs)
+
+
+def build_decode(cfg, mesh, shape_name):
+    abstract_params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = param_pspecs(cfg, abstract_params, mesh)
+    spec = input_specs(cfg, shape_name)
+    cspecs = cache_pspecs(cfg, spec["cache"], mesh)
+    tok_spec = batch_pspecs(cfg, {"t": spec["token"]}, mesh)["t"]
+    shape = SHAPES[shape_name]
+
+    def serve_step(params, token, cache, position):
+        logits, cache = M.decode_step(cfg, params, token, cache, position)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    args = (abstract_params, spec["token"], spec["cache"], spec["position"])
+    in_s = (pspecs, tok_spec, cspecs, P())
+    out_s = (tok_spec, cspecs)
+    return serve_step, args, in_s, out_s
+
+
+def build_step(cfg, mesh, shape_name):
+    kind = SHAPES[shape_name].kind
+    if kind == "train":
+        return build_train(cfg, mesh, shape_name)
+    if kind == "prefill":
+        return build_prefill(cfg, mesh, shape_name)
+    return build_decode(cfg, mesh, shape_name)
+
+
+# ---------------------------------------------------------------------------
+# Lower / compile / analyze
+# ---------------------------------------------------------------------------
+
+
+def _as_shardings(mesh, tree):
+    return jax.tree.map(
+        lambda s: None if s is None else NamedSharding(mesh, s),
+        tree,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )
+
+
+def lower_and_compile(cfg, mesh, shape_name):
+    fn, args, in_s, out_s = build_step(cfg, mesh, shape_name)
+    jitted = jax.jit(fn, in_shardings=_as_shardings(mesh, in_s), out_shardings=_as_shardings(mesh, out_s))
+    t0 = time.time()
+    lowered = jitted.lower(*args)
+    compiled = lowered.compile()
+    return compiled, time.time() - t0
+
+
+def _cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll": coll,
+    }
+
+
+def _scale_cfg(cfg, k: int):
+    """k super-blocks, unrolled (whisper scales encoder layers too)."""
+    over = dict(n_layers=k * cfg.block_len, unroll=True)
+    if cfg.is_encoder_decoder:
+        over["n_encoder_layers"] = k
+    return dataclasses.replace(cfg, **over)
+
+
+def extrapolated_costs(cfg, mesh, shape_name) -> dict:
+    """Exact per-device roofline quantities via 1- vs 2-block unrolled compiles."""
+    c1, _ = lower_and_compile(_scale_cfg(cfg, 1), mesh, shape_name)
+    c2, _ = lower_and_compile(_scale_cfg(cfg, 2), mesh, shape_name)
+    d1, d2 = _cost_dict(c1), _cost_dict(c2)
+    n = cfg.n_blocks if not cfg.is_encoder_decoder else cfg.n_layers
+
+    def ext(a, b):
+        return a + (n - 1) * (b - a)
+
+    coll = {
+        k: int(max(0, ext(d1["coll"][k], d2["coll"][k]))) for k in _COLL_OPS
+    }
+    coll["count"] = int(ext(d1["coll"]["count"], d2["coll"]["count"]))
+    return {
+        "flops": max(0.0, ext(d1["flops"], d2["flops"])),
+        "bytes": max(0.0, ext(d1["bytes"], d2["bytes"])),
+        "coll": coll,
+        "base": d1,
+        "per_block": {
+            "flops": d2["flops"] - d1["flops"],
+            "bytes": d2["bytes"] - d1["bytes"],
+        },
+    }
+
+
+def roofline_terms(costs: dict, n_chips: int, cfg, shape_name) -> dict:
+    """Seconds per step for the three roofline terms (per-device program)."""
+    coll_total = sum(costs["coll"][k] for k in _COLL_OPS)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        mult = 3.0  # fwd + bwd
+    elif shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        mult = 1.0
+    else:
+        tokens = shape.global_batch  # one token per sequence
+        mult = 1.0
+    model_flops = 2.0 * mult * cfg.n_active_params() * tokens  # 6ND for train
+    t_compute = costs["flops"] / PEAK_FLOPS_BF16
+    t_memory = costs["bytes"] / HBM_BW
+    t_coll = coll_total / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    return {
+        **terms,
+        "dominant": dominant,
+        "model_flops_global": model_flops,
+        "model_flops_per_chip": model_flops / n_chips,
+        "useful_flops_ratio": (model_flops / n_chips) / costs["flops"] if costs["flops"] else 0.0,
+        "collective_bytes": coll_total,
+    }
+
+
+def apply_overrides(cfg, overrides: list[str]):
+    """--set key=value config overrides (ints/floats/bools auto-coerced)."""
+    if not overrides:
+        return cfg
+    kv = {}
+    for item in overrides:
+        k, v = item.split("=", 1)
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            kv[k] = v.lower() in ("1", "true", "yes")
+        elif isinstance(cur, int):
+            kv[k] = int(v)
+        elif isinstance(cur, float):
+            kv[k] = float(v)
+        else:
+            kv[k] = v
+    return dataclasses.replace(cfg, **kv)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str, *,
+            skip_existing=False, overrides: list[str] | None = None) -> dict:
+    mesh_name = "multipod" if multi_pod else "pod"
+    out_path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+    if skip_existing and os.path.exists(out_path):
+        with open(out_path) as f:
+            return json.load(f)
+    if not supports_shape(arch, shape_name):
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "skipped": True,
+               "reason": "enc-dec has no long-context decode analogue (DESIGN.md §5)"}
+        os.makedirs(out_dir, exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    variant = "long" if shape_name == "long_500k" else None
+    cfg = apply_overrides(get_config(arch, variant=variant), overrides or [])
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+
+    t0 = time.time()
+    compiled, compile_s = lower_and_compile(cfg, mesh, shape_name)
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+    }
+    full_coll = collective_bytes(compiled.as_text())
+    del compiled
+
+    costs = extrapolated_costs(cfg, mesh, shape_name)
+    roof = roofline_terms(costs, n_chips, cfg, shape_name)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "n_chips": n_chips,
+        "family": cfg.family,
+        "params": cfg.n_params(),
+        "active_params": cfg.n_active_params(),
+        "compile_s": round(compile_s, 1),
+        "total_s": round(time.time() - t0, 1),
+        "memory": mem,
+        "flops_per_chip": costs["flops"],
+        "bytes_per_chip": costs["bytes"],
+        "collectives": costs["coll"],
+        "full_compile_collectives_raw": full_coll,
+        "roofline": roof,
+        "sliding_window": cfg.sliding_window,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--set", dest="overrides", action="append", default=[],
+                    help="config override key=value (hillclimbing)")
+    args = ap.parse_args()
+
+    combos = []
+    archs = ARCH_NAMES if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.mesh == "both" else [args.mesh == "multipod"]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                combos.append((a, s, m))
+
+    failures = []
+    for a, s, m in combos:
+        tag = f"{a} x {s} x {'multipod' if m else 'pod'}"
+        try:
+            rec = run_one(a, s, m, args.out, skip_existing=args.skip_existing,
+                          overrides=args.overrides)
+            if rec.get("skipped"):
+                print(f"[skip] {tag}: {rec['reason']}", flush=True)
+            else:
+                r = rec["roofline"]
+                print(
+                    f"[ok]   {tag}: compile={rec['compile_s']}s "
+                    f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+                    f"coll={r['collective_s']:.3e}s dominant={r['dominant']}",
+                    flush=True,
+                )
+        except Exception as e:  # noqa: BLE001 — report and continue the sweep
+            failures.append((tag, repr(e)))
+            print(f"[FAIL] {tag}: {e!r}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print("\nall combos lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

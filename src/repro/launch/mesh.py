@@ -1,0 +1,35 @@
+"""Production mesh construction (functions only — importing this module
+never touches jax device state)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (256-chip v5e pod) or 2x16x16 (2 pods, 512 chips).
+
+    Axes: ("data", "model") single-pod; ("pod", "data", "model") multi-pod.
+    The dry-run forces xla_force_host_platform_device_count=512 before any
+    jax import so this works on the CPU container.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(*, model: int = 1):
+    """Small mesh over whatever devices exist (tests/examples on CPU hosts)."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh(
+        (n // model, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+# v5e hardware constants used by the roofline analysis (per chip)
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link (conservative single-link figure)
+HBM_BYTES = 16 * 2**30  # 16 GiB

@@ -1,0 +1,26 @@
+"""Composable model zoo: dense / MoE / SSM / hybrid / VLM / audio families."""
+
+from .config import ModelConfig, reduced
+from .model import (
+    decode_step,
+    forward_logits,
+    greedy_decode,
+    init_cache,
+    init_params,
+    loss_fn,
+    make_train_step,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig",
+    "decode_step",
+    "forward_logits",
+    "greedy_decode",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "make_train_step",
+    "prefill",
+    "reduced",
+]

@@ -1,0 +1,195 @@
+"""Encoder-decoder (Whisper-style) model — arXiv:2212.04356.
+
+Per the assignment carve-out, the audio frontend (log-mel + conv downsampler)
+is a stub: `input_specs()` supplies precomputed frame embeddings
+(B, encoder_seq, d_model).  Everything downstream is real: sinusoidal
+encoder positions, bidirectional encoder self-attention, causal decoder
+self-attention with learned positions, cross-attention, GELU MLPs,
+LayerNorm, tied output head — and a decode path with self-KV cache plus
+precomputed cross-KV.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers as L
+from .transformer import scan_blocks
+
+Params = dict[str, Any]
+
+
+def _sinusoid(length: int, dim: int) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    i = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    angle = pos / (10000.0 ** (2 * i / dim))
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def _cross_attn_init(key, cfg: ModelConfig) -> Params:
+    return L.attn_init(key, cfg)
+
+
+def _enc_layer_init(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": L.norm_init(cfg),
+        "attn": L.attn_init(k1, cfg),
+        "norm2": L.norm_init(cfg),
+        "mlp": L.mlp_init(k2, cfg, cfg.d_ff),
+    }
+
+
+def _dec_layer_init(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": L.norm_init(cfg),
+        "self_attn": L.attn_init(k1, cfg),
+        "norm_x": L.norm_init(cfg),
+        "cross_attn": _cross_attn_init(k2, cfg),
+        "norm2": L.norm_init(cfg),
+        "mlp": L.mlp_init(k3, cfg, cfg.d_ff),
+    }
+
+
+def init_encdec_params(key, cfg: ModelConfig) -> Params:
+    ke, kd, kt, kp = jax.random.split(key, 4)
+    dt = L.cdtype(cfg)
+    enc_keys = jax.random.split(ke, cfg.n_encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embed": L._normal(kt, (cfg.vocab_size, cfg.d_model), 0.02, dt),
+        "dec_pos": L._normal(kp, (cfg.max_target_positions, cfg.d_model), 0.02, dt),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dec_keys),
+        "enc_norm": L.norm_init(cfg),
+        "dec_norm": L.norm_init(cfg),
+    }
+
+
+def _cross_attend(p: Params, cfg: ModelConfig, x, enc_k, enc_v):
+    b, s, _ = x.shape
+    q = L.dense(p["wq"], x).reshape(b, s, cfg.n_heads, cfg.hd)
+    mask = jnp.ones((b, s, enc_k.shape[1]), bool)
+    out = L._sdpa(q, enc_k, enc_v, mask, cfg)
+    return L.dense(p["wo"], out)
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, T, d) stub embeddings -> encoder states (B, T, d)."""
+    x = frames.astype(L.cdtype(cfg)) + _sinusoid(frames.shape[1], cfg.d_model).astype(
+        L.cdtype(cfg)
+    )
+    dummy = jnp.zeros((x.shape[0], x.shape[1], 1))
+
+    def body(x, lp):
+        h = L.apply_norm(lp["norm1"], cfg, x)
+        h = L.attn_forward(lp["attn"], cfg, h, dummy, causal=False, rope=False)
+        x = x + h
+        h = L.apply_norm(lp["norm2"], cfg, x)
+        x = x + L.mlp(lp["mlp"], cfg, h)
+        return x, None
+
+    x, _ = scan_blocks(cfg, body, x, params["enc_layers"])
+    return L.apply_norm(params["enc_norm"], cfg, x)
+
+
+def _dec_positions(params, cfg, start: int, length: int):
+    idx = jnp.clip(jnp.arange(start, start + length), 0, cfg.max_target_positions - 1)
+    return params["dec_pos"][idx]
+
+
+def encdec_forward(
+    params: Params, cfg: ModelConfig, tokens: jax.Array, frames: jax.Array
+) -> tuple[jax.Array, dict]:
+    """Teacher-forced decoder logits (B, S, V)."""
+    enc = encode(params, cfg, frames)
+    b, s = tokens.shape
+    x = params["embed"][tokens] + _dec_positions(params, cfg, 0, s)[None]
+    dummy = jnp.zeros((b, s, 1))
+
+    def body(x, lp):
+        h = L.apply_norm(lp["norm1"], cfg, x)
+        h = L.attn_forward(lp["self_attn"], cfg, h, dummy, causal=True, rope=False)
+        x = x + h
+        h = L.apply_norm(lp["norm_x"], cfg, x)
+        ek = L.dense(lp["cross_attn"]["wk"], enc).reshape(
+            b, enc.shape[1], cfg.n_kv_heads, cfg.hd
+        )
+        ev = L.dense(lp["cross_attn"]["wv"], enc).reshape(
+            b, enc.shape[1], cfg.n_kv_heads, cfg.hd
+        )
+        x = x + _cross_attend(lp["cross_attn"], cfg, h, ek, ev)
+        h = L.apply_norm(lp["norm2"], cfg, x)
+        x = x + L.mlp(lp["mlp"], cfg, h)
+        return x, None
+
+    x, _ = scan_blocks(cfg, body, x, params["dec_layers"])
+    x = L.apply_norm(params["dec_norm"], cfg, x)
+    logits = x @ params["embed"].T  # whisper ties embeddings
+    zero = jnp.zeros((), jnp.float32)
+    return logits, {"aux_loss": zero, "z_loss": zero}
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Params:
+    nl = cfg.n_layers
+    t = cfg.encoder_seq
+    return {
+        "self": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (nl,) + a.shape).copy(),
+            L.init_kv_cache(cfg, batch, max_seq, dtype),
+        ),
+        "cross_k": jnp.zeros((nl, batch, t, cfg.n_kv_heads, cfg.hd), dtype),
+        "cross_v": jnp.zeros((nl, batch, t, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+def encdec_prefill(
+    params: Params, cfg: ModelConfig, frames: jax.Array, cache: Params
+) -> Params:
+    """Encode audio and precompute per-layer cross K/V into the cache."""
+    enc = encode(params, cfg, frames)
+    b, t, _ = enc.shape
+
+    def per_layer(lp):
+        ek = L.dense(lp["cross_attn"]["wk"], enc).reshape(b, t, cfg.n_kv_heads, cfg.hd)
+        ev = L.dense(lp["cross_attn"]["wv"], enc).reshape(b, t, cfg.n_kv_heads, cfg.hd)
+        return ek, ev
+
+    ck, cv = jax.vmap(per_layer)(params["dec_layers"])
+    return {"self": cache["self"], "cross_k": ck.astype(cache["cross_k"].dtype),
+            "cross_v": cv.astype(cache["cross_v"].dtype)}
+
+
+def encdec_decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    token: jax.Array,  # (B, 1)
+    cache: Params,
+    position: jax.Array,
+) -> tuple[jax.Array, Params]:
+    b = token.shape[0]
+    pos_idx = jnp.clip(position, 0, cfg.max_target_positions - 1)
+    x = params["embed"][token] + params["dec_pos"][pos_idx][None, None, :]
+
+    def body(x, inp):
+        lp, c_self, ck, cv = inp
+        h = L.apply_norm(lp["norm1"], cfg, x)
+        h, new_self = L.attn_decode(lp["self_attn"], cfg, h, c_self, position, rope=False)
+        x = x + h
+        h = L.apply_norm(lp["norm_x"], cfg, x)
+        x = x + _cross_attend(lp["cross_attn"], cfg, h, ck, cv)
+        h = L.apply_norm(lp["norm2"], cfg, x)
+        x = x + L.mlp(lp["mlp"], cfg, h)
+        return x, new_self
+
+    x, new_self = scan_blocks(
+        cfg, body, x, (params["dec_layers"], cache["self"], cache["cross_k"], cache["cross_v"])
+    )
+    x = L.apply_norm(params["dec_norm"], cfg, x)
+    logits = x @ params["embed"].T
+    return logits, {"self": new_self, "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}

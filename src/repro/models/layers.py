@@ -1,0 +1,400 @@
+"""Shared neural-net layers: norms, RoPE/M-RoPE, GQA attention (+KV cache
+with ring-buffer sliding window), MLPs, and GShard-style top-k MoE.
+
+Conventions:
+  * params are nested dicts of jnp arrays,
+  * every init fn takes (key, cfg) and every apply fn takes (params, cfg, ...),
+  * activations follow cfg.dtype; softmax/router/norm math runs in float32.
+
+Shapes: B batch, S sequence, d model dim, H query heads, K kv heads,
+hd head dim, E experts, C capacity, G dispatch-group tokens.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Params = dict[str, Any]
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, *, bias: bool = False) -> Params:
+    p = {"w": _normal(key, (d_in, d_out), d_in**-0.5, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_init(cfg: ModelConfig) -> Params:
+    p = {"scale": jnp.ones((cfg.d_model,), cdtype(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), cdtype(cfg))
+    return p
+
+
+def apply_norm(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + 1e-6)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rms_norm_gated(scale: jax.Array, x: jax.Array, gate: jax.Array) -> jax.Array:
+    """Mamba2's gated RMSNorm: norm(x * silu(gate)) * scale."""
+    xf = (x * jax.nn.silu(gate)).astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + 1e-6) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def _inv_freq(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def rope_angles(cfg: ModelConfig, positions: jax.Array) -> jax.Array:
+    """Angles (B, S, hd//2).
+
+    standard: positions (B, S).
+    mrope:    positions (B, 3, S) — temporal/height/width streams; the hd//2
+              frequency slots are partitioned by cfg.mrope_sections and each
+              partition reads its own stream (Qwen2-VL Sec. 3).
+    """
+    inv = _inv_freq(cfg.hd, cfg.rope_theta)  # (hd/2,)
+    if cfg.rope_mode == "mrope":
+        sections = cfg.mrope_sections
+        assert sum(sections) == cfg.hd // 2, (sections, cfg.hd)
+        sec_id = jnp.concatenate(
+            [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)]
+        )  # (hd/2,)
+        pos_sel = jnp.take(positions, sec_id, axis=1)  # (B, hd/2, S)
+        return jnp.einsum("bks,k->bsk", pos_sel.astype(jnp.float32), inv)
+    return positions.astype(jnp.float32)[..., None] * inv  # (B,S,hd/2)
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: (B, S, n, hd); angles: (B, S, hd//2). Half-rotation (NeoX) layout."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal, sliding window, KV cache)
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg: ModelConfig) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.hd
+    return {
+        "wq": dense_init(kq, d, cfg.n_heads * hd, cdtype(cfg), bias=cfg.qkv_bias),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * hd, cdtype(cfg), bias=cfg.qkv_bias),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * hd, cdtype(cfg), bias=cfg.qkv_bias),
+        "wo": dense_init(ko, cfg.n_heads * hd, d, cdtype(cfg)),
+    }
+
+
+def _qkv(p, cfg, x, angles, *, rope: bool = True):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = dense(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
+    k = dense(p["wk"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    v = dense(p["wv"], x).reshape(b, s, cfg.n_kv_heads, hd)
+    if rope:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg):
+    """q:(B,Sq,H,hd) k/v:(B,Sk,K,hd) mask:(B,Sq,Sk) bool."""
+    b, sq, h, hd = q.shape
+    kheads = k.shape[2]
+    rep = h // kheads
+    q = q.reshape(b, sq, kheads, rep, hd)
+    logits = jnp.einsum("bqkrh,bskh->bkrqs", q, k).astype(jnp.float32)
+    logits = logits * (hd**-0.5)
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", probs, v)
+    return out.reshape(b, sq, h * hd)
+
+
+def causal_mask(sq: int, sk: int, *, window: int = 0, offset: int = 0) -> jax.Array:
+    """(sq, sk) bool; query i (absolute pos offset+i) sees key j iff j <= i
+    and (window == 0 or i - j < window)."""
+    qp = offset + jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    m = kp <= qp
+    if window:
+        m &= (qp - kp) < window
+    return m
+
+
+def attn_forward(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    angles: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    rope: bool = True,
+) -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, angles, rope=rope)
+    if causal:
+        mask = causal_mask(s, s, window=window)[None]
+    else:
+        mask = jnp.ones((1, s, s), bool)
+    out = _sdpa(q, k, v, jnp.broadcast_to(mask, (b, s, s)), cfg)
+    return dense(p["wo"], out)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, length: int, dtype) -> Params:
+    """Ring-buffer KV cache. `length` = full seq for dense, window for SWA."""
+    return {
+        "k": jnp.zeros((batch, length, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((batch, length, cfg.n_kv_heads, cfg.hd), dtype),
+        "pos": jnp.full((batch, length), -1, jnp.int32),  # absolute positions
+    }
+
+
+def attn_decode(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, 1, d)
+    cache: Params,
+    position: jax.Array,  # scalar int32: absolute position of the new token
+    *,
+    window: int = 0,
+    rope: bool = True,
+    rope_position: jax.Array | None = None,  # M-RoPE stream value if != position
+) -> tuple[jax.Array, Params]:
+    """One decode step against a ring-buffer cache (slot = pos % cache_len)."""
+    b = x.shape[0]
+    length = cache["k"].shape[1]
+    angles_dummy = None
+    if rope:
+        rp = position if rope_position is None else rope_position
+        if cfg.rope_mode == "mrope":
+            pos = jnp.broadcast_to(rp, (b, 3, 1)).astype(jnp.int32)
+        else:
+            pos = jnp.broadcast_to(rp, (b, 1)).astype(jnp.int32)
+        angles_dummy = rope_angles(cfg, pos)
+    q, k, v = _qkv(p, cfg, x, angles_dummy, rope=rope)
+    slot = (position % length).astype(jnp.int32)
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1),
+        "pos": jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.full((b, 1), position, jnp.int32), slot, axis=1
+        ),
+    }
+    kpos = cache["pos"]  # (B, length)
+    valid = (kpos >= 0) & (kpos <= position)
+    if window:
+        valid &= (position - kpos) < window
+    mask = valid[:, None, :]  # (B, 1, length)
+    out = _sdpa(q, cache["k"], cache["v"], mask, cfg)
+    return dense(p["wo"], out), cache
+
+
+def prefill_into_cache(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    angles: jax.Array,
+    cache: Params,
+    *,
+    window: int = 0,
+) -> tuple[jax.Array, Params]:
+    """Full-seq attention that also writes k/v into the cache (prefill).
+
+    Assumes prefill length <= cache length and starts at position 0; for a
+    ring cache with window W the last W positions land in their ring slots.
+    """
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, angles)
+    mask = jnp.broadcast_to(causal_mask(s, s, window=window)[None], (b, s, s))
+    out = _sdpa(q, k, v, mask, cfg)
+    length = cache["k"].shape[1]
+    # keep the (at most `length`) most recent keys; static shapes (s, length
+    # are trace-time Python ints) so this is plain slicing.
+    start = max(0, s - length)
+    kept_pos = jnp.arange(start, s, dtype=jnp.int32)
+    slots = kept_pos % length
+    upd_k = cache["k"].at[:, slots].set(k[:, start:])
+    upd_v = cache["v"].at[:, slots].set(v[:, start:])
+    upd_pos = cache["pos"].at[:, slots].set(kept_pos[None, :])
+    cache = {"k": upd_k, "v": upd_v, "pos": upd_pos}
+    return dense(p["wo"], out), cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int) -> Params:
+    d = cfg.d_model
+    if cfg.act == "silu":  # SwiGLU
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "wg": dense_init(k1, d, d_ff, cdtype(cfg)),
+            "wu": dense_init(k2, d, d_ff, cdtype(cfg)),
+            "wd": dense_init(k3, d_ff, d, cdtype(cfg)),
+        }
+    k1, k2 = jax.random.split(key)
+    return {
+        "wu": dense_init(k1, d, d_ff, cdtype(cfg)),
+        "wd": dense_init(k2, d_ff, d, cdtype(cfg)),
+    }
+
+
+def mlp(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.act == "silu":
+        h = jax.nn.silu(dense(p["wg"], x)) * dense(p["wu"], x)
+    elif cfg.act == "squared_relu":
+        h = jnp.square(jax.nn.relu(dense(p["wu"], x)))
+    elif cfg.act == "gelu":
+        h = jax.nn.gelu(dense(p["wu"], x))
+    else:
+        raise ValueError(cfg.act)
+    return dense(p["wd"], h)
+
+
+# ---------------------------------------------------------------------------
+# MoE — GShard-style grouped top-k dispatch with capacity
+# ---------------------------------------------------------------------------
+
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    d, e = cfg.d_model, cfg.n_experts
+    f = cfg.moe_d_ff or cfg.d_ff
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": _normal(kr, (d, e), d**-0.5, jnp.float32),
+        "wu": _normal(ku, (e, d, f), d**-0.5, cdtype(cfg)),
+        "wd": _normal(kd, (e, f, d), f**-0.5, cdtype(cfg)),
+    }
+    if cfg.act == "silu":
+        p["wg"] = _normal(kg, (e, d, f), d**-0.5, cdtype(cfg))
+    if cfg.n_shared_experts:
+        shared_cfg = cfg
+        p["shared"] = mlp_init(ks, shared_cfg, f * cfg.n_shared_experts)
+    return p
+
+
+def _capacity(cfg: ModelConfig, group: int) -> int:
+    c = int(group * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return max(c, cfg.top_k)
+
+
+def moe_apply(
+    p: Params, cfg: ModelConfig, x: jax.Array
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """x: (B, S, d) -> (y, {aux_loss, z_loss, expert_load})."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    tokens = x.reshape(b * s, d)
+    n = tokens.shape[0]
+    g = min(cfg.moe_group_size, n)
+    pad = (-n) % g
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    ng = tokens.shape[0] // g
+    xt = tokens.reshape(ng, g, d)
+    cap = _capacity(cfg, g)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (ng,g,e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)  # (ng, g, k)
+    topv = topv / jnp.clip(topv.sum(-1, keepdims=True), 1e-9)  # renormalize
+
+    counts = jnp.zeros((ng, e), jnp.float32)
+    dispatch = jnp.zeros((ng, g, e, cap), cdtype(cfg))
+    combine = jnp.zeros((ng, g, e, cap), jnp.float32)
+    for j in range(k):
+        oh = jax.nn.one_hot(topi[..., j], e, dtype=jnp.float32)  # (ng,g,e)
+        pos_in = jnp.cumsum(oh, axis=1) - oh + counts[:, None, :]
+        pos = jnp.einsum("nge,nge->ng", pos_in, oh).astype(jnp.int32)
+        keep = (pos < cap).astype(jnp.float32)
+        slot = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
+        dj = oh[..., None] * slot[:, :, None, :]  # (ng,g,e,cap)
+        dispatch = dispatch + dj.astype(cdtype(cfg))
+        combine = combine + dj * topv[..., j][..., None, None]
+        counts = counts + oh.sum(axis=1)
+
+    expert_in = jnp.einsum("ngec,ngd->necd", dispatch, xt)  # (ng? no: n=ng)
+    if cfg.act == "silu":
+        h = jax.nn.silu(jnp.einsum("necd,edf->necf", expert_in, p["wg"]))
+        h = h * jnp.einsum("necd,edf->necf", expert_in, p["wu"])
+    elif cfg.act == "squared_relu":
+        h = jnp.square(jax.nn.relu(jnp.einsum("necd,edf->necf", expert_in, p["wu"])))
+    else:
+        h = jax.nn.gelu(jnp.einsum("necd,edf->necf", expert_in, p["wu"]))
+    expert_out = jnp.einsum("necf,efd->necd", h, p["wd"])
+    y = jnp.einsum("ngec,necd->ngd", combine.astype(cdtype(cfg)), expert_out)
+    y = y.reshape(-1, d)[:n].reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(p["shared"], cfg, x)
+
+    # load-balance aux (Switch/GShard): E * sum_e f_e * P_e
+    me = probs.mean(axis=(0, 1))  # (e,)
+    top1 = jax.nn.one_hot(topi[..., 0], e, dtype=jnp.float32).mean(axis=(0, 1))
+    aux = e * jnp.sum(top1 * me)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    metrics = {"aux_loss": aux, "z_loss": z, "expert_load": counts.sum(0)}
+    return y, metrics
+
+
+def ffn_apply(
+    p: Params, cfg: ModelConfig, x: jax.Array, *, is_moe: bool
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    if is_moe:
+        return moe_apply(p, cfg, x)
+    zero = jnp.zeros((), jnp.float32)
+    return mlp(p, cfg, x), {
+        "aux_loss": zero,
+        "z_loss": zero,
+        "expert_load": jnp.zeros((max(cfg.n_experts, 1),), jnp.float32),
+    }

@@ -1,0 +1,173 @@
+"""Unified model API over all architecture families.
+
+    params                    = init_params(cfg, key)
+    loss, metrics             = loss_fn(cfg, params, batch)
+    train_step                = make_train_step(cfg, optimizer[, dp_axis, gossip])
+    logits, cache             = prefill(cfg, params, batch, cache)
+    logits, cache             = decode_step(cfg, params, token, cache, position)
+
+`batch` is a dict: tokens (B,S) / labels (B,S) / mask (B,S), plus
+`patch_embeds` (VLM stub) or `frames` (audio stub) when the family needs it.
+
+The train step optionally applies the paper's SOP-consensus gossip on the
+data axis instead of all-reduce gradient averaging (DESIGN.md Sec. 3).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import consensus
+from repro.optim import Optimizer, apply_updates
+
+from .config import ModelConfig
+from . import encdec as ED
+from . import transformer as T
+
+Params = dict[str, Any]
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    if cfg.is_encoder_decoder:
+        return ED.init_encdec_params(key, cfg)
+    return T.init_decoder_params(key, cfg)
+
+
+def forward_logits(cfg: ModelConfig, params: Params, batch: dict) -> tuple[jax.Array, dict]:
+    if cfg.is_encoder_decoder:
+        return ED.encdec_forward(params, cfg, batch["tokens"], batch["frames"])
+    logits, metrics = T.decoder_forward(
+        params, cfg, batch["tokens"], patch_embeds=batch.get("patch_embeds")
+    )
+    if cfg.n_patches and "patch_embeds" in batch:
+        logits = logits[:, cfg.n_patches :]  # align back to text positions
+    return logits, metrics
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (logz - gold) * mask
+    return ce.sum() / jnp.clip(mask.sum(), 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict) -> tuple[jax.Array, dict]:
+    logits, m = forward_logits(cfg, params, batch)
+    ce = cross_entropy(logits, batch["labels"], batch["mask"])
+    total = ce
+    if cfg.n_experts:
+        total = (
+            total
+            + cfg.router_aux_weight * m["aux_loss"]
+            + cfg.router_z_weight * m["z_loss"]
+        )
+    metrics = {"loss": total, "ce": ce}
+    if cfg.n_experts:
+        metrics["aux_loss"] = m["aux_loss"]
+        metrics["z_loss"] = m["z_loss"]
+    return total, metrics
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    *,
+    dp_axis: str | None = None,
+    dp_mode: str = "allreduce",  # allreduce | sop_gossip | none
+    gossip_schedule: list[list[int]] | None = None,
+):
+    """Build a (params, opt_state, batch[, gossip_round]) -> ... step.
+
+    dp_mode='allreduce': gradients pmean'd over dp_axis (the paper's
+      fully-connected / centralized special case, Lemma 3.1).
+    dp_mode='sop_gossip': gradients stay local; after the optimizer update the
+      parameters take one SOP pairwise-projection round on dp_axis (SN-Train's
+      relaxed neighbor coupling, round-robin over the schedule).
+    """
+
+    def step(params, opt_state, batch, gossip_round=0):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True
+        )(params)
+        if dp_axis is not None and dp_mode == "allreduce":
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g, dp_axis), grads)
+            metrics = jax.tree.map(lambda x: jax.lax.pmean(x, dp_axis), metrics)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        if dp_axis is not None and dp_mode == "sop_gossip":
+            sched = gossip_schedule
+            assert sched is not None, "sop_gossip needs a schedule"
+            params = consensus.gossip_round(params, dp_axis, sched, gossip_round)
+            metrics["consensus_sq"] = consensus.consensus_sq_distance(params, dp_axis)
+        return params, opt_state, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> Params:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    if cfg.is_encoder_decoder:
+        return ED.init_encdec_cache(cfg, batch, max_seq, dtype)
+    return T.init_decoder_cache(cfg, batch, max_seq, dtype)
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: dict, cache: Params):
+    """Process the prompt; returns (last-position logits | None, cache)."""
+    if cfg.is_encoder_decoder:
+        return None, ED.encdec_prefill(params, cfg, batch["frames"], cache)
+    return T.decoder_prefill(
+        params, cfg, batch["tokens"], cache, patch_embeds=batch.get("patch_embeds")
+    )
+
+
+def decode_step(
+    cfg: ModelConfig, params: Params, token: jax.Array, cache: Params, position
+):
+    """One-token serve step: returns (logits (B,1,V), new cache)."""
+    position = jnp.asarray(position, jnp.int32)
+    if cfg.is_encoder_decoder:
+        return ED.encdec_decode_step(params, cfg, token, cache, position)
+    return T.decoder_decode_step(params, cfg, token, cache, position)
+
+
+def greedy_decode(
+    cfg: ModelConfig,
+    params: Params,
+    prompt: jax.Array,  # (B, S0)
+    n_steps: int,
+    max_seq: int,
+    *,
+    batch_extra: dict | None = None,
+):
+    """Prefill + n greedy decode steps (lax.fori over steps)."""
+    b, s0 = prompt.shape
+    cache = init_cache(cfg, b, max_seq)
+    batch = {"tokens": prompt, **(batch_extra or {})}
+    logits, cache = prefill(cfg, params, batch, cache)
+    if logits is None:  # enc-dec: start from BOS token 0 at position 0
+        first = jnp.zeros((b, 1), jnp.int32)
+        start_pos = 0
+    else:
+        first = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        start_pos = s0
+    out = jnp.zeros((b, n_steps), jnp.int32)
+
+    def body(i, carry):
+        tok, cache, out = carry
+        logits, cache = decode_step(cfg, params, tok, cache, start_pos + i)
+        nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out = jax.lax.dynamic_update_slice_in_dim(out, nxt, i, axis=1)
+        return nxt, cache, out
+
+    _, cache, out = jax.lax.fori_loop(0, n_steps, body, (first, cache, out))
+    return out, cache

@@ -1,0 +1,250 @@
+"""Mamba2 / SSD (state-space duality) mixer — arXiv:2405.21060.
+
+Chunked "dual" form for training/prefill (quadratic attention-like math
+within chunks of length `cs`, linear recurrence across chunks) and an O(1)
+single-step recurrence for decode.  This is what makes `long_500k` native
+for the SSM/hybrid architectures: decode state is (B, H, P, N) regardless of
+context length.
+
+Shapes: B batch, S seq, H ssm heads, P head dim, N state dim, K conv width,
+cs chunk, nc chunks.  n_groups = 1 (B/C shared across heads), as in the
+Mamba2 reference config.
+
+NOTE on memory: the intra-chunk term materializes (B, nc, cs, cs, H) decay
+factors in HBM in this pure-jnp formulation — that is the dominant memory-
+roofline term for mamba2/jamba in the dry-run and the motivation for the
+fused Pallas variant (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _normal, cdtype, dense, dense_init, rms_norm_gated
+
+Params = dict[str, Any]
+
+
+def ssm_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_dim = di + 2 * n
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(k1, d, 2 * di + 2 * n + h, cdtype(cfg)),
+        "conv_w": _normal(k2, (cfg.ssm_conv, conv_dim), cfg.ssm_conv**-0.5, cdtype(cfg)),
+        "conv_b": jnp.zeros((conv_dim,), cdtype(cfg)),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+        ),  # A in [-16, -1]
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), cdtype(cfg)),
+        "out_proj": dense_init(k3, di, d, cdtype(cfg)),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. xbc: (B, S, C), w: (K, C)."""
+    c = xbc.shape[-1]
+    out = jax.lax.conv_general_dilated(
+        xbc,
+        w[:, None, :],  # (K, 1, C)
+        window_strides=(1,),
+        padding=[(w.shape[0] - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c,
+    )
+    return jax.nn.silu(out + b)
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    assert dt.shape[-1] == h
+    return z, xbc, dt
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) post-softplus
+    a: jax.Array,  # (H,) negative
+    bmat: jax.Array,  # (B, S, N)
+    cmat: jax.Array,  # (B, S, N)
+    chunk: int,
+    h0: jax.Array | None = None,  # (B, H, P, N) initial state
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N)).
+
+    Recurrence being computed:  h_t = exp(dt_t a) h_{t-1} + dt_t B_t x_t,
+    y_t = C_t . h_t  (the D-skip and gating live in the caller).
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    bc = bmat.reshape(b, nc, chunk, n)
+    cc = cmat.reshape(b, nc, chunk, n)
+
+    da = dtc * a[None, None, None, :]  # (b,nc,cs,h) negative
+    da_cum = jnp.cumsum(da, axis=2)  # inclusive
+    da_sum = da_cum[:, :, -1, :]  # (b,nc,h)
+
+    # --- intra-chunk (quadratic, attention-like) ---
+    diff = da_cum[:, :, :, None, :] - da_cum[:, :, None, :, :]  # (b,nc,l,m,h)
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: upper-triangle diffs are positive and would overflow
+    diff = jnp.where(tril[None, None, :, :, None], diff, -jnp.inf)
+    decay = jnp.exp(diff)
+    cb = jnp.einsum("bzln,bzmn->bzlm", cc, bc)  # (b,nc,l,m)
+    y_intra = jnp.einsum(
+        "bzlm,bzlmh,bzmh,bzmhp->bzlhp", cb, decay, dtc, xc
+    )
+
+    # --- chunk boundary states ---
+    decay_to_end = jnp.exp(da_sum[:, :, None, :] - da_cum)  # (b,nc,cs,h)
+    states = jnp.einsum("bzmn,bzmh,bzmhp->bzhpn", bc, dtc * decay_to_end, xc)
+
+    # --- inter-chunk linear recurrence (scan over chunks) ---
+    chunk_decay = jnp.exp(da_sum)  # (b,nc,h)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), x.dtype)
+
+    def step(carry, inp):
+        st, dec = inp  # (b,h,p,n), (b,h)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit state BEFORE this chunk
+
+    last, h_prev = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # (b,nc,h,p,n)
+
+    y_inter = jnp.einsum(
+        "bzln,bzhpn,bzlh->bzlhp", cc, h_prev, jnp.exp(da_cum)
+    )
+    y = (y_intra + y_inter).reshape(b, sp, h, p)[:, :s]
+    return y, last
+
+
+def ssd_recurrent_ref(x, dt, a, bmat, cmat, h0=None):
+    """Naive per-step recurrence — the oracle for ssd_chunked."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(carry, t):
+        da = jnp.exp(dt[:, t] * a[None, :])  # (b,h)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, t], bmat[:, t], x[:, t])
+        carry = carry * da[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", cmat[:, t], carry)
+        return carry, y
+
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 1), hT  # (b,s,h,p), (b,h,p,n)
+
+
+def ssm_forward(
+    p: Params,
+    cfg: ModelConfig,
+    u: jax.Array,  # (B, S, d_model)
+) -> jax.Array:
+    """Training/prefill path (no state input/output; sequences start cold)."""
+    y, _, _ = ssm_forward_with_state(p, cfg, u)
+    return y
+
+
+def ssm_forward_with_state(p: Params, cfg: ModelConfig, u: jax.Array):
+    b, s, _ = u.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xbc_raw, dt_raw = _split_proj(cfg, dense(p["in_proj"], u))
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    x = xbc[..., :di].reshape(b, s, h, cfg.ssm_head_dim)
+    bmat = xbc[..., di : di + n]
+    cmat = xbc[..., di + n :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    if cfg.ssd_fused:
+        from repro.kernels.ops import ssd_chunked_fused
+
+        y, hT = ssd_chunked_fused(
+            x.astype(jnp.float32), dt, a,
+            bmat.astype(jnp.float32), cmat.astype(jnp.float32), cfg.ssm_chunk,
+        )
+    else:
+        y, hT = ssd_chunked(
+            x.astype(jnp.float32),
+            dt,
+            a,
+            bmat.astype(jnp.float32),
+            cmat.astype(jnp.float32),
+            cfg.ssm_chunk,
+        )
+    y = y + x.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(u.dtype)
+    y = rms_norm_gated(p["norm_scale"], y, z)
+    # conv tail state for decode continuation after prefill
+    k = cfg.ssm_conv
+    conv_state = xbc_raw[:, -(k - 1) :, :] if s >= k - 1 else jnp.pad(
+        xbc_raw, ((0, 0), (k - 1 - s, 0), (0, 0))
+    )
+    return dense(p["out_proj"], y), hT, conv_state
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    return {
+        "state": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+        "conv": jnp.zeros(
+            (batch, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_state), dtype
+        ),
+    }
+
+
+def ssm_decode(
+    p: Params,
+    cfg: ModelConfig,
+    u: jax.Array,  # (B, 1, d_model)
+    cache: Params,
+) -> tuple[jax.Array, Params]:
+    """One-token recurrent step; O(1) in context length."""
+    b = u.shape[0]
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xbc_raw, dt_raw = _split_proj(cfg, dense(p["in_proj"], u))
+    window = jnp.concatenate([cache["conv"], xbc_raw], axis=1)  # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+    xbc = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))  # (B, C)
+    x = xbc[:, :di].reshape(b, h, cfg.ssm_head_dim)
+    bmat = xbc[:, di : di + n]
+    cmat = xbc[:, di + n :]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,h)
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * a[None, :])
+    state = cache["state"] * da[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, bmat, x
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cmat, state) + p["D"][None, :, None] * x
+    y = y.reshape(b, 1, di).astype(u.dtype)
+    y = rms_norm_gated(p["norm_scale"], y, z)
+    new_cache = {"state": state, "conv": window[:, 1:, :].astype(cache["conv"].dtype)}
+    return dense(p["out_proj"], y), new_cache

@@ -1,0 +1,317 @@
+"""Decoder-only stack assembly for dense / MoE / SSM / hybrid / VLM families.
+
+The stack is a `lax.scan` over "super-blocks": the layer pattern
+(cfg.pattern, lcm'd with the MoE period) is unrolled inside the scan body and
+the parameter/cache pytrees carry a leading (n_blocks, ...) axis.  This keeps
+HLO size O(pattern) instead of O(n_layers) — essential for the 48-72 layer
+dry-run compiles — and gives remat a natural boundary.
+
+Three entry points per model: `forward` (train/prefill logits),
+`prefill` (forward + cache fill), `decode_step` (one token vs cache).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers as L
+from . import ssm as S
+
+Params = dict[str, Any]
+
+
+def scan_blocks(cfg: ModelConfig, body, carry, xs):
+    """lax.scan over stacked blocks, or a python loop when cfg.unroll.
+
+    Unrolling exists for the dry-run cost analysis: XLA's HloCostAnalysis
+    visits a while body once regardless of trip count, so roofline numbers
+    are extracted from small unrolled variants (launch/dryrun.py).
+    """
+    if not cfg.unroll:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys[0] is None:
+        return carry, None
+    return carry, jax.tree.map(lambda *a: jnp.stack(a), *ys)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ModelConfig, j: int) -> Params:
+    """One layer (position j inside the super-block pattern)."""
+    kind = cfg.layer_kind(j)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {"norm1": L.norm_init(cfg)}
+    if kind == "a":
+        p["attn"] = L.attn_init(k1, cfg)
+    else:
+        p["ssm"] = S.ssm_init(k1, cfg)
+    if cfg.has_ffn:
+        p["norm2"] = L.norm_init(cfg)
+        if cfg.layer_is_moe(j):
+            p["moe"] = L.moe_init(k2, cfg)
+        else:
+            p["mlp"] = L.mlp_init(k3, cfg, cfg.d_ff)
+    return p
+
+
+def _superblock_init(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, cfg.block_len)
+    return {f"layer{j}": _layer_init(keys[j], cfg, j) for j in range(cfg.block_len)}
+
+
+def init_decoder_params(key, cfg: ModelConfig) -> Params:
+    ke, kh, kb = jax.random.split(key, 3)
+    dt = L.cdtype(cfg)
+    p: Params = {
+        "embed": L._normal(ke, (cfg.vocab_size, cfg.d_model), 0.02, dt),
+        "final_norm": L.norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L._normal(kh, (cfg.d_model, cfg.vocab_size), cfg.d_model**-0.5, dt)
+    block_keys = jax.random.split(kb, cfg.n_blocks)
+    p["blocks"] = jax.vmap(lambda k: _superblock_init(k, cfg))(block_keys)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Positions (standard + M-RoPE with a vision-patch prefix)
+# ---------------------------------------------------------------------------
+
+
+def build_positions(
+    cfg: ModelConfig, batch: int, seq: int, *, offset: int = 0
+) -> jax.Array:
+    """(B, S) standard or (B, 3, S) M-RoPE position ids.
+
+    For the VLM stub the first cfg.n_patches tokens are vision patches laid
+    out on a ~square grid: temporal id 0, spatial ids (row, col); text tokens
+    then advance all three streams together (Qwen2-VL M-RoPE).
+    """
+    if cfg.rope_mode != "mrope":
+        return jnp.broadcast_to(jnp.arange(offset, offset + seq), (batch, seq))
+    npatch = min(cfg.n_patches, seq)
+    side = max(int(npatch**0.5), 1)
+    idx = jnp.arange(seq)
+    is_text = idx >= npatch
+    text_pos = idx - npatch
+    t_stream = jnp.where(is_text, text_pos + side, 0)
+    h_stream = jnp.where(is_text, text_pos + side, idx // side)
+    w_stream = jnp.where(is_text, text_pos + side, idx % side)
+    pos = jnp.stack([t_stream, h_stream, w_stream], axis=0) + offset
+    return jnp.broadcast_to(pos, (batch, 3, seq))
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / logits)
+# ---------------------------------------------------------------------------
+
+
+def _zero_metrics(cfg: ModelConfig):
+    return {
+        "aux_loss": jnp.zeros((), jnp.float32),
+        "z_loss": jnp.zeros((), jnp.float32),
+        "expert_load": jnp.zeros((max(cfg.n_experts, 1),), jnp.float32),
+    }
+
+
+def _apply_layer(bp: Params, cfg: ModelConfig, j: int, x, angles):
+    kind = cfg.layer_kind(j)
+    h = L.apply_norm(bp["norm1"], cfg, x)
+    if kind == "a":
+        h = L.attn_forward(bp["attn"], cfg, h, angles, window=cfg.sliding_window)
+    else:
+        h = S.ssm_forward(bp["ssm"], cfg, h)
+    x = x + h
+    metrics = _zero_metrics(cfg)
+    if cfg.has_ffn:
+        h = L.apply_norm(bp["norm2"], cfg, x)
+        is_moe = cfg.layer_is_moe(j)
+        h, metrics = L.ffn_apply(
+            bp["moe"] if is_moe else bp["mlp"], cfg, h, is_moe=is_moe
+        )
+        x = x + h
+    return x, metrics
+
+
+def embed_inputs(
+    params: Params, cfg: ModelConfig, tokens: jax.Array, patch_embeds=None
+) -> jax.Array:
+    x = params["embed"][tokens]
+    if cfg.n_patches and patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def decoder_forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, S_text)
+    *,
+    patch_embeds: jax.Array | None = None,  # (B, n_patches, d) VLM stub
+    positions: jax.Array | None = None,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Returns (logits (B, S_total, V), moe metrics summed over layers)."""
+    x = embed_inputs(params, cfg, tokens, patch_embeds)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = build_positions(cfg, b, s)
+    needs_rope = "a" in cfg.pattern
+    angles = L.rope_angles(cfg, positions) if needs_rope else jnp.zeros((b, s, 1))
+
+    def block_body(carry, bp):
+        x, acc = carry
+        for j in range(cfg.block_len):
+            x, m = _apply_layer(bp[f"layer{j}"], cfg, j, x, angles)
+            acc = jax.tree.map(jnp.add, acc, m)
+        return (x, acc), None
+
+    if cfg.remat:
+        policy = (
+            jax.checkpoint_policies.dots_saveable
+            if cfg.remat_policy == "dots"
+            else None
+        )
+        body = jax.checkpoint(block_body, policy=policy)
+    else:
+        body = block_body
+    (x, metrics), _ = scan_blocks(cfg, body, (x, _zero_metrics(cfg)), params["blocks"])
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, metrics
+
+
+# ---------------------------------------------------------------------------
+# Cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def attn_cache_len(cfg: ModelConfig, max_seq: int) -> int:
+    return min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+
+
+def init_decoder_cache(
+    cfg: ModelConfig, batch: int, max_seq: int, dtype
+) -> Params:
+    """Cache pytree with leading (n_blocks,) axis per layer slot."""
+    nb = cfg.n_blocks
+    cache: Params = {}
+    for j in range(cfg.block_len):
+        if cfg.layer_kind(j) == "a":
+            length = attn_cache_len(cfg, max_seq)
+            one = L.init_kv_cache(cfg, batch, length, dtype)
+        else:
+            one = S.init_ssm_cache(cfg, batch, dtype)
+        cache[f"layer{j}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (nb,) + a.shape).copy(), one
+        )
+    return cache
+
+
+def decoder_prefill(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    cache: Params,
+    *,
+    patch_embeds: jax.Array | None = None,
+) -> tuple[jax.Array, Params]:
+    """Run the full prompt, fill the cache, return last-position logits."""
+    x = embed_inputs(params, cfg, tokens, patch_embeds)
+    b, s, _ = x.shape
+    positions = build_positions(cfg, b, s)
+    needs_rope = "a" in cfg.pattern
+    angles = L.rope_angles(cfg, positions) if needs_rope else jnp.zeros((b, s, 1))
+
+    def block_body(x, inp):
+        bp, c = inp
+        new_c = {}
+        for j in range(cfg.block_len):
+            lp = bp[f"layer{j}"]
+            kind = cfg.layer_kind(j)
+            h = L.apply_norm(lp["norm1"], cfg, x)
+            if kind == "a":
+                h, new_c[f"layer{j}"] = L.prefill_into_cache(
+                    lp["attn"], cfg, h, angles, c[f"layer{j}"],
+                    window=cfg.sliding_window,
+                )
+            else:
+                h, state, conv = S.ssm_forward_with_state(lp["ssm"], cfg, h)
+                new_c[f"layer{j}"] = {"state": state, "conv": conv.astype(c[f"layer{j}"]["conv"].dtype)}
+            x = x + h
+            if cfg.has_ffn:
+                h = L.apply_norm(lp["norm2"], cfg, x)
+                is_moe = cfg.layer_is_moe(j)
+                h, _ = L.ffn_apply(
+                    lp["moe"] if is_moe else lp["mlp"], cfg, h, is_moe=is_moe
+                )
+                x = x + h
+        return x, new_c
+
+    x, new_cache = scan_blocks(cfg, block_body, x, (params["blocks"], cache))
+    x = L.apply_norm(params["final_norm"], cfg, x[:, -1:])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, new_cache
+
+
+def decoder_decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    token: jax.Array,  # (B, 1)
+    cache: Params,
+    position: jax.Array,  # scalar int32 absolute position
+) -> tuple[jax.Array, Params]:
+    """One token through the stack against the cache. Returns (logits, cache).
+
+    `position` is the absolute sequence index (cache bookkeeping).  For
+    M-RoPE (VLM) the rotary streams advance as text_pos + grid_side after the
+    vision prefix (matching build_positions), so the rope position is derived
+    from it here — decode tokens are assumed to be text (after the prefix).
+    """
+    x = params["embed"][token]
+    if cfg.rope_mode == "mrope":
+        side = max(int(cfg.n_patches**0.5), 1)
+        rope_position = position - cfg.n_patches + side
+    else:
+        rope_position = position
+
+    def block_body(x, inp):
+        bp, c = inp
+        new_c = {}
+        for j in range(cfg.block_len):
+            lp = bp[f"layer{j}"]
+            kind = cfg.layer_kind(j)
+            h = L.apply_norm(lp["norm1"], cfg, x)
+            if kind == "a":
+                h, new_c[f"layer{j}"] = L.attn_decode(
+                    lp["attn"], cfg, h, c[f"layer{j}"], position,
+                    window=cfg.sliding_window, rope_position=rope_position,
+                )
+            else:
+                h, new_c[f"layer{j}"] = S.ssm_decode(lp["ssm"], cfg, h, c[f"layer{j}"])
+            x = x + h
+            if cfg.has_ffn:
+                h = L.apply_norm(lp["norm2"], cfg, x)
+                is_moe = cfg.layer_is_moe(j)
+                h, _ = L.ffn_apply(
+                    lp["moe"] if is_moe else lp["mlp"], cfg, h, is_moe=is_moe
+                )
+                x = x + h
+        return x, new_c
+
+    x, new_cache = scan_blocks(cfg, block_body, x, (params["blocks"], cache))
+    x = L.apply_norm(params["final_norm"], cfg, x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, new_cache

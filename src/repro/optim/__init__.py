@@ -1,0 +1,31 @@
+"""Optimizers and LR schedules, from scratch (optax is not available).
+
+Functional style: an `Optimizer` is (init_fn, update_fn) where
+  state = init_fn(params)
+  updates, state = update_fn(grads, state, params)
+  params = apply_updates(params, updates)
+"""
+
+from .optimizers import (
+    Optimizer,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+    lion,
+    sgd,
+)
+from .schedules import constant, cosine_warmup, linear_warmup
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "apply_updates",
+    "clip_by_global_norm",
+    "constant",
+    "cosine_warmup",
+    "global_norm",
+    "linear_warmup",
+    "lion",
+    "sgd",
+]

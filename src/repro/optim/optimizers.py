@@ -1,0 +1,139 @@
+"""AdamW / SGD-momentum / Lion, plus global-norm clipping.
+
+States are plain pytrees (dicts) so they checkpoint and shard like params:
+the sharding rules in `repro.sharding` propagate a parameter's PartitionSpec
+to its optimizer moments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree], tuple[Pytree, Pytree]]
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    return jnp.sqrt(
+        jax.tree.reduce(
+            jnp.add, jax.tree.map(lambda x: jnp.sum(jnp.square(x)), tree), 0.0
+        )
+    )
+
+
+def clip_by_global_norm(tree: Pytree, max_norm: float) -> tuple[Pytree, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: x * scale, tree), norm
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def adamw(
+    schedule: Schedule,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float | None = 1.0,
+) -> Optimizer:
+    """AdamW with decoupled weight decay; moments kept in f32."""
+
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": zeros,
+            "nu": jax.tree.map(jnp.copy, zeros),
+        }
+
+    def update(grads, state, params):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state["step"] + 1
+        lr = schedule(step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            return -lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32))
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(schedule: Schedule, *, momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mom": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        del params
+        step = state["step"] + 1
+        lr = schedule(step)
+        mom = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state["mom"], grads
+        )
+        if nesterov:
+            updates = jax.tree.map(
+                lambda m, g: -lr * (momentum * m + g.astype(jnp.float32)), mom, grads
+            )
+        else:
+            updates = jax.tree.map(lambda m: -lr * m, mom)
+        return updates, {"step": step, "mom": mom}
+
+    return Optimizer(init=init, update=update)
+
+
+def lion(
+    schedule: Schedule,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.99,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    """Lion (sign-momentum) — cheap state (one moment), handy for huge models."""
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = schedule(step)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        def upd(m, g, p):
+            return -lr * (
+                jnp.sign(b1 * m + (1 - b1) * g) + weight_decay * p.astype(jnp.float32)
+            )
+
+        updates = jax.tree.map(upd, state["mu"], grads, params)
+        mu = jax.tree.map(lambda m, g: b2 * m + (1 - b2) * g, state["mu"], grads)
+        return updates, {"step": step, "mu": mu}
+
+    return Optimizer(init=init, update=update)

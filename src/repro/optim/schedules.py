@@ -1,0 +1,35 @@
+"""Learning-rate schedules as step -> lr callables (jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    """Linear warmup then linear decay to final_frac * lr."""
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        decay = lr * (1.0 - (1.0 - final_frac) * frac)
+        return jnp.where(step < warmup, warm, decay)
+
+    return fn
+
+
+def cosine_warmup(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    """Linear warmup then cosine decay to final_frac * lr."""
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1.0 - final_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, lr * cos)
+
+    return fn

@@ -1,0 +1,19 @@
+"""Sharding rules: parameter/activation PartitionSpecs for the production mesh."""
+
+from .rules import (
+    batch_pspecs,
+    cache_pspecs,
+    data_axes,
+    opt_state_pspecs,
+    param_pspecs,
+    token_pspec,
+)
+
+__all__ = [
+    "batch_pspecs",
+    "cache_pspecs",
+    "data_axes",
+    "opt_state_pspecs",
+    "param_pspecs",
+    "token_pspec",
+]

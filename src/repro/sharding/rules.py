@@ -1,0 +1,212 @@
+"""Divisibility-aware sharding rules (DESIGN.md Sec. 6).
+
+Policy:
+  * tensor parallelism over the `model` axis: attention heads, FFN hidden,
+    experts (expert parallelism), vocab;
+  * data parallelism over (`pod`, `data`) for activations / batch dims;
+  * optional FSDP (cfg.fsdp): the complementary weight dim additionally
+    sharded over `data`;
+  * every proposed axis is dropped if it does not divide the dim (e.g.
+    smollm's 9 heads vs model=16 -> attention replicated on `model`), which
+    guarantees all 10 x 4 combos lower while keeping sharding maximal
+    elsewhere.
+
+Optimizer moments inherit the parameter specs (so AdamW state shards
+identically to weights).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+Pytree = Any
+
+# parameter collections that carry a leading stacked-layer axis
+_STACKED_ROOTS = ("blocks", "enc_layers", "dec_layers")
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def _fit(dim: int, mesh: Mesh, axes):
+    """Return `axes` if it divides dim, else None (replicate fallback)."""
+    if axes is None:
+        return None
+    if dim % _axis_size(mesh, axes) == 0:
+        return axes
+    if isinstance(axes, tuple) and len(axes) > 1:
+        # try a prefix (e.g. drop 'pod' but keep 'data')
+        for k in range(len(axes) - 1, 0, -1):
+            sub = axes[:k]
+            if dim % _axis_size(mesh, sub) == 0:
+                return sub
+    return None
+
+
+def _keys(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return out
+
+
+def _param_spec(keys: list[str], shape: tuple[int, ...], mesh: Mesh, cfg: ModelConfig):
+    """Spec for one parameter leaf, EXCLUDING any stacked-layer leading axis."""
+    name = keys[-1]
+    ctx = keys[-2] if len(keys) >= 2 else ""
+    ctx2 = keys[-3] if len(keys) >= 3 else ""
+    fsdp = "data" if cfg.fsdp else None
+
+    def fit(dim, axes):
+        return _fit(dim, mesh, axes)
+
+    # --- embeddings / heads ---
+    if name == "embed":
+        return P(fit(shape[0], "model"), fit(shape[1], fsdp))
+    if name == "lm_head":
+        return P(fit(shape[0], fsdp), fit(shape[1], "model"))
+    if name == "dec_pos":
+        return P(None, None)
+
+    # --- MoE expert weights: (E, d, f) / (E, f, d); expert parallel on model
+    if ctx == "moe" and name in ("wg", "wu") and len(shape) == 3:
+        return P(fit(shape[0], "model"), fit(shape[1], fsdp), None)
+    if ctx == "moe" and name == "wd" and len(shape) == 3:
+        return P(fit(shape[0], "model"), None, fit(shape[2], fsdp))
+    if name == "router":
+        return P(None, None)
+
+    # --- attention projections ---
+    if ctx in ("wq", "wk", "wv") and ctx2 in ("attn", "self_attn", "cross_attn"):
+        if name == "w":
+            return P(fit(shape[0], fsdp), fit(shape[1], "model"))
+        return P(fit(shape[0], "model"))  # bias
+    if ctx == "wo" and ctx2 in ("attn", "self_attn", "cross_attn"):
+        if name == "w":
+            return P(fit(shape[0], "model"), fit(shape[1], fsdp))
+        return P(None)
+
+    # --- dense MLP / shared expert: {wg,wu}: (d,f), wd: (f,d) ---
+    if ctx in ("wg", "wu") and name == "w":
+        return P(fit(shape[0], fsdp), fit(shape[1], "model"))
+    if ctx == "wd" and name == "w":
+        return P(fit(shape[0], "model"), fit(shape[1], fsdp))
+    if ctx in ("wg", "wu", "wd") and name == "b":
+        return P(fit(shape[0], "model") if ctx != "wd" else None)
+
+    # --- SSM mixer ---
+    if ctx == "in_proj" and name == "w":
+        return P(fit(shape[0], fsdp), fit(shape[1], "model"))
+    if ctx == "in_proj" and name == "b":
+        return P(fit(shape[0], "model"))
+    if ctx == "out_proj" and name == "w":
+        return P(fit(shape[0], "model"), fit(shape[1], fsdp))
+    if ctx == "out_proj" and name == "b":
+        return P(None)
+    if name == "conv_w":
+        return P(None, fit(shape[1], "model"))
+    if name == "conv_b":
+        return P(fit(shape[0], "model"))
+    if name in ("A_log", "D", "dt_bias"):
+        return P(fit(shape[0], "model"))
+    if name == "norm_scale":
+        return P(fit(shape[0], "model"))
+
+    # --- norms and anything else: replicate ---
+    return P(*([None] * len(shape)))
+
+
+def param_pspecs(cfg: ModelConfig, abstract_params: Pytree, mesh: Mesh) -> Pytree:
+    """PartitionSpec pytree matching the params pytree."""
+
+    def one(path, leaf):
+        keys = _keys(path)
+        shape = tuple(leaf.shape)
+        stacked = bool(keys) and keys[0] in _STACKED_ROOTS
+        if stacked:
+            inner = _param_spec(keys, shape[1:], mesh, cfg)
+            return P(None, *inner)
+        return _param_spec(keys, shape, mesh, cfg)
+
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def opt_state_pspecs(cfg: ModelConfig, abstract_opt: Pytree, param_specs: Pytree) -> Pytree:
+    """Moments inherit param specs; scalars replicate."""
+
+    def build_with_key(k, v):
+        if k in ("mu", "nu", "mom"):
+            return param_specs
+        return P()
+
+    return {k: build_with_key(k, v) for k, v in abstract_opt.items()}
+
+
+def token_pspec(mesh: Mesh, ndim: int = 2) -> P:
+    """Batch-sharded spec for (B, S[, ...]) arrays."""
+    return P(data_axes(mesh), *([None] * (ndim - 1)))
+
+
+def batch_pspecs(cfg: ModelConfig, abstract_batch: Pytree, mesh: Mesh) -> Pytree:
+    dp = data_axes(mesh)
+
+    def one(path, leaf):
+        b = leaf.shape[0]
+        fitted = _fit(b, mesh, dp)
+        return P(fitted, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_batch)
+
+
+def cache_pspecs(cfg: ModelConfig, abstract_cache: Pytree, mesh: Mesh) -> Pytree:
+    """KV / SSM cache specs.
+
+    kv k/v:   (nb, B, L, K, hd)  -> (None, dp, None, model?, None)
+    kv pos:   (nb, B, L)         -> (None, dp, None)
+    ssm state:(nb, B, H, P, N)   -> (None, dp, model?, None, None)
+    ssm conv: (nb, B, K-1, C)    -> (None, dp, None, model?)
+    cross k/v:(nl, B, T, K, hd)  -> like kv without ring dim semantics
+    """
+    dp = data_axes(mesh)
+
+    def one(path, leaf):
+        keys = _keys(path)
+        name = keys[-1]
+        shape = tuple(leaf.shape)
+        bdim = _fit(shape[1], mesh, dp)
+        if name in ("k", "v", "cross_k", "cross_v") and len(shape) == 5:
+            head_ax = _fit(shape[3], mesh, "model")
+            if head_ax is not None:
+                return P(None, bdim, None, head_ax, None)
+            # kv heads don't divide the model axis (e.g. qwen1.5's 40 vs 16):
+            # shard the cache LENGTH dim instead.  Attention over a
+            # length-sharded cache stays local up to tiny softmax-stat and
+            # output psums, vs all-gathering the entire cache (§Perf H1).
+            return P(None, bdim, _fit(shape[2], mesh, "model"), None, None)
+        if name == "pos":
+            return P(None, bdim, _fit(shape[2], mesh, "model"))
+        if name == "state" and len(shape) == 5:
+            return P(None, bdim, _fit(shape[2], mesh, "model"), None, None)
+        if name == "conv" and len(shape) == 4:
+            return P(None, bdim, None, _fit(shape[3], mesh, "model"))
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_cache)

@@ -1,0 +1,66 @@
+"""Centralized regularized kernel least squares (paper Eq. 4/6)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Kernel, fit_krr
+from repro.core.centralized import mse, predict
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 10_000), n=st.integers(5, 40))
+def test_normal_equations(seed, n):
+    """c solves (K + lam I) c = y exactly."""
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1, 1, size=(n, 2)).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+    kern = Kernel("rbf", gamma=0.7)
+    lam = 0.1
+    m = fit_krr(x, y, kern, lam)
+    k = np.asarray(kern(jnp.asarray(x), jnp.asarray(x)))
+    resid = (k + lam * np.eye(n)) @ np.asarray(m.coef) - y
+    assert np.abs(resid).max() < 1e-3
+
+
+def test_interpolation_limit():
+    """lam -> 0 reproduces training targets (kernel matrix well conditioned)."""
+    rng = np.random.default_rng(0)
+    x = np.linspace(-1, 1, 10)[:, None].astype(np.float32)
+    y = rng.normal(size=10).astype(np.float32)
+    # gamma=20 keeps the Gram matrix well conditioned in f32
+    m = fit_krr(x, y, Kernel("rbf", gamma=20.0), lam=1e-5)
+    pred = predict(m, x)
+    np.testing.assert_allclose(np.asarray(pred), y, atol=1e-3)
+
+
+def test_regularization_shrinks_norm():
+    rng = np.random.default_rng(1)
+    x = rng.uniform(-1, 1, (30, 1)).astype(np.float32)
+    y = rng.normal(size=30).astype(np.float32)
+    kern = Kernel("rbf", gamma=1.0)
+    small = fit_krr(x, y, kern, 1e-4)
+    big = fit_krr(x, y, kern, 10.0)
+    assert float(jnp.linalg.norm(big.coef)) < float(jnp.linalg.norm(small.coef))
+
+
+def test_predict_via_pallas_matches_dense():
+    rng = np.random.default_rng(2)
+    x = rng.uniform(-1, 1, (40, 2)).astype(np.float32)
+    y = rng.normal(size=40).astype(np.float32)
+    m = fit_krr(x, y, Kernel("rbf", gamma=1.3), 0.05)
+    xq = rng.uniform(-1, 1, (33, 2)).astype(np.float32)
+    a = predict(m, xq, use_pallas=False)
+    b = predict(m, xq, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_linear_kernel_recovers_line():
+    """Case-1 sanity: linear kernel fits eta(x)=5x+5 with low noise."""
+    rng = np.random.default_rng(3)
+    x = rng.uniform(-1, 1, (60, 1)).astype(np.float32)
+    y = (5 * x[:, 0] + 5 + 0.01 * rng.normal(size=60)).astype(np.float32)
+    m = fit_krr(x, y, Kernel("linear", bias=1.0), lam=1e-3)
+    xq = np.linspace(-1, 1, 21)[:, None].astype(np.float32)
+    err = mse(m, xq, 5 * xq[:, 0] + 5)
+    assert float(err) < 1e-2

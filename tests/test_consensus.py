@@ -1,0 +1,153 @@
+"""SOP-consensus (gossip) properties — the paper's technique in parameter
+space (DESIGN.md Sec. 3)."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import consensus
+
+
+def _stacked(seed, n, shapes=((4, 3), (5,))):
+    rng = np.random.default_rng(seed)
+    return {
+        f"p{i}": jnp.asarray(rng.normal(size=(n,) + s).astype(np.float32))
+        for i, s in enumerate(shapes)
+    }
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 1000), logn=st.integers(1, 4))
+def test_hypercube_sweep_equals_global_mean(seed, logn):
+    """Lemma 3.1 analogue: the complete pairing sweep == all-reduce mean."""
+    n = 2**logn
+    tree = _stacked(seed, n)
+    out = consensus.sim_gossip_sweep(tree, consensus.hypercube_schedule(n))
+    for k, v in out.items():
+        mean = jnp.mean(tree[k], axis=0, keepdims=True)
+        np.testing.assert_allclose(
+            np.asarray(v), np.broadcast_to(np.asarray(mean), v.shape), atol=1e-5
+        )
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 1000), n=st.sampled_from([4, 6, 8]), rounds=st.integers(1, 12))
+def test_ring_gossip_fejer_monotone(seed, n, rounds):
+    """Disagreement sum_i ||theta_i - mean||^2 never increases (Lemma 2.1)."""
+    tree = _stacked(seed, n)
+    sched = consensus.ring_schedule(n)
+    d_prev = float(consensus.sim_consensus_sq_distance(tree))
+    for r in range(rounds):
+        tree = consensus.sim_pairwise_project(tree, sched[r % 2])
+        d = float(consensus.sim_consensus_sq_distance(tree))
+        assert d <= d_prev * (1 + 1e-5) + 1e-7
+        d_prev = d
+
+
+def test_ring_gossip_converges_to_mean():
+    tree = _stacked(3, 8)
+    means = {k: jnp.mean(v, axis=0, keepdims=True) for k, v in tree.items()}
+    for r in range(200):
+        tree = consensus.sim_pairwise_project(
+            tree, consensus.ring_schedule(8)[r % 2]
+        )
+    for k, v in tree.items():
+        np.testing.assert_allclose(
+            np.asarray(v), np.broadcast_to(np.asarray(means[k]), v.shape), atol=1e-4
+        )
+
+
+def test_pairwise_projection_preserves_sum():
+    """Averaging projections conserve the replica sum (mass conservation)."""
+    tree = _stacked(5, 8)
+    total0 = {k: np.asarray(v.sum(0)) for k, v in tree.items()}
+    tree2 = consensus.sim_gossip_sweep(tree, consensus.ring_schedule(8))
+    for k, v in tree2.items():
+        np.testing.assert_allclose(np.asarray(v.sum(0)), total0[k], atol=1e-4)
+
+
+def test_device_gossip_matches_sim_subprocess():
+    """ppermute-based device implementation == host simulator (4 devices)."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import consensus
+
+n = 4
+rng = np.random.default_rng(0)
+stacked = {"w": jnp.asarray(rng.normal(size=(n, 3, 2)).astype(np.float32))}
+sched = consensus.hypercube_schedule(n)
+sim = consensus.sim_gossip_sweep(stacked, sched)
+
+mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+def dev(tree):
+    t = jax.tree.map(lambda a: a[0], tree)
+    for s in sched:
+        t = consensus.pairwise_project(t, "data", s)
+    return jax.tree.map(lambda a: a[None], t)
+out = jax.jit(jax.shard_map(dev, mesh=mesh, in_specs=(P("data"),), out_specs=P("data"), check_vma=False))(stacked)
+assert np.allclose(np.asarray(out["w"]), np.asarray(sim["w"]), atol=1e-5)
+d = jax.jit(jax.shard_map(
+    lambda t: consensus.consensus_sq_distance(jax.tree.map(lambda a: a[0], t), "data")[None],
+    mesh=mesh, in_specs=(P("data"),), out_specs=P("data"), check_vma=False))(out)
+assert float(np.asarray(d)[0]) < 1e-8
+print("OK")
+"""
+    env = dict(os.environ, PYTHONPATH="src")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True,
+                         env=env, cwd=root)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+def test_allreduce_mode_keeps_replicas_identical_subprocess():
+    """dp_mode=allreduce: stacked replicas stay bit-identical across steps."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.configs import get_config
+from repro.models import init_params, make_train_step
+from repro.optim import sgd, constant
+from repro.data import synthetic_lm_stream
+
+cfg = get_config("smollm-135m", variant="smoke")
+opt = sgd(constant(1e-2))
+step = make_train_step(cfg, opt, dp_axis="data", dp_mode="allreduce")
+n = 4
+mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+params = init_params(cfg, jax.random.PRNGKey(0))
+opt_state = opt.init(params)
+stack = lambda a: jnp.broadcast_to(a[None], (n,) + a.shape)
+params = jax.tree.map(stack, params); opt_state = jax.tree.map(stack, opt_state)
+stream = synthetic_lm_stream(cfg.vocab_size, 32, 8, seed=0)
+
+def dev(p, o, b):
+    p1 = jax.tree.map(lambda a: a[0], p); o1 = jax.tree.map(lambda a: a[0], o)
+    p1, o1, m = step(p1, o1, b)
+    return jax.tree.map(lambda a: a[None], p1), jax.tree.map(lambda a: a[None], o1)
+j = jax.jit(jax.shard_map(dev, mesh=mesh, in_specs=(P("data"), P("data"), P("data")),
+            out_specs=(P("data"), P("data")), check_vma=False))
+for i in range(3):
+    b = {k: jnp.asarray(v) for k, v in stream.batch_at(i).items()}
+    params, opt_state = j(params, opt_state, b)
+w = np.asarray(jax.tree.leaves(params)[0])
+for r in range(1, 4):
+    assert np.array_equal(w[0], w[r]), r
+print("OK")
+"""
+    env = dict(os.environ, PYTHONPATH="src")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True,
+                         env=env, cwd=root)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout

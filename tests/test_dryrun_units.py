@@ -1,0 +1,57 @@
+"""Unit tests for the dry-run's HLO collective parser and config overrides.
+
+These import launch.dryrun, which sets the 512-device XLA flag at import —
+safe here because the flag only takes effect if jax has NOT been initialized
+yet, and other tests in the session already initialize it with 1 device.
+The pure-python helpers under test never touch devices.
+"""
+
+import dataclasses
+
+from repro.configs import get_config
+from repro.launch.dryrun import apply_overrides, collective_bytes
+
+
+HLO = """
+ENTRY %main (p0: f32[16,128]) -> f32[16,128] {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ar = f32[16,128]{1,0} all-reduce(%p0), replica_groups={}, to_apply=%add
+  %ag = bf16[4,256]{1,0} all-gather(%conv), dimensions={0}
+  %ags = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-gather-start(%x), dimensions={0}
+  %agd = f32[8,8]{1,0} all-gather-done(%ags)
+  %rs = f32[2,128]{1,0} reduce-scatter(%y), dimensions={0}, to_apply=%add
+  %a2a = s32[64]{0} all-to-all(%z), dimensions={0}
+  %cp = u8[1024]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %not_a_collective = f32[999]{0} add(%p0, %p0)
+}
+"""
+
+
+def test_collective_parser_categories():
+    out = collective_bytes(HLO)
+    assert out["all-reduce"] == 16 * 128 * 4
+    # plain all-gather + the -start line (tuple of two f32[8,8]); -done excluded
+    assert out["all-gather"] == 4 * 256 * 2 + 2 * (8 * 8 * 4)
+    assert out["reduce-scatter"] == 2 * 128 * 4
+    assert out["all-to-all"] == 64 * 4
+    assert out["collective-permute"] == 1024 * 1
+    assert out["count"] == 6
+
+
+def test_collective_parser_ignores_noise():
+    out = collective_bytes("%x = f32[10]{0} add(%a, %b)\n")
+    assert out["count"] == 0 and sum(v for k, v in out.items() if k != "count") == 0
+
+
+def test_apply_overrides_coercion():
+    cfg = get_config("mamba2-370m")
+    out = apply_overrides(cfg, ["ssm_chunk=64", "remat=true", "capacity_factor=2.5"])
+    assert out.ssm_chunk == 64 and out.remat is True
+    assert out.capacity_factor == 2.5
+    # untouched fields preserved
+    assert out.vocab_size == cfg.vocab_size
+
+
+def test_apply_overrides_empty_is_identity():
+    cfg = get_config("smollm-135m")
+    assert apply_overrides(cfg, []) is cfg

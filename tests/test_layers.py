@@ -1,0 +1,118 @@
+"""Layer-level unit tests: norms, RoPE/M-RoPE, attention masks, MLPs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+
+
+def _cfg(**kw):
+    base = dict(
+        name="l", n_layers=1, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+        d_ff=64, vocab_size=64,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_rmsnorm_unit_scale():
+    cfg = _cfg()
+    p = L.norm_init(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 32)) * 10
+    y = L.apply_norm(p, cfg, x)
+    ms = jnp.mean(jnp.square(y), axis=-1)
+    np.testing.assert_allclose(np.asarray(ms), 1.0, atol=1e-3)
+
+
+def test_layernorm_zero_mean():
+    cfg = _cfg(norm="layernorm")
+    p = L.norm_init(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 32)) + 3
+    y = L.apply_norm(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0.0, atol=1e-4)
+
+
+def test_rope_preserves_norm_and_relative_shift():
+    cfg = _cfg()
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 6, 2, 8))
+    pos = jnp.arange(6)[None, :]
+    ang = L.rope_angles(cfg, pos)
+    y = L.apply_rope(x, ang)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(y, axis=-1)),
+        np.asarray(jnp.linalg.norm(x, axis=-1)),
+        rtol=1e-5,
+    )
+    # relative property: <q_i, k_j> depends only on i - j
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 1, 8))
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, 8, 1, 8))
+    q0 = jnp.tile(q[:, :1], (1, 8, 1, 1))
+    k0 = jnp.tile(k[:, :1], (1, 8, 1, 1))
+    angs = L.rope_angles(cfg, jnp.arange(8)[None, :])
+    qr, kr = L.apply_rope(q0, angs), L.apply_rope(k0, angs)
+    dots = jnp.einsum("bshd,bshd->bs", qr[:, 2:], kr[:, :-2])
+    np.testing.assert_allclose(np.asarray(dots), np.asarray(dots)[0, 0], rtol=1e-4)
+
+
+def test_mrope_matches_standard_when_streams_equal():
+    """If t/h/w position streams coincide, M-RoPE must equal standard RoPE."""
+    cfg_m = _cfg(rope_mode="mrope", mrope_sections=(1, 1, 2))
+    cfg_s = _cfg()
+    pos = jnp.arange(5)[None, :]
+    pos3 = jnp.broadcast_to(pos[:, None, :], (1, 3, 5))
+    a_m = L.rope_angles(cfg_m, pos3)
+    a_s = L.rope_angles(cfg_s, pos)
+    np.testing.assert_allclose(np.asarray(a_m), np.asarray(a_s), rtol=1e-6)
+
+
+def test_causal_mask_and_window():
+    m = np.asarray(L.causal_mask(5, 5))
+    assert m[0, 1] == False and m[4, 0] == True and m[2, 2] == True
+    mw = np.asarray(L.causal_mask(5, 5, window=2))
+    assert mw[4, 3] == True and mw[4, 2] == False
+
+
+def test_attention_causality():
+    """Changing a future token must not change past outputs."""
+    cfg = _cfg()
+    p = L.attn_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 32))
+    ang = L.rope_angles(cfg, jnp.arange(8)[None, :])
+    y1 = L.attn_forward(p, cfg, x, ang)
+    x2 = x.at[0, 6].set(99.0)
+    y2 = L.attn_forward(p, cfg, x2, ang)
+    np.testing.assert_allclose(np.asarray(y1[0, :6]), np.asarray(y2[0, :6]), atol=1e-5)
+    assert float(jnp.abs(y1[0, 6:] - y2[0, 6:]).max()) > 1e-4
+
+
+def test_gqa_heads_share_kv():
+    """With n_kv_heads=1, all query heads attend to identical K/V."""
+    cfg = _cfg(n_heads=4, n_kv_heads=1)
+    p = L.attn_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 32))
+    ang = L.rope_angles(cfg, jnp.arange(4)[None, :])
+    y = L.attn_forward(p, cfg, x, ang)
+    assert y.shape == (1, 4, 32)
+
+
+@pytest.mark.parametrize("act", ["silu", "squared_relu", "gelu"])
+def test_mlp_variants(act):
+    cfg = _cfg(act=act)
+    p = L.mlp_init(jax.random.PRNGKey(0), cfg, 64)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 32))
+    y = L.mlp(p, cfg, x)
+    assert y.shape == x.shape and bool(jnp.isfinite(y).all())
+    if act == "squared_relu":
+        # squared-relu MLP output is 0 for inputs mapping to negative preacts
+        zero = L.mlp(p, cfg, jnp.zeros_like(x))
+        np.testing.assert_allclose(np.asarray(zero), 0.0, atol=1e-6)
+
+
+def test_qkv_bias_config():
+    cfg = _cfg(qkv_bias=True)
+    p = L.attn_init(jax.random.PRNGKey(0), cfg)
+    assert "b" in p["wq"] and "b" in p["wk"] and "b" in p["wv"]
+    assert "b" not in p["wo"]

@@ -1,0 +1,104 @@
+"""MoE dispatch invariants (GShard-style grouped top-k with capacity)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _capacity, moe_apply, moe_init
+
+
+def _cfg(e=4, k=2, group=16, cap=2.0, shared=0):
+    return ModelConfig(
+        name="moe-test", family="moe", n_layers=2, d_model=32, n_heads=2,
+        n_kv_heads=2, head_dim=16, d_ff=64, vocab_size=64, n_experts=e, top_k=k,
+        moe_d_ff=48, moe_group_size=group, capacity_factor=cap,
+        n_shared_experts=shared,
+    )
+
+
+def test_moe_output_shape_and_finite():
+    cfg = _cfg()
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 32))
+    y, m = moe_apply(p, cfg, x)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    assert float(m["aux_loss"]) >= 1.0 - 1e-3  # aux >= 1 at optimum (E*sum f*P >= 1)
+
+
+def test_generous_capacity_conserves_token_mass():
+    """With capacity >> needed, every token reaches all its top-k experts:
+    combine weights per token sum to 1 after renormalization."""
+    cfg = _cfg(cap=8.0)
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 16, 32))
+
+    # recompute dispatch internals via a probe: uniform expert weights ->
+    # output equals weighted mix; easier: check no-drop via expert_load
+    _, m = moe_apply(p, cfg, x)
+    assert float(m["expert_load"].sum()) == pytest.approx(16 * cfg.top_k, abs=1e-3)
+
+
+def test_tight_capacity_drops_tokens():
+    cfg = _cfg(e=2, k=1, group=16, cap=0.5)
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 16, 32))
+    y, m = moe_apply(p, cfg, x)
+    cap = _capacity(cfg, 16)
+    # at most e*cap slots can be filled per group
+    assert float(m["expert_load"].sum()) == pytest.approx(16.0, abs=1e-3)  # routed mass
+    # dropped tokens produce zero output rows (identity-less residual path)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_shared_expert_adds_dense_path():
+    cfg0, cfg1 = _cfg(shared=0), _cfg(shared=1)
+    p1 = moe_init(jax.random.PRNGKey(0), cfg1)
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 8, 32))
+    y1, _ = moe_apply(p1, cfg1, x)
+    # zero the shared expert -> output changes
+    p0 = dict(p1)
+    p0["shared"] = jax.tree.map(jnp.zeros_like, p1["shared"])
+    y0, _ = moe_apply(p0, cfg1, x)
+    assert float(jnp.abs(y1 - y0).max()) > 1e-6
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    e=st.sampled_from([2, 4]),
+    k=st.integers(1, 2),
+    s=st.integers(1, 33),
+    group=st.sampled_from([8, 512]),
+)
+def test_moe_arbitrary_token_counts(e, k, s, group):
+    """Group padding must handle any (B*S) % group remainder exactly."""
+    cfg = _cfg(e=e, k=k, group=group)
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(s), (2, s, 32))
+    y, _ = moe_apply(p, cfg, x)
+    assert y.shape == (2, s, 32)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_decode_single_token_moe():
+    cfg = _cfg()
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 1, 32))
+    y, _ = moe_apply(p, cfg, x)
+    assert y.shape == (4, 1, 32)
+
+
+def test_router_gradient_flows():
+    cfg = _cfg()
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 16, 32))
+
+    def loss(params):
+        y, m = moe_apply(params, cfg, x)
+        return jnp.sum(y**2) + 0.01 * m["aux_loss"]
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["router"]).max()) > 0.0

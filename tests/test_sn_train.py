@@ -1,0 +1,326 @@
+"""SN-Train behaviour tests against the paper's lemmas and claims."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Kernel,
+    build_topology,
+    colored_sweep,
+    fit_krr,
+    init_state,
+    local_only,
+    make_problem,
+    serial_sweep,
+    uniform_sensors,
+    weighted_norm_sq,
+)
+from repro.core import fusion
+from repro.core.centralized import predict
+
+
+def _setup(n=30, radius=0.8, seed=0, kernel=Kernel("rbf", gamma=1.0)):
+    pos = uniform_sensors(n, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    y = np.sin(np.pi * pos[:, 0]) + 0.5 * rng.normal(size=n)
+    topo = build_topology(pos, radius)
+    return topo, kernel, y
+
+
+def test_serial_and_colored_share_fixed_point():
+    """The two engines implement the same SOP (different admissible orderings)
+    and must converge to the same solution of the relaxation.
+
+    Uses a well-conditioned lambda: with the paper's tiny kappa/|N|^2 the
+    subspace angles are O(lambda) and convergence needs ~1e5 sweeps (the
+    weighted norm is still monotone — tested separately below)."""
+    topo, kern, y = _setup()
+    # lambda=0.1 keeps cond(K_s + lambda I) ~ 3e2 so the f32 engines track
+    # the exact SOP to high precision (tiny paper-lambdas are exercised by
+    # the Fejer-monotonicity property test instead).
+    lams = jnp.full((topo.n,), 0.1)
+    prob = make_problem(topo, kern, y, lambdas=lams)
+    st0 = init_state(prob)
+    s = serial_sweep(prob, st0, n_sweeps=600)
+    c = colored_sweep(prob, st0, n_sweeps=600)
+    # tolerance covers the slow O(lambda) tail + f32 solve noise
+    np.testing.assert_allclose(np.asarray(s.z), np.asarray(c.z), atol=5e-3)
+    # Coefficients are a NON-unique parameterization when K_s is singular
+    # (null-space components represent the zero function: c^T K c = 0 =>
+    # f == 0 in H_K), so the engines are compared in function space.
+    # Near-null coef components have update eigenvalue exactly 1
+    # (c <- (K+lI)^{-1} l c == c on null(K)), so f32 noise random-walks
+    # there and evaluates off-grid at ~sqrt(eig)*||c|| ~ 0.05 — hence the
+    # loose functional tolerance; z (above) is the tight invariant.
+    xq = np.linspace(-1, 1, 60)[:, None].astype(np.float32)
+    fs = np.asarray(fusion.evaluate_sensors(prob, s, xq))
+    fc = np.asarray(fusion.evaluate_sensors(prob, c, xq))
+    np.testing.assert_allclose(fs, fc, atol=0.15)
+
+
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 1000))
+def test_weighted_norm_fejer_monotone_paper_lambdas(seed):
+    """Lemma 2.1 in the product space, with the paper's own lambda_i =
+    kappa/|N_i|^2: ||z||^2 + sum_i lambda_i ||f_i||^2 never increases,
+    even on instances whose transients look wild in z-space."""
+    topo, kern, y = _setup(seed=seed)
+    prob = make_problem(topo, kern, y)  # paper default lambdas
+    state = init_state(prob)
+    prev = float(weighted_norm_sq(prob, state))
+    for _ in range(6):
+        state = colored_sweep(prob, state, n_sweeps=1)
+        cur = float(weighted_norm_sq(prob, state))
+        # 3% slack: the local solves run at cond(K_s+lambda I) ~ 1e5 in f32,
+        # so the computed projection is accurate to ~cond * eps_f32 ~ 1e-2.
+        assert cur <= prev * 1.03 + 1e-5, (cur, prev)
+        prev = cur
+
+
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 1000))
+def test_lemma_3_1_fully_connected_equals_centralized(seed):
+    """Complete graph + sum(lambda_i) = lambda  ==>  f_s == centralized f."""
+    n = 20
+    pos = uniform_sensors(n, seed=seed)
+    rng = np.random.default_rng(seed)
+    y = 2.0 * pos[:, 0] + 0.3 * rng.normal(size=n)
+    kern = Kernel("rbf", gamma=1.0)
+    topo = build_topology(pos, radius=10.0)  # complete
+    lam = 0.5
+    prob = make_problem(topo, kern, y, lambdas=jnp.full((n,), lam / n))
+    state = colored_sweep(prob, init_state(prob), n_sweeps=600)
+    model = fit_krr(pos, y, kern, lam=lam)
+    xq = np.linspace(-1, 1, 50)[:, None].astype(np.float32)
+    dist = fusion.fuse(prob, state, xq, "single", sensor=0)
+    cent = predict(model, xq)
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(cent), atol=5e-2)
+
+
+def test_lemma_3_3_estimate_lies_in_neighborhood_span():
+    """Padded coefficients outside N_s must stay exactly zero."""
+    topo, kern, y = _setup(radius=0.3)
+    prob = make_problem(topo, kern, y)
+    state = colored_sweep(prob, init_state(prob), n_sweeps=20)
+    mask = np.asarray(prob.nbr_mask)
+    coef = np.asarray(state.coef)
+    assert (coef[~mask] == 0).all()
+
+
+def test_monotone_message_convergence():
+    """Messages z converge (Cauchy-ish) as T grows — Lemma 3.2 in practice."""
+    topo, kern, y = _setup()
+    prob = make_problem(topo, kern, y, lambdas=jnp.full((topo.n,), 1e-2))
+    st0 = init_state(prob)
+    s10 = colored_sweep(prob, st0, n_sweeps=10)
+    s200 = colored_sweep(prob, st0, n_sweeps=200)
+    s400 = colored_sweep(prob, s200, n_sweeps=200)
+    d_late = float(jnp.linalg.norm(s400.z - s200.z))
+    d_early = float(jnp.linalg.norm(s200.z - s10.z))
+    # linear convergence: each 200-sweep window contracts the tail
+    assert d_late < 0.5 * max(d_early, 1e-6) + 1e-5
+
+
+def test_sn_train_beats_local_only():
+    """Sec 4.3: message passing improves single-sensor global estimates."""
+    topo, kern, y = _setup(n=40, radius=0.8, seed=3)
+    prob = make_problem(topo, kern, y)
+    trained = colored_sweep(prob, init_state(prob), n_sweeps=100)
+    local = local_only(prob)
+    xq = np.linspace(-1, 1, 200)[:, None].astype(np.float32)
+    target = np.sin(np.pi * xq[:, 0])
+    mse_t = float(jnp.mean((fusion.fuse(prob, trained, xq, "single") - target) ** 2))
+    mse_l = float(jnp.mean((fusion.fuse(prob, local, xq, "single") - target) ** 2))
+    assert mse_t < mse_l
+
+
+def test_nn_fusion_competitive_with_centralized():
+    """Sec 4.2: nearest-neighbor fusion ~ centralized estimator."""
+    topo, kern, y = _setup(n=50, radius=0.8, seed=5)
+    lam_i = 1e-3
+    prob = make_problem(topo, kern, y, lambdas=jnp.full((topo.n,), lam_i))
+    state = colored_sweep(prob, init_state(prob), n_sweeps=100)
+    xq = np.linspace(-1, 1, 300)[:, None].astype(np.float32)
+    target = np.sin(np.pi * xq[:, 0])
+    mse_nn = float(jnp.mean((fusion.fuse(prob, state, xq, "nn") - target) ** 2))
+    model = fit_krr(np.asarray(topo.positions), y, kern, lam=50 * lam_i)
+    mse_c = float(jnp.mean((predict(model, xq) - target) ** 2))
+    assert mse_nn < 3.0 * mse_c + 0.05
+
+
+def test_fusion_rules_shapes_and_special_cases():
+    topo, kern, y = _setup()
+    prob = make_problem(topo, kern, y)
+    state = colored_sweep(prob, init_state(prob), n_sweeps=5)
+    xq = np.linspace(-1, 1, 17)[:, None].astype(np.float32)
+    preds = fusion.evaluate_sensors(prob, state, xq)
+    assert preds.shape == (topo.n, 17)
+    # knn with k = n equals the plain average
+    avg = fusion.network_average(preds)
+    knn_all = fusion.knn_fusion(preds, topo.positions, xq, k=topo.n)
+    np.testing.assert_allclose(np.asarray(avg), np.asarray(knn_all), rtol=1e-5)
+    # connectivity-averaged uses degree weights
+    conn = fusion.connectivity_averaged(preds, topo.degrees)
+    assert conn.shape == (17,)
+
+
+def test_sharded_sweep_matches_colored_subprocess():
+    """Sharded engine == colored engine (bitwise-ish), on 4 fake devices."""
+    import subprocess, sys, os
+
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import *
+pos = uniform_sensors(30, seed=0)
+rng = np.random.default_rng(1)
+y = np.sin(np.pi*pos[:,0]) + 0.5*rng.normal(size=30)
+topo = build_topology(pos, 0.8)
+prob = make_problem(topo, Kernel("rbf", gamma=1.0), y, lambdas=jnp.full((30,), 1e-2))
+st0 = init_state(prob)
+ref = colored_sweep(prob, st0, n_sweeps=7)
+mesh = jax.make_mesh((4,), ("sensors",), axis_types=(jax.sharding.AxisType.Auto,))
+sh = sharded_sweep(prob, st0, mesh, axis="sensors", n_sweeps=7)
+assert np.allclose(np.asarray(ref.z), np.asarray(sh.z), atol=1e-3), np.abs(np.asarray(ref.z)-np.asarray(sh.z)).max()
+assert np.allclose(np.asarray(ref.coef), np.asarray(sh.coef), atol=2e-2)
+print("OK")
+"""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Paper Sec. 3.3 optional features: random orderings + robustness
+# ---------------------------------------------------------------------------
+
+import jax
+
+from repro.core import random_sweep, robust_sweep
+
+
+def test_random_ordering_same_fixed_point():
+    """ALOHA-style random sweeps converge to the serial fixed point (z)."""
+    topo, kern, y = _setup()
+    prob = make_problem(topo, kern, y, lambdas=jnp.full((topo.n,), 0.1))
+    st0 = init_state(prob)
+    s = serial_sweep(prob, st0, n_sweeps=400)
+    r = random_sweep(prob, st0, jax.random.PRNGKey(0), n_sweeps=400)
+    np.testing.assert_allclose(np.asarray(s.z), np.asarray(r.z), atol=5e-3)
+
+
+def test_random_ordering_fejer_monotone():
+    topo, kern, y = _setup(seed=4)
+    prob = make_problem(topo, kern, y, lambdas=jnp.full((topo.n,), 1e-2))
+    state = init_state(prob)
+    prev = float(weighted_norm_sq(prob, state))
+    for t in range(5):
+        state = random_sweep(prob, state, jax.random.PRNGKey(t), n_sweeps=1)
+        cur = float(weighted_norm_sq(prob, state))
+        assert cur <= prev * 1.03 + 1e-5
+        prev = cur
+
+
+def test_robust_sweep_all_alive_equals_serial():
+    topo, kern, y = _setup()
+    prob = make_problem(topo, kern, y, lambdas=jnp.full((topo.n,), 0.1))
+    st0 = init_state(prob)
+    t = 20
+    alive = jnp.ones((t, topo.n, topo.d_max), bool)
+    s = serial_sweep(prob, st0, n_sweeps=t)
+    r = robust_sweep(prob, st0, alive, n_sweeps=t)
+    np.testing.assert_allclose(np.asarray(s.z), np.asarray(r.z), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s.coef), np.asarray(r.coef), atol=1e-2)
+
+
+def test_robust_sweep_converges_after_failures_heal():
+    """Paper Sec. 3.3 'Robustness': the iteration converges to the solution
+    implied by the neighborhood occurring infinitely often.  We drop 20% of
+    links for the first 60 sweeps, then heal the network for 300 sweeps: the
+    messages must land on the full-topology fixed point, and every iterate
+    stays finite ('progress is made at each iteration')."""
+    topo, kern, y = _setup(n=40, radius=0.8, seed=3)
+    prob = make_problem(topo, kern, y, lambdas=jnp.full((40,), 0.1))
+    st0 = init_state(prob)
+    t_fail, t_heal = 60, 300
+    key = jax.random.PRNGKey(7)
+    drop = jax.random.bernoulli(key, 0.8, (t_fail, topo.n, topo.d_max))
+    # self link always alive (a sensor can talk to itself)
+    self_mask = np.zeros((topo.n, topo.d_max), bool)
+    idx = np.asarray(prob.nbr_idx[: topo.n])
+    for i in range(topo.n):
+        self_mask[i] = idx[i] == i
+    alive_fail = jnp.asarray(np.asarray(drop) | self_mask[None])
+    # 'progress at each iteration': the degraded sets C_i^t (fewer
+    # constraints) CONTAIN C_i, so projections onto them still Fejér-
+    # decrease the weighted norm (0 lies in every set).
+    state = st0
+    prev = float(weighted_norm_sq(prob, state))
+    for t in range(0, t_fail, 10):
+        state = robust_sweep(prob, state, alive_fail[t : t + 10], n_sweeps=10)
+        cur = float(weighted_norm_sq(prob, state))
+        assert cur <= prev * 1.03 + 1e-5
+        prev = cur
+    assert bool(jnp.isfinite(state.z).all()) and bool(jnp.isfinite(state.coef).all())
+
+    # After healing, the iterates land in the ORIGINAL intersection C.
+    # Note: SOP converges to the projection of its CURRENT point, so the
+    # post-failure solution is a (legitimately) different point of C than
+    # the canonical-init one — the paper's 'solution implied by the
+    # neighborhood occurring infinitely often'.  Feasibility == a further
+    # full sweep is a no-op.
+    alive_heal = jnp.ones((t_heal, topo.n, topo.d_max), bool)
+    final = robust_sweep(prob, state, alive_heal, n_sweeps=t_heal)
+    again = serial_sweep(prob, final, n_sweeps=1)
+    np.testing.assert_allclose(np.asarray(again.z), np.asarray(final.z), atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Paper Sec. 5.2 extension: weighted (heteroscedastic) losses
+# ---------------------------------------------------------------------------
+
+from repro.core import weighted_norm_sq_hetero, weighted_sweep
+
+
+def test_weighted_sweep_unit_weights_equals_serial():
+    topo, kern, y = _setup()
+    prob = make_problem(topo, kern, y, lambdas=jnp.full((topo.n,), 0.1))
+    st0 = init_state(prob)
+    a = serial_sweep(prob, st0, n_sweeps=50)
+    b = weighted_sweep(prob, st0, jnp.ones((topo.n,)), n_sweeps=50)
+    np.testing.assert_allclose(np.asarray(a.z), np.asarray(b.z), atol=1e-4)
+
+
+def test_weighted_sweep_fejer_monotone_in_reweighted_norm():
+    topo, kern, y = _setup(seed=2)
+    prob = make_problem(topo, kern, y, lambdas=jnp.full((topo.n,), 1e-2))
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.uniform(0.2, 5.0, topo.n).astype(np.float32))
+    state = init_state(prob)
+    prev = float(weighted_norm_sq_hetero(prob, state, w))
+    for _ in range(6):
+        state = weighted_sweep(prob, state, w, n_sweeps=1)
+        cur = float(weighted_norm_sq_hetero(prob, state, w))
+        assert cur <= prev * 1.03 + 1e-5, (cur, prev)
+        prev = cur
+
+
+def test_weighted_sweep_high_confidence_fits_tighter():
+    """Sensors with large w_j keep z_j closer to their own measurement."""
+    topo, kern, y = _setup(n=30, radius=0.8, seed=6)
+    prob = make_problem(topo, kern, y, lambdas=jnp.full((30,), 0.1))
+    st0 = init_state(prob)
+    w_hi = jnp.ones((30,)).at[5].set(100.0)
+    w_lo = jnp.ones((30,)).at[5].set(0.01)
+    hi = weighted_sweep(prob, st0, w_hi, n_sweeps=200)
+    lo = weighted_sweep(prob, st0, w_lo, n_sweeps=200)
+    res_hi = abs(float(hi.z[5]) - float(prob.y[5]))
+    res_lo = abs(float(lo.z[5]) - float(prob.y[5]))
+    assert res_hi < res_lo

@@ -1,0 +1,63 @@
+"""Property tests for the generic SOP machinery (paper Sec. 2.1, Lemma 2.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sop import (
+    fejer_distances,
+    project_affine,
+    project_intersection,
+    sop_sweep,
+    sop_sweep_with_trace,
+)
+
+
+def _random_affine_sets(seed, m, k, dim):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, k, dim)).astype(np.float32)
+    # guarantee a common feasible point x*: b_i = A_i x*
+    xstar = rng.normal(size=(dim,)).astype(np.float32)
+    b = np.einsum("mkd,d->mk", a, xstar).astype(np.float32)
+    return jnp.asarray(a), jnp.asarray(b), jnp.asarray(xstar)
+
+
+def test_projection_is_idempotent_and_feasible():
+    a, b, _ = _random_affine_sets(0, 1, 2, 6)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=6), jnp.float32)
+    p = project_affine(x, a[0], b[0])
+    np.testing.assert_allclose(a[0] @ p, b[0], atol=1e-4)
+    p2 = project_affine(p, a[0], b[0])
+    np.testing.assert_allclose(p, p2, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    seed=st.integers(0, 10_000),
+    m=st.integers(2, 5),
+    k=st.integers(1, 3),
+    dim=st.integers(4, 10),
+)
+def test_lemma_2_1_fejer_monotonicity(seed, m, k, dim):
+    """||x_n - x|| <= ||x_{n-1} - x|| for every feasible x (Lemma 2.1)."""
+    a, b, xstar = _random_affine_sets(seed, m, k, dim)
+    x0 = jnp.asarray(np.random.default_rng(seed + 1).normal(size=dim), jnp.float32)
+    _, trace = sop_sweep_with_trace(x0, a, b, n_sweeps=3)
+    d = np.asarray(fejer_distances(jnp.concatenate([x0[None], trace]), xstar))
+    assert (np.diff(d) <= 1e-4 + 1e-4 * d[:-1]).all(), d
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 10_000))
+def test_sop_converges_to_projection_for_subspaces(seed):
+    """For affine sets, SOP -> P_C(x0) (Lemma 2.1 last claim)."""
+    a, b, _ = _random_affine_sets(seed, 3, 1, 5)
+    x0 = jnp.asarray(np.random.default_rng(seed + 7).normal(size=5), jnp.float32)
+    x_inf = sop_sweep(x0, a, b, n_sweeps=400)
+    # iterate is (nearly) feasible for every set
+    for i in range(3):
+        np.testing.assert_allclose(a[i] @ x_inf, b[i], atol=5e-3)
+    # and close to the direct least-norm projection
+    direct = project_intersection(x0, a, b)
+    np.testing.assert_allclose(np.asarray(x_inf), np.asarray(direct), atol=5e-3)

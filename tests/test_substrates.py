@@ -1,0 +1,136 @@
+"""Data pipeline, optimizers, checkpointing, topology coloring."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import latest_step, restore, save
+from repro.core.topology import build_topology, geometric_adjacency, greedy_coloring, uniform_sensors
+from repro.data import case1, case2, sample_field, synthetic_lm_stream
+from repro.optim import adamw, apply_updates, clip_by_global_norm, cosine_warmup, lion, sgd, constant
+
+
+# ---------------- topology ----------------
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 1000), n=st.integers(5, 60), r=st.floats(0.05, 1.5))
+def test_coloring_is_proper_distance2(seed, n, r):
+    pos = uniform_sensors(n, seed=seed)
+    adj = geometric_adjacency(pos, r)
+    g2 = (adj.astype(np.int64) @ adj.astype(np.int64)) > 0
+    colors, n_colors = greedy_coloring(g2)
+    np.fill_diagonal(g2, False)
+    same = colors[:, None] == colors[None, :]
+    assert not (same & g2).any(), "distance-2 conflict in coloring"
+    assert n_colors <= n
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 500), n=st.integers(5, 40))
+def test_topology_padding_invariants(seed, n):
+    pos = uniform_sensors(n, seed=seed)
+    topo = build_topology(pos, 0.5)
+    idx = np.asarray(topo.nbr_idx)
+    mask = np.asarray(topo.nbr_mask)
+    deg = np.asarray(topo.degrees)
+    assert (mask.sum(1) == deg).all()
+    # self in own neighborhood
+    for i in range(n):
+        assert i in idx[i][mask[i]]
+    # color members partition the sensors
+    members = np.asarray(topo.color_members)[np.asarray(topo.color_mask)]
+    assert sorted(members.tolist()) == list(range(n))
+
+
+# ---------------- data ----------------
+
+
+def test_field_cases_match_paper():
+    c1, c2 = case1(), case2()
+    assert c1.noise_sigma == 7.0 and c1.kernel.name == "linear"
+    assert c2.noise_sigma == 1.0 and c2.kernel.name == "rbf"
+    d = sample_field(c2, 50, seed=1)
+    assert d["x"].shape == (50, 1) and d["y"].shape == (50,)
+    np.testing.assert_allclose(d["y_test"], np.sin(np.pi * d["x_test"][:, 0]), atol=1e-5)
+
+
+def test_token_stream_determinism_and_sharding():
+    s = synthetic_lm_stream(1000, 16, 4, seed=9)
+    a, b = s.batch_at(3), s.batch_at(3)
+    assert (a["tokens"] == b["tokens"]).all()
+    # labels are next-token shifted
+    np.testing.assert_array_equal(a["labels"][:, :-1], a["tokens"][:, 1:])
+    # host sharding gives different data
+    s0 = synthetic_lm_stream(1000, 16, 4, seed=9, host_id=0, n_hosts=2)
+    s1 = synthetic_lm_stream(1000, 16, 4, seed=9, host_id=1, n_hosts=2)
+    assert not (s0.batch_at(0)["tokens"] == s1.batch_at(0)["tokens"]).all()
+    assert 0.0 < s.bigram_entropy() < np.log(1000)
+
+
+# ---------------- optimizers ----------------
+
+
+@pytest.mark.parametrize("maker", [
+    lambda: adamw(constant(0.05), weight_decay=0.0),
+    lambda: sgd(constant(0.05)),
+    lambda: lion(constant(0.02), weight_decay=0.0),
+])
+def test_optimizers_minimize_quadratic(maker):
+    opt = maker()
+    params = {"w": jnp.full((8,), 5.0)}
+    state = opt.init(params)
+    best = float("inf")
+    for _ in range(300):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        up, state = opt.update(g, state, params)
+        params = apply_updates(params, up)
+        best = min(best, float(jnp.linalg.norm(params["w"])))
+    # Lion's sign updates oscillate around the optimum on this toy problem,
+    # so assert on the best iterate (all three must pass well below start).
+    assert best < 0.3
+    assert float(jnp.linalg.norm(params["w"])) < 0.25 * (8 * 25) ** 0.5
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_schedule_warmup_then_decay():
+    f = cosine_warmup(1.0, 10, 100, final_frac=0.1)
+    assert float(f(5)) == pytest.approx(0.5)
+    assert float(f(10)) == pytest.approx(1.0, abs=1e-2)
+    assert float(f(100)) == pytest.approx(0.1, abs=1e-2)
+
+
+# ---------------- checkpointing ----------------
+
+
+def test_checkpoint_roundtrip_nested():
+    tree = {
+        "params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+        "opt": [jnp.zeros((2,), jnp.int32), {"mu": jnp.ones((3,))}],
+    }
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 3, tree)
+        save(d, 10, tree)
+        assert latest_step(d) == 10
+        back = restore(d, 10, tree)
+        chk = jax.tree.map(lambda a, b: np.array_equal(np.asarray(a), np.asarray(b)), tree, back)
+        assert all(jax.tree.leaves(chk))
+
+
+def test_checkpoint_shape_mismatch_raises():
+    tree = {"w": jnp.zeros((2, 2))}
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 1, tree)
+        with pytest.raises(ValueError):
+            restore(d, 1, {"w": jnp.zeros((3,))})
