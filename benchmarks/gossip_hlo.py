@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import get_config
 from repro.core import consensus
 from repro.models import init_params, make_train_step
@@ -31,8 +32,7 @@ from repro.optim import constant, sgd
 
 
 def lower_mode(cfg, mode, n_dev=8, batch=8, seq=128):
-    mesh = jax.make_mesh((n_dev,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((n_dev,), ("data",))
     opt = sgd(constant(1e-2))
     # Use a single pairing for the measurement: with the full 2-pairing ring
     # schedule the lax.switch keeps BOTH branches in the HLO text and the
@@ -49,11 +49,10 @@ def lower_mode(cfg, mode, n_dev=8, batch=8, seq=128):
         lift = lambda a: a[None]
         return jax.tree.map(lift, p1), jax.tree.map(lift, o1), m["loss"]
 
-    sharded = jax.shard_map(
+    sharded = compat.shard_map(
         device_fn, mesh=mesh,
         in_specs=(P("data"), P("data"), P("data"), P("data")),
         out_specs=(P("data"), P("data"), P()),
-        check_vma=False,
     )
     params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
     stack = lambda a: jax.ShapeDtypeStruct((n_dev,) + a.shape, a.dtype)

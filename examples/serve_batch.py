@@ -1,7 +1,14 @@
-"""Batched serving example: prefill + greedy decode for any architecture,
-including the SSM path whose state is O(1) in context length.
+"""Batched serving example.
+
+LM mode: prefill + greedy decode for any architecture, including the SSM
+path whose state is O(1) in context length.
+
+Field mode: B concurrent field-estimation workloads trained by the batched
+SN-Train engine, with streaming measurement absorption and fused multi-field
+query evaluation (the paper's algorithm as a throughput-oriented service).
 
 Run:  PYTHONPATH=src python examples/serve_batch.py --arch mamba2-370m --gen 32
+      PYTHONPATH=src python examples/serve_batch.py --mode field --fields 64 --stream 64
 """
 
 import argparse
@@ -14,21 +21,37 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="lm", choices=["lm", "field"])
     ap.add_argument("--arch", default="mamba2-370m")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt_len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--fields", type=int, default=64)
+    ap.add_argument("--sensors", type=int, default=50)
+    ap.add_argument("--sweeps", type=int, default=30)
+    ap.add_argument("--stream", type=int, default=0)
+    ap.add_argument("--queries", type=int, default=256)
     args = ap.parse_args()
 
-    cmd = [
-        sys.executable, "-m", "repro.launch.serve",
-        "--arch", args.arch,
-        "--variant", "full" if args.full else "smoke",
-        "--batch", str(args.batch),
-        "--prompt_len", str(args.prompt_len),
-        "--gen", str(args.gen),
-    ]
+    if args.mode == "field":
+        cmd = [
+            sys.executable, "-m", "repro.launch.serve", "--mode", "field",
+            "--fields", str(args.fields),
+            "--sensors", str(args.sensors),
+            "--sweeps", str(args.sweeps),
+            "--stream", str(args.stream),
+            "--queries", str(args.queries),
+        ]
+    else:
+        cmd = [
+            sys.executable, "-m", "repro.launch.serve",
+            "--arch", args.arch,
+            "--variant", "full" if args.full else "smoke",
+            "--batch", str(args.batch),
+            "--prompt_len", str(args.prompt_len),
+            "--gen", str(args.gen),
+        ]
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     raise SystemExit(subprocess.run(cmd, env=env, cwd=ROOT).returncode)

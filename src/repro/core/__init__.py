@@ -12,7 +12,16 @@ Public surface:
   consensus    — SOP-gossip data parallelism (pairwise projections == gossip)
 """
 
-from . import centralized, consensus, fusion, kernels_math, sn_train, sop, topology
+from . import (
+    centralized,
+    consensus,
+    fusion,
+    kernels_math,
+    sn_train,
+    sop,
+    streaming,
+    topology,
+)
 from .centralized import KRRModel, fit_krr, predict
 from .kernels_math import Kernel
 from .sn_train import (
@@ -20,8 +29,10 @@ from .sn_train import (
     SNTrainState,
     colored_sweep,
     default_lambdas,
+    field_view,
     init_state,
     local_only,
+    make_batch_problem,
     make_problem,
     random_sweep,
     robust_sweep,
@@ -44,11 +55,13 @@ __all__ = [
     "colored_sweep",
     "consensus",
     "default_lambdas",
+    "field_view",
     "fit_krr",
     "fusion",
     "init_state",
     "kernels_math",
     "local_only",
+    "make_batch_problem",
     "make_problem",
     "predict",
     "random_sweep",
@@ -58,6 +71,7 @@ __all__ = [
     "sharded_sweep",
     "sn_train",
     "sop",
+    "streaming",
     "weighted_norm_sq",
     "weighted_norm_sq_hetero",
     "weighted_sweep",

@@ -72,6 +72,53 @@ def connectivity_averaged(preds: jax.Array, degrees: jax.Array) -> jax.Array:
     return (w[:, None] * preds).sum(0) / w.sum()
 
 
+def global_coefficients(
+    problem: SNTrainProblem, state: SNTrainState, rule: str = "conn"
+) -> tuple[jax.Array, jax.Array]:
+    """Collapse the per-sensor representers into ONE kernel expansion per
+    field:  f(x) = sum_a cglob[a] K(x, anchor_a).
+
+    Exactly equals the network-average ('avg') or connectivity-averaged
+    ('conn', Eq. 20) fusion of the per-sensor estimates — every sensor's
+    expansion is scattered onto the shared anchor set (the n sensor positions
+    followed by the n_stream streaming-arrival positions), so the serving hot
+    path is one batched kernel matvec (repro.kernels.kernel_matvec) instead
+    of n per-sensor evaluations.
+
+    Returns (anchors, coefs): single-field (A, d), (A,); batched
+    (B, A, d), (B, A) with A = n + n_stream.
+    """
+    n = problem.n
+    s_cap = problem.n_stream
+    deg = problem.topology.degrees.astype(jnp.float32)
+    if rule == "conn":
+        w = deg / deg.sum()
+    elif rule == "avg":
+        w = jnp.full((n,), 1.0 / n, jnp.float32)
+    else:
+        raise ValueError(f"global_coefficients supports 'avg'/'conn', got {rule!r}")
+    w_pad = jnp.concatenate([w, jnp.zeros((1,), w.dtype)])  # sentinel sensor row
+
+    positions = problem.topology.positions  # (n, d)
+    ids = problem.nbr_idx  # (n+1, D) shared; sentinel row targets n + s_cap
+
+    def one_field(nbr_mask, coef, stream_pos):
+        contrib = jnp.where(nbr_mask, coef, 0.0) * w_pad[:, None]  # (n+1, D)
+        cglob = (
+            jnp.zeros((n + s_cap + 1,), coef.dtype)
+            .at[ids.reshape(-1)]
+            .add(contrib.reshape(-1))
+        )
+        anchors = jnp.concatenate([positions.astype(stream_pos.dtype), stream_pos])
+        return anchors, cglob[: n + s_cap]
+
+    if problem.batched:
+        return jax.vmap(one_field)(
+            problem.nbr_mask, state.coef, problem.stream_pos
+        )
+    return one_field(problem.nbr_mask, state.coef, problem.stream_pos)
+
+
 def fuse(
     problem: SNTrainProblem,
     state: SNTrainState,

@@ -14,17 +14,47 @@ Three execution engines, all with identical fixed points:
                          (lax.scan over sensors).
   * ``colored_sweep``  — the paper's Sec-3.3 "Parallelism": all sensors of one
                          distance-2 color class update simultaneously as a
-                         single batched Cholesky solve (MXU-shaped), colors
-                         sweep serially.  This is the TPU-native engine.
+                         single batched solve (MXU-shaped), colors sweep
+                         serially.  This is the TPU-native engine.
   * ``sharded_sweep``  — ``colored_sweep`` distributed with shard_map over a
-                         device axis: each device solves its members of the
-                         current color; the Update messages travel as a psum
-                         of disjoint deltas (the all-reduce transport of the
-                         paper's neighbor messages).
+                         device axis.
 
 Fixed shapes everywhere: neighborhoods are padded to D_max, color classes to
-M_max, and the message vector carries one sentinel slot (index n) so padded
-scatters are harmless.
+M_max, and the message vector carries one sentinel slot (its last index) so
+padded scatters are harmless.
+
+Message-slot layout
+-------------------
+z has ``n + n_stream + 1`` slots:
+
+  [0, n)                 one per sensor (the paper's z vector);
+  [n, n + n_stream)      RESERVED slots: every free padded neighborhood slot
+                         (s, k >= deg_s) owns the fixed global message id
+                         ``n + offset(s) + (k - deg_s)``.  Streaming arrivals
+                         (repro.core.streaming) occupy these in place;
+  n + n_stream           the write sentinel.
+
+Because the reserved ids are assigned at build time, ``nbr_idx`` NEVER
+diverges across fields or over time — which is what lets the batched engines
+express their message scatters as exact one-hot matmuls (each slot has a
+unique owner within a color class) instead of per-field scatter ops.
+
+Multi-field batching
+--------------------
+``make_batch_problem`` runs B independent regression problems ("fields")
+over the same network in one program: per-field arrays gain a leading
+``(B, ...)`` axis (``y: (B, n)``, ``z: (B, n+S+1)``, ``coef: (B, n+1, D)``,
+``gram``/``chol``: ``(B, n+1, D, D)``), while ``nbr_idx``, regularizers and
+the coloring stay shared.  The colored engine's local solves run as
+fixed-shape triangular substitution vectorized over all B*M lanes at once —
+2D scan steps of batched row operations instead of B*M LAPACK calls (also
+measurably MORE accurate than batched LAPACK cho_solve in f32 at the
+paper's ill-conditioned lambdas) — and its message updates are one-hot
+GEMMs, so throughput scales with B (see benchmarks/multifield_bench.py).
+``sharded_sweep`` shards the *field* axis across devices (fields are
+independent, so the transport is pure data parallelism).  With B = 1 the
+batched path IS the single-field path (same core, vmapped), asserted in
+tests/test_multifield.py.
 """
 
 from __future__ import annotations
@@ -32,10 +62,14 @@ from __future__ import annotations
 import dataclasses
 from functools import partial
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 import jax.scipy.linalg as jsl
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat
 
 from .kernels_math import Kernel
 from .topology import SensorTopology
@@ -47,7 +81,11 @@ class SNTrainProblem:
     """Static per-network precomputation for SN-Train.
 
     All arrays are padded to fixed shapes. ``n`` below is the sensor count,
-    ``D`` the padded neighborhood size, ``C``/``M`` colors and members.
+    ``D`` the padded neighborhood size, ``S`` the reserved streaming capacity
+    (``n_stream``).  Single-field problems carry the shapes written below;
+    batched problems (``make_batch_problem``) prepend a field axis ``B`` to
+    ``y``, ``nbr_pos``, ``nbr_mask``, ``gram``, ``chol`` and ``stream_pos``
+    (``nbr_idx`` stays shared — reserved ids are fixed).
     """
 
     topology: SensorTopology
@@ -55,21 +93,42 @@ class SNTrainProblem:
     y: jnp.ndarray  # (n,) measurements
     lambdas: jnp.ndarray  # (n,) per-sensor regularizers
     nbr_pos: jnp.ndarray  # (n+1, D, d) neighbor positions (padded row n)
-    nbr_idx: jnp.ndarray  # (n+1, D) neighbor indices (sentinel row n)
+    nbr_idx: jnp.ndarray  # (n+1, D) message-slot ids (reserved ids on free slots)
     nbr_mask: jnp.ndarray  # (n+1, D)
     gram: jnp.ndarray  # (n+1, D, D) masked local Gram K_s (zeros off-mask)
     chol: jnp.ndarray  # (n+1, D, D) lower Cholesky of K_s + lambda_s I (padded dims get identity)
     lam_pad: jnp.ndarray  # (n+1,)
+    stream_pos: jnp.ndarray  # (S, d) arrival positions (zeros until absorbed)
+    n_stream: int = dataclasses.field(default=0, metadata=dict(static=True))
 
     @property
     def n(self) -> int:
         return self.topology.n
 
+    @property
+    def batched(self) -> bool:
+        """True when arrays carry a leading field axis (multi-field batch)."""
+        return self.y.ndim == 2
+
+    @property
+    def batch_size(self) -> int | None:
+        return int(self.y.shape[0]) if self.batched else None
+
+    @property
+    def sentinel(self) -> int:
+        """Index of the write-sentinel slot of z (== n + n_stream)."""
+        return self.n + self.n_stream
+
+    @property
+    def n_z(self) -> int:
+        """Length of the message vector including the sentinel."""
+        return self.n + self.n_stream + 1
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class SNTrainState:
-    z: jnp.ndarray  # (n+1,) messages; z[n] is a write sentinel
+    z: jnp.ndarray  # (n+S+1,) messages; the last slot is a write sentinel
     coef: jnp.ndarray  # (n+1, D) per-sensor representer coefficients
 
 
@@ -95,6 +154,11 @@ def make_problem(
     property (the weighted norm grows and the sweep diverges).  Pass
     jnp.float64 (with JAX_ENABLE_X64) to reproduce the paper's numerics;
     alternatively raise lambda (see tests/test_sn_train.py).
+
+    Streaming capacity is implied by the topology's padding: every free
+    neighborhood slot (build the topology with ``d_max`` headroom to get
+    more) owns a reserved message slot that arrivals can occupy
+    (repro.core.streaming).
     """
     n, d_max = topology.nbr_idx.shape
     d = topology.positions.shape[1]
@@ -102,17 +166,30 @@ def make_problem(
         lambdas = default_lambdas(topology)
     lambdas = jnp.asarray(lambdas, dtype)
 
-    # Pad one sentinel row so color-member gathers at index n are in-bounds.
-    nbr_idx = jnp.concatenate(
-        [topology.nbr_idx, jnp.zeros((1, d_max), jnp.int32)], axis=0
+    # Assign every free padded slot its fixed reserved message id, and give
+    # the sentinel row n the sentinel id (duplicate writes there carry 0s).
+    deg = np.asarray(topology.degrees)
+    free = d_max - deg  # (n,) per-sensor streaming capacity
+    n_stream = int(free.sum())
+    sentinel = n + n_stream
+    offsets = n + np.concatenate([[0], np.cumsum(free)[:-1]])
+    idx_np = np.asarray(topology.nbr_idx).copy()
+    for i in range(n):
+        idx_np[i, deg[i]:] = offsets[i] + np.arange(free[i])
+    nbr_idx = jnp.asarray(
+        np.concatenate([idx_np, np.full((1, d_max), sentinel)]), jnp.int32
     )
     nbr_mask = jnp.concatenate(
         [topology.nbr_mask, jnp.zeros((1, d_max), bool)], axis=0
     )
+    # Positions of free slots are placeholders (the sensor's own position,
+    # the topology's padding convention) until streaming overwrites them.
     pos_pad = jnp.concatenate(
         [topology.positions.astype(dtype), jnp.zeros((1, d), dtype)], axis=0
     )
-    nbr_pos = pos_pad[nbr_idx]  # (n+1, D, d)
+    nbr_pos = pos_pad[
+        jnp.concatenate([topology.nbr_idx, jnp.full((1, d_max), n, jnp.int32)])
+    ]  # (n+1, D, d)
     lam_pad = jnp.concatenate([lambdas, jnp.ones((1,), dtype)])
 
     def local_system(pos_s, mask_s, lam_s):
@@ -138,7 +215,62 @@ def make_problem(
         gram=gram,
         chol=chol,
         lam_pad=lam_pad,
+        stream_pos=jnp.zeros((n_stream, d), dtype),
+        n_stream=n_stream,
     )
+
+
+def make_batch_problem(
+    topology: SensorTopology,
+    kernel: Kernel,
+    ys: jax.Array,
+    lambdas: jax.Array | None = None,
+    *,
+    dtype=jnp.float32,
+) -> SNTrainProblem:
+    """B independent fields over one network: ``ys`` is (B, n).
+
+    Geometry (topology, regularizers, message-slot ids) is shared; the
+    per-field ``nbr_pos``/``nbr_mask``/``gram``/``chol``/``stream_pos``
+    arrays start as B identical copies and diverge only under streaming
+    absorption.
+    """
+    ys = jnp.asarray(ys, dtype)
+    if ys.ndim != 2:
+        raise ValueError(f"ys must be (B, n), got shape {ys.shape}")
+    base = make_problem(topology, kernel, ys[0], lambdas, dtype=dtype)
+    b = ys.shape[0]
+
+    def tile(a):
+        return jnp.broadcast_to(a[None], (b,) + a.shape)
+
+    return dataclasses.replace(
+        base,
+        y=ys,
+        nbr_pos=tile(base.nbr_pos),
+        nbr_mask=tile(base.nbr_mask),
+        gram=tile(base.gram),
+        chol=tile(base.chol),
+        stream_pos=tile(base.stream_pos),
+    )
+
+
+def field_view(
+    problem: SNTrainProblem, state: SNTrainState, b: int
+) -> tuple[SNTrainProblem, SNTrainState]:
+    """Single-field view of field ``b`` of a batched problem/state."""
+    if not problem.batched:
+        raise ValueError("field_view expects a batched problem")
+    prob = dataclasses.replace(
+        problem,
+        y=problem.y[b],
+        nbr_pos=problem.nbr_pos[b],
+        nbr_mask=problem.nbr_mask[b],
+        gram=problem.gram[b],
+        chol=problem.chol[b],
+        stream_pos=problem.stream_pos[b],
+    )
+    return prob, SNTrainState(z=state.z[b], coef=state.coef[b])
 
 
 def weighted_norm_sq(problem: SNTrainProblem, state: SNTrainState) -> jax.Array:
@@ -146,21 +278,33 @@ def weighted_norm_sq(problem: SNTrainProblem, state: SNTrainState) -> jax.Array:
 
     By Lemma 2.1 (0 is in the intersection C, all C_i are subspaces) this is
     non-increasing along ANY admissible SOP ordering — the invariant the
-    property tests assert.  Note ||f_i||^2 = c_i^T K_i c_i.
+    property tests assert.  Note ||f_i||^2 = c_i^T K_i c_i.  Batched inputs
+    return one norm per field, shape (B,).
     """
-    n = problem.n
-    z_part = jnp.sum(state.z[:n] ** 2)
-    quad = jnp.einsum("sd,sde,se->s", state.coef, problem.gram, state.coef)
-    return z_part + jnp.sum(problem.lam_pad * quad)
+    z_part = jnp.sum(state.z[..., :-1] ** 2, axis=-1)  # excludes the sentinel
+    quad = jnp.einsum(
+        "...sd,...sde,...se->...s", state.coef, problem.gram, state.coef
+    )
+    return z_part + jnp.sum(problem.lam_pad * quad, axis=-1)
 
 
 def init_state(problem: SNTrainProblem) -> SNTrainState:
-    """Paper Table 1 initialization: z_{s,0} = y_s, f_{s,0} = 0."""
+    """Paper Table 1 initialization: z_{s,0} = y_s, f_{s,0} = 0.
+
+    Reserved stream slots and the sentinel start at 0 (they contribute
+    nothing to the weighted norm until an arrival is absorbed).
+    """
     n = problem.n
-    d_max = problem.nbr_idx.shape[1]
+    d_max = problem.nbr_idx.shape[-1]
     dt = problem.y.dtype
-    z = jnp.concatenate([problem.y, jnp.zeros((1,), dt)])
-    coef = jnp.zeros((n + 1, d_max), dt)
+    pad = problem.n_stream + 1
+    if problem.batched:
+        b = problem.batch_size
+        z = jnp.concatenate([problem.y, jnp.zeros((b, pad), dt)], axis=-1)
+        coef = jnp.zeros((b, n + 1, d_max), dt)
+    else:
+        z = jnp.concatenate([problem.y, jnp.zeros((pad,), dt)])
+        coef = jnp.zeros((n + 1, d_max), dt)
     return SNTrainState(z=z, coef=coef)
 
 
@@ -173,58 +317,167 @@ def _sensor_update(z, coef_s, nbr_idx_s, nbr_mask_s, gram_s, chol_s, lam_s):
     return coef_new, z_new
 
 
+# ---------------------------------------------------------------------------
+# Serial engine (the paper's Table-1 ordering; cho_solve per sensor).
+# ---------------------------------------------------------------------------
+
+
+def _serial_core(
+    nbr_idx, nbr_mask, gram, chol, lam_pad, sentinel, z, coef, order, n_sweeps
+):
+    def body(carry, s):
+        z, coef = carry
+        coef_new, z_new = _sensor_update(
+            z, coef[s], nbr_idx[s], nbr_mask[s], gram[s], chol[s], lam_pad[s]
+        )
+        coef = coef.at[s].set(coef_new)
+        scatter_idx = jnp.where(nbr_mask[s], nbr_idx[s], sentinel)
+        z = z.at[scatter_idx].set(jnp.where(nbr_mask[s], z_new, z[sentinel]))
+        return (z, coef), None
+
+    def sweep(carry, _):
+        carry, _ = jax.lax.scan(body, carry, order)
+        return carry, None
+
+    (z, coef), _ = jax.lax.scan(sweep, (z, coef), None, length=n_sweeps)
+    return z, coef
+
+
 @partial(jax.jit, static_argnames=("n_sweeps",))
 def serial_sweep(
     problem: SNTrainProblem, state: SNTrainState, n_sweeps: int = 1
 ) -> SNTrainState:
-    """The paper's Table-1 serial ordering: for t: for s: project."""
-    n = problem.n
-    idxs = jnp.arange(n, dtype=jnp.int32)
+    """The paper's Table-1 serial ordering: for t: for s: project.
 
-    def body(carry, s):
-        z, coef = carry
-        coef_s = coef[s]
-        coef_new, z_new = _sensor_update(
-            z,
-            coef_s,
-            problem.nbr_idx[s],
-            problem.nbr_mask[s],
-            problem.gram[s],
-            problem.chol[s],
-            problem.lam_pad[s],
-        )
-        coef = coef.at[s].set(coef_new)
-        scatter_idx = jnp.where(problem.nbr_mask[s], problem.nbr_idx[s], n)
-        z = z.at[scatter_idx].set(jnp.where(problem.nbr_mask[s], z_new, z[n]))
-        return (z, coef), None
-
-    def sweep(carry, _):
-        carry, _ = jax.lax.scan(body, carry, idxs)
-        return carry, None
-
-    (z, coef), _ = jax.lax.scan(sweep, (state.z, state.coef), None, length=n_sweeps)
+    Batched problems run every field's serial sweep simultaneously (vmap over
+    the field axis)."""
+    order = jnp.arange(problem.n, dtype=jnp.int32)
+    core = partial(
+        _serial_core,
+        nbr_idx=problem.nbr_idx,
+        lam_pad=problem.lam_pad,
+        sentinel=problem.sentinel,
+        order=order,
+        n_sweeps=n_sweeps,
+    )
+    run = lambda nm, g, ch, z, c: core(
+        nbr_mask=nm, gram=g, chol=ch, z=z, coef=c
+    )
+    if problem.batched:
+        run = jax.vmap(run)
+    z, coef = run(
+        problem.nbr_mask, problem.gram, problem.chol, state.z, state.coef
+    )
     return SNTrainState(z=z, coef=coef)
 
 
-def _color_update(problem: SNTrainProblem, z, coef, members, member_mask):
-    """Simultaneous P_{C_s} for all sensors of one color (disjoint N_s)."""
-    n = problem.n
-    nbr_idx_m = problem.nbr_idx[members]  # (M, D)
-    nbr_mask_m = problem.nbr_mask[members] & member_mask[:, None]
-    gram_m = problem.gram[members]
-    chol_m = problem.chol[members]
-    lam_m = problem.lam_pad[members]
-    coef_m = coef[members]
+# ---------------------------------------------------------------------------
+# Colored engine.  Field axis is explicit (B = 1 for single-field problems);
+# local solves are fixed-shape triangular substitution vectorized over all
+# B*M lanes (2D scan steps of batched row ops — no per-matrix LAPACK calls,
+# and empirically tighter f32 error than batched cho_solve at the paper's
+# ill-conditioned lambdas), and the message/coefficient updates are EXACT
+# one-hot matmuls: within one color class every touched message slot has a
+# unique owner (distance-2 coloring makes same-color neighborhoods disjoint;
+# reserved slots are per-sensor), so "sum of one contribution" == "write".
+# ---------------------------------------------------------------------------
 
-    coef_new, z_new = jax.vmap(
-        lambda c, ni, nm, g, ch, lm: _sensor_update(z, c, ni, nm, g, ch, lm)
-    )(coef_m, nbr_idx_m, nbr_mask_m, gram_m, chol_m, lam_m)
 
-    coef = coef.at[members].set(jnp.where(member_mask[:, None], coef_new, coef[members]))
-    scatter_idx = jnp.where(nbr_mask_m, nbr_idx_m, n)  # (M, D)
-    z = z.at[scatter_idx.reshape(-1)].set(
-        jnp.where(nbr_mask_m, z_new, z[n]).reshape(-1)
+def _tri_solve_spd(chol, rhs):
+    """(L L^T)^{-1} rhs by forward+back substitution over the last axis.
+
+    chol: (..., D, D) lower factors (padded rows identity), rhs: (..., D).
+    Vectorized over every leading batch dim; each of the 2D scan steps is a
+    batched row operation, so cost amortizes across B*M lanes.
+    """
+    d = chol.shape[-1]
+    eye = jnp.eye(d, dtype=chol.dtype)
+    rows = jnp.moveaxis(chol, -2, 0)  # (D, ..., D) rows of L
+    cols = jnp.moveaxis(chol, -1, 0)  # (D, ..., D) rows of L^T
+    rhs_r = jnp.moveaxis(rhs, -1, 0)  # (D, ...)
+
+    def fwd(y, inp):
+        li, bi, ei = inp
+        yi = (bi - jnp.sum(li * y, axis=-1)) / jnp.sum(li * ei, axis=-1)
+        return y + yi[..., None] * ei, None
+
+    y, _ = jax.lax.scan(fwd, jnp.zeros_like(rhs), (rows, rhs_r, eye))
+
+    def bwd(x, inp):
+        ui, yi, ei = inp
+        xi = (yi - jnp.sum(ui * x, axis=-1)) / jnp.sum(ui * ei, axis=-1)
+        return x + xi[..., None] * ei, None
+
+    x, _ = jax.lax.scan(
+        bwd, jnp.zeros_like(rhs), (cols, jnp.moveaxis(y, -1, 0), eye),
+        reverse=True,
     )
+    return x
+
+
+def _color_update_b(
+    nbr_idx, nbr_mask, gram, chol, lam_pad, n_z, n_rows,
+    z, coef, members, member_mask,
+):
+    """Simultaneous P_{C_s} for all sensors of one color, all B fields.
+
+    Shapes: z (B, NZ); coef (B, n+1, D); nbr_idx (n+1, D) shared;
+    nbr_mask/gram/chol per-field; members (M,), member_mask (M,).
+    """
+    idx_m = nbr_idx[members]  # (M, D) shared across fields
+    mask_m = nbr_mask[:, members] & member_mask[None, :, None]  # (B, M, D)
+    gram_m = gram[:, members]  # (B, M, D, D)
+    chol_m = chol[:, members]  # (B, M, D, D)
+    lam_m = lam_pad[members]  # (M,)
+    coef_m = coef[:, members]  # (B, M, D)
+
+    b = z.shape[0]
+    z_nbr = z[:, idx_m.reshape(-1)].reshape(b, *idx_m.shape)  # (B, M, D)
+    rhs = jnp.where(mask_m, z_nbr + lam_m[None, :, None] * coef_m, 0.0)
+    coef_new = _tri_solve_spd(chol_m, rhs)  # (K_s + lambda_s I)^{-1} rhs
+    z_new = jnp.einsum("bmij,bmj->bmi", gram_m, coef_new)  # f_s at N_s
+
+    # One-hot message scatter (exact: slot ids unique within a color; the
+    # sentinel id may repeat but only ever receives zeros, 0 * (1-hit) == 0).
+    flat_idx = idx_m.reshape(-1)  # (M*D,)
+    oh = (flat_idx[:, None] == jnp.arange(n_z)[None, :]).astype(z.dtype)
+    hit = oh.sum(axis=0)  # (NZ,)
+    z = z * (1.0 - hit)[None, :] + jnp.einsum(
+        "kz,bk->bz", oh, z_new.reshape(b, -1)
+    )
+    # One-hot coefficient scatter over member rows (padded members are the
+    # sentinel sensor row n whose update is exactly 0).
+    ohm = (members[:, None] == jnp.arange(n_rows)[None, :]).astype(coef.dtype)
+    hitm = ohm.sum(axis=0)  # (n+1,)
+    coef = coef * (1.0 - hitm)[None, :, None] + jnp.einsum(
+        "mn,bmd->bnd", ohm, coef_new
+    )
+    return z, coef
+
+
+def _colored_core(problem: SNTrainProblem, nbr_mask, gram, chol, z, coef, n_sweeps):
+    """Batched colored sweep over explicitly-leading field axes."""
+    topo = problem.topology
+    update = partial(
+        _color_update_b,
+        problem.nbr_idx, lam_pad=problem.lam_pad,
+        n_z=problem.n_z, n_rows=problem.n + 1,
+    )
+
+    def color_body(carry, cm):
+        z, coef = carry
+        members, member_mask = cm
+        z, coef = update(
+            nbr_mask=nbr_mask, gram=gram, chol=chol,
+            z=z, coef=coef, members=members, member_mask=member_mask,
+        )
+        return (z, coef), None
+
+    def sweep(carry, _):
+        carry, _ = jax.lax.scan(color_body, carry, (topo.color_members, topo.color_mask))
+        return carry, None
+
+    (z, coef), _ = jax.lax.scan(sweep, (z, coef), None, length=n_sweeps)
     return z, coef
 
 
@@ -232,23 +485,22 @@ def _color_update(problem: SNTrainProblem, z, coef, members, member_mask):
 def colored_sweep(
     problem: SNTrainProblem, state: SNTrainState, n_sweeps: int = 1
 ) -> SNTrainState:
-    """Distance-2-colored parallel SOP (paper Sec. 3.3 'Parallelism')."""
-    topo = problem.topology
+    """Distance-2-colored parallel SOP (paper Sec. 3.3 'Parallelism').
 
-    def color_body(carry, cm):
-        z, coef = carry
-        members, member_mask = cm
-        z, coef = _color_update(problem, z, coef, members, member_mask)
-        return (z, coef), None
-
-    def sweep(carry, _):
-        carry, _ = jax.lax.scan(
-            color_body, carry, (topo.color_members, topo.color_mask)
+    Single-field problems run the same core with B = 1 (so batched B=1 and
+    single-field results are identical by construction)."""
+    if problem.batched:
+        z, coef = _colored_core(
+            problem, problem.nbr_mask, problem.gram, problem.chol,
+            state.z, state.coef, n_sweeps,
         )
-        return carry, None
-
-    (z, coef), _ = jax.lax.scan(sweep, (state.z, state.coef), None, length=n_sweeps)
-    return SNTrainState(z=z, coef=coef)
+        return SNTrainState(z=z, coef=coef)
+    z, coef = _colored_core(
+        problem,
+        problem.nbr_mask[None], problem.gram[None], problem.chol[None],
+        state.z[None], state.coef[None], n_sweeps,
+    )
+    return SNTrainState(z=z[0], coef=coef[0])
 
 
 def local_only(problem: SNTrainProblem) -> SNTrainState:
@@ -257,20 +509,41 @@ def local_only(problem: SNTrainProblem) -> SNTrainState:
     Each sensor fits its neighborhood's raw measurements; information never
     propagates. Equivalent to SN-Train's first inner solve with the Update
     step removed.
+
+    Pre-streaming ablation only: it rebuilds the measurement vector from
+    ``problem.y``, which does not carry absorbed arrivals (their values live
+    in the sweep state's z slots), so it refuses problems with occupied
+    stream slots rather than silently fitting them as 0.
     """
-    n = problem.n
-    y_pad = jnp.concatenate([problem.y, jnp.zeros((1,), jnp.float32)])
+    stream_used = problem.nbr_mask & (problem.nbr_idx >= problem.n)
+    if bool(stream_used.any()):
+        raise NotImplementedError(
+            "local_only is the pre-streaming ablation; absorbed arrivals "
+            "are not part of problem.y — run it before streaming.absorb"
+        )
+    pad = problem.n_stream + 1
 
-    def solve_s(nbr_idx_s, nbr_mask_s, chol_s):
-        rhs = jnp.where(nbr_mask_s, y_pad[nbr_idx_s], 0.0)
-        return jsl.cho_solve((chol_s, True), rhs)
+    def solve_field(y, nbr_mask, chol):
+        y_pad = jnp.concatenate([y, jnp.zeros((pad,), y.dtype)])
 
-    coef = jax.vmap(solve_s)(problem.nbr_idx, problem.nbr_mask, problem.chol)
-    return SNTrainState(z=y_pad, coef=coef)
+        def solve_s(nbr_idx_s, nbr_mask_s, chol_s):
+            rhs = jnp.where(nbr_mask_s, y_pad[nbr_idx_s], 0.0)
+            return jsl.cho_solve((chol_s, True), rhs)
+
+        return y_pad, jax.vmap(solve_s)(problem.nbr_idx, nbr_mask, chol)
+
+    if problem.batched:
+        z, coef = jax.vmap(solve_field)(
+            problem.y, problem.nbr_mask, problem.chol
+        )
+    else:
+        z, coef = solve_field(problem.y, problem.nbr_mask, problem.chol)
+    return SNTrainState(z=z, coef=coef)
 
 
 # ---------------------------------------------------------------------------
-# Sharded engine: sensors distributed over a device axis via shard_map.
+# Sharded engine: sensors (single-field) or fields (batched) distributed over
+# a device axis via shard_map.
 # ---------------------------------------------------------------------------
 
 
@@ -282,26 +555,41 @@ def sharded_sweep(
     axis: str = "sensors",
     n_sweeps: int = 1,
 ) -> SNTrainState:
-    """colored_sweep with color members sharded across `axis`.
+    """colored_sweep distributed with shard_map over `axis`.
 
-    Every device updates its shard of the current color class; because a
-    color's neighborhoods are disjoint, the per-device message updates are
-    disjoint scatters, and the transport reduces to one psum of deltas per
-    color step — the all-reduce realization of the paper's neighbor messages
-    (DESIGN.md Sec. 2).  z and coef are replicated; the heavy per-sensor
-    solves are fully parallel.
+    Single-field: color members are sharded across devices.  Every device
+    updates its shard of the current color class; because a color's
+    neighborhoods are disjoint, the per-device message updates are disjoint,
+    and the transport reduces to one psum of deltas per color step — the
+    all-reduce realization of the paper's neighbor messages (DESIGN.md
+    Sec. 2).  z and coef are replicated; the heavy per-sensor solves are
+    fully parallel.
+
+    Batched: the *field* axis is sharded instead — fields are independent
+    problems, so each device runs the colored engine on its own B/n_dev
+    fields with no cross-device traffic at all (the serving-throughput
+    configuration).
     """
+    if problem.batched:
+        return _sharded_sweep_fields(
+            problem, state, mesh, axis=axis, n_sweeps=n_sweeps
+        )
+
     topo = problem.topology
-    n = problem.n
     n_dev = mesh.shape[axis]
     n_colors, m_max = topo.color_members.shape
     m_pad = -(-m_max // n_dev) * n_dev  # round up to device multiple
     pad = m_pad - m_max
-    members = jnp.pad(topo.color_members, ((0, 0), (0, pad)), constant_values=n)
+    members = jnp.pad(topo.color_members, ((0, 0), (0, pad)), constant_values=problem.n)
     mask = jnp.pad(topo.color_mask, ((0, 0), (0, pad)))
     # (n_colors, n_dev, m_pad // n_dev): device axis second for sharding.
     members = members.reshape(n_colors, n_dev, -1)
     mask = mask.reshape(n_colors, n_dev, -1)
+    update = partial(
+        _color_update_b,
+        problem.nbr_idx, lam_pad=problem.lam_pad,
+        n_z=problem.n_z, n_rows=problem.n + 1,
+    )
 
     def device_fn(z, coef, members_l, mask_l):
         # members_l: (n_colors, 1, m_local) local shard.
@@ -311,9 +599,13 @@ def sharded_sweep(
         def color_body(carry, cm):
             z, coef = carry
             mem, mmask = cm
-            z_new, coef_new = _color_update(problem, z, coef, mem, mmask)
-            dz = jax.lax.psum(z_new - z, axis)
-            dcoef = jax.lax.psum(coef_new - coef, axis)
+            z_new, coef_new = update(
+                nbr_mask=problem.nbr_mask[None], gram=problem.gram[None],
+                chol=problem.chol[None],
+                z=z[None], coef=coef[None], members=mem, member_mask=mmask,
+            )
+            dz = jax.lax.psum(z_new[0] - z, axis)
+            dcoef = jax.lax.psum(coef_new[0] - coef, axis)
             return (z + dz, coef + dcoef), None
 
         def sweep(carry, _):
@@ -323,20 +615,48 @@ def sharded_sweep(
         (z, coef), _ = jax.lax.scan(sweep, (z, coef), None, length=n_sweeps)
         return z, coef
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         device_fn,
         mesh=mesh,
         in_specs=(P(), P(), P(None, axis, None), P(None, axis, None)),
         out_specs=(P(), P()),
-        check_vma=False,
     )
     z, coef = jax.jit(fn)(state.z, state.coef, members, mask)
     return SNTrainState(z=z, coef=coef)
 
 
+def _sharded_sweep_fields(problem, state, mesh, *, axis, n_sweeps):
+    """Field-data-parallel sharding of the batched colored engine."""
+    b = problem.batch_size
+    n_dev = mesh.shape[axis]
+    if b % n_dev != 0:
+        raise ValueError(f"batch size {b} must divide over {n_dev} devices")
+
+    def device_fn(nbr_mask, gram, chol, z, coef):
+        return _colored_core(problem, nbr_mask, gram, chol, z, coef, n_sweeps)
+
+    spec = P(axis)
+    fn = compat.shard_map(
+        device_fn, mesh=mesh, in_specs=(spec,) * 5, out_specs=(spec, spec)
+    )
+    z, coef = jax.jit(fn)(
+        problem.nbr_mask, problem.gram, problem.chol, state.z, state.coef
+    )
+    return SNTrainState(z=z, coef=coef)
+
+
 # ---------------------------------------------------------------------------
 # Paper Sec. 3.3 optional features: random orderings and robustness.
+# (Single-field engines; batched problems use serial/colored/sharded above.)
 # ---------------------------------------------------------------------------
+
+
+def _require_single_field(problem: SNTrainProblem, fn_name: str) -> None:
+    if problem.batched:
+        raise NotImplementedError(
+            f"{fn_name} supports single-field problems only; "
+            "use serial_sweep/colored_sweep/sharded_sweep for batches"
+        )
 
 
 @partial(jax.jit, static_argnames=("n_sweeps",))
@@ -353,23 +673,16 @@ def random_sweep(
     conditions (every sensor appears once per sweep), so Lemma 3.2 carries
     over: same fixed point as the serial Table-1 ordering.
     """
+    _require_single_field(problem, "random_sweep")
     n = problem.n
-
-    def body(carry, s):
-        z, coef = carry
-        coef_new, z_new = _sensor_update(
-            z, coef[s], problem.nbr_idx[s], problem.nbr_mask[s],
-            problem.gram[s], problem.chol[s], problem.lam_pad[s],
-        )
-        coef = coef.at[s].set(coef_new)
-        scatter_idx = jnp.where(problem.nbr_mask[s], problem.nbr_idx[s], n)
-        z = z.at[scatter_idx].set(jnp.where(problem.nbr_mask[s], z_new, z[n]))
-        return (z, coef), None
 
     def sweep(carry, k):
         order = jax.random.permutation(k, n).astype(jnp.int32)
-        carry, _ = jax.lax.scan(body, carry, order)
-        return carry, None
+        z, coef = _serial_core(
+            problem.nbr_idx, problem.nbr_mask, problem.gram, problem.chol,
+            problem.lam_pad, problem.sentinel, carry[0], carry[1], order, 1,
+        )
+        return (z, coef), None
 
     keys = jax.random.split(key, n_sweeps)
     (z, coef), _ = jax.lax.scan(sweep, (state.z, state.coef), keys)
@@ -382,7 +695,6 @@ def _dynamic_sensor_update(problem, z, coef_s, s, alive_s):
     Solves the masked system directly (no cached Cholesky — the active set
     changes per step).  Padded/dead entries keep coefficient 0.
     """
-    n = problem.n
     mask = problem.nbr_mask[s] & alive_s
     gram = jnp.where(mask[:, None] & mask[None, :], problem.gram[s], 0.0)
     lam = problem.lam_pad[s]
@@ -411,7 +723,9 @@ def robust_sweep(
     infinitely often.  With link_alive all-True this is exactly serial_sweep
     (up to solver choice) — asserted in tests.
     """
+    _require_single_field(problem, "robust_sweep")
     n = problem.n
+    sentinel = problem.sentinel
     assert link_alive.shape[0] == n_sweeps
 
     def body(carry, inp):
@@ -419,8 +733,8 @@ def robust_sweep(
         z, coef = carry
         coef_new, z_new, mask = _dynamic_sensor_update(problem, z, coef[s], s, alive_s)
         coef = coef.at[s].set(coef_new)
-        scatter_idx = jnp.where(mask, problem.nbr_idx[s], n)
-        z = z.at[scatter_idx].set(jnp.where(mask, z_new, z[n]))
+        scatter_idx = jnp.where(mask, problem.nbr_idx[s], sentinel)
+        z = z.at[scatter_idx].set(jnp.where(mask, z_new, z[sentinel]))
         return (z, coef), None
 
     def sweep(carry, alive_t):
@@ -445,7 +759,6 @@ def robust_sweep(
 
 
 def _weighted_sensor_update(problem, z, coef_s, s, w_pad):
-    n = problem.n
     mask = problem.nbr_mask[s]
     gram = problem.gram[s]
     lam = problem.lam_pad[s]
@@ -470,16 +783,23 @@ def weighted_sweep(
 
     weights == 1 reduces exactly to serial_sweep.  Fejér monotonicity holds
     in the reweighted norm (see weighted_norm_sq_hetero)."""
+    _require_single_field(problem, "weighted_sweep")
     n = problem.n
-    w_pad = jnp.concatenate([jnp.asarray(weights, state.z.dtype), jnp.zeros((1,), state.z.dtype)])
+    sentinel = problem.sentinel
+    w_pad = jnp.concatenate(
+        [
+            jnp.asarray(weights, state.z.dtype),
+            jnp.zeros((problem.n_stream + 1,), state.z.dtype),
+        ]
+    )
     idxs = jnp.arange(n, dtype=jnp.int32)
 
     def body(carry, s):
         z, coef = carry
         coef_new, z_new = _weighted_sensor_update(problem, z, coef[s], s, w_pad)
         coef = coef.at[s].set(coef_new)
-        scatter_idx = jnp.where(problem.nbr_mask[s], problem.nbr_idx[s], n)
-        z = z.at[scatter_idx].set(jnp.where(problem.nbr_mask[s], z_new, z[n]))
+        scatter_idx = jnp.where(problem.nbr_mask[s], problem.nbr_idx[s], sentinel)
+        z = z.at[scatter_idx].set(jnp.where(problem.nbr_mask[s], z_new, z[sentinel]))
         return (z, coef), None
 
     def sweep(carry, _):
@@ -496,6 +816,8 @@ def weighted_norm_sq_hetero(
     """sum_j w_j z_j^2 + sum_i lambda_i ||f_i||^2 — the Fejér invariant of
     weighted_sweep."""
     n = problem.n
-    z_part = jnp.sum(jnp.asarray(weights) * state.z[:n] ** 2)
-    quad = jnp.einsum("sd,sde,se->s", state.coef, problem.gram, state.coef)
-    return z_part + jnp.sum(problem.lam_pad * quad)
+    z_part = jnp.sum(jnp.asarray(weights) * state.z[..., :n] ** 2, axis=-1)
+    quad = jnp.einsum(
+        "...sd,...sde,...se->...s", state.coef, problem.gram, state.coef
+    )
+    return z_part + jnp.sum(problem.lam_pad * quad, axis=-1)

@@ -1,0 +1,178 @@
+"""Streaming measurement absorption for batched SN-Train problems.
+
+Sensor networks do not observe a field once: readings keep arriving.  The
+recursive-least-squares line of work (Mateos & Giannakis, arXiv:1109.4627)
+absorbs each arrival into the running estimator with an O(D^2) update rather
+than refitting from scratch; this module is that idea instantiated for the
+paper's SN-Train local systems.
+
+An arrival ``(field b, sensor s, location x, value y)`` becomes one more
+data point owned by sensor s: it occupies the next free padded slot ``k`` of
+N_s (build the topology with ``d_max`` headroom for capacity), whose FIXED
+reserved message slot ``nbr_idx[s, k]`` was assigned at problem build (see
+sn_train's message-slot layout).  The local system of sensor s grows by one
+row/column:
+
+    A_s' = [[A_s, a], [a^T, K(x,x) + lambda_s]]
+
+whose Cholesky factor differs from chol[s] in a single new row — computed
+with one triangular solve and a scalar square root (the classic rank-1
+"grow" update):
+
+    w = L_s^{-1} a,    d = sqrt(K(x,x) + lambda_s - w^T w)
+
+O(D^2) instead of the O(D^3) refactorization, and exact: after any number of
+absorptions ``problem.chol`` equals ``rebuild_chol(problem)`` to float
+precision (asserted in tests/test_multifield.py).  Because the padded free
+slots of ``chol`` are identity rows and arrivals fill slots left-to-right,
+the fixed-shape masked triangular solve below IS the textbook update.
+
+Other sensors never reference the new point (it joins N_s only), so the SOP
+sweep machinery — serial, colored, sharded — runs unchanged on the absorbed
+problem; a few post-arrival sweeps propagate the new information through the
+network.  All constraint sets remain subspaces containing 0, so Fejér
+monotonicity of the weighted norm (Lemma 2.1) is preserved across arrivals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+from .sn_train import SNTrainProblem, SNTrainState
+
+
+def capacity_left(problem: SNTrainProblem) -> jnp.ndarray:
+    """(B, n) free neighborhood slots per (field, sensor)."""
+    if not problem.batched:
+        raise ValueError("streaming requires a batched problem (use B = 1)")
+    return jnp.sum(~problem.nbr_mask[:, :-1, :], axis=-1)
+
+
+def _absorb(
+    problem: SNTrainProblem,
+    state: SNTrainState,
+    field: jax.Array,
+    sensor: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+) -> tuple[SNTrainProblem, SNTrainState, jax.Array]:
+    n = problem.n
+    field = jnp.asarray(field, jnp.int32)
+    sensor = jnp.asarray(sensor, jnp.int32)
+    dt = problem.nbr_pos.dtype
+    x = jnp.asarray(x, dt).reshape(-1)  # (d,)
+    y = jnp.asarray(y, state.z.dtype)
+
+    mask_s = problem.nbr_mask[field, sensor]  # (D,)
+    ok = jnp.any(~mask_s)  # sensor has a free slot; else DROP the arrival
+    k = jnp.argmin(mask_s)  # first free slot (arrivals fill left-to-right)
+    zid = problem.nbr_idx[sensor, k]  # fixed reserved message slot
+    pos_s = problem.nbr_pos[field, sensor]  # (D, d)
+    lam_s = problem.lam_pad[sensor]
+
+    kvec = jnp.where(mask_s, problem.kernel(x[None, :], pos_s)[0], 0.0)  # (D,)
+    kself = problem.kernel(x[None, :], x[None, :])[0, 0]
+
+    new_row = kvec.at[k].set(kself)
+    gram_s = problem.gram[field, sensor]
+    gram_s = gram_s.at[k, :].set(new_row).at[:, k].set(new_row)
+
+    # Grow-one Cholesky: rows >= k of chol[s] are identity (padded), so the
+    # full-shape triangular solve returns w on the valid prefix and zeros
+    # elsewhere; only row k of the factor changes.
+    chol_s = problem.chol[field, sensor]
+    w = jsl.solve_triangular(chol_s, kvec, lower=True)
+    d_new = jnp.sqrt(jnp.maximum(kself + lam_s - jnp.sum(w * w), 1e-12))
+    chol_s = chol_s.at[k, :].set(w.at[k].set(d_new))
+
+    # Every write is gated on `ok`: absorbing into a FULL sensor (argmin of
+    # an all-True mask would alias slot 0, a live neighbor) degrades to a
+    # no-op drop instead of corrupting the problem.  Callers that must not
+    # lose data check `capacity_left` first.
+    sp_idx = jnp.where(ok, zid - n, 0)
+    problem = dataclasses.replace(
+        problem,
+        nbr_pos=problem.nbr_pos.at[field, sensor, k].set(
+            jnp.where(ok, x, problem.nbr_pos[field, sensor, k])
+        ),
+        nbr_mask=problem.nbr_mask.at[field, sensor, k].set(True),
+        gram=problem.gram.at[field, sensor].set(
+            jnp.where(ok, gram_s, problem.gram[field, sensor])
+        ),
+        chol=problem.chol.at[field, sensor].set(
+            jnp.where(ok, chol_s, problem.chol[field, sensor])
+        ),
+        stream_pos=problem.stream_pos.at[field, sp_idx].set(
+            jnp.where(ok, x, problem.stream_pos[field, sp_idx])
+        ),
+    )
+    # The arrival seeds its own message slot (Table-1 init z_0 = y); the
+    # sensor's coefficient for the new slot starts at 0.
+    z_idx = jnp.where(ok, zid, problem.sentinel)
+    state = SNTrainState(
+        z=state.z.at[field, z_idx].set(jnp.where(ok, y, state.z[field, z_idx])),
+        coef=state.coef,
+    )
+    return problem, state, ok
+
+
+_absorb_copy = jax.jit(_absorb)
+_absorb_donate = jax.jit(_absorb, donate_argnums=(0, 1))
+
+
+def absorb(
+    problem: SNTrainProblem,
+    state: SNTrainState,
+    field: jax.Array,
+    sensor: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    donate: bool = False,
+) -> tuple[SNTrainProblem, SNTrainState, jax.Array]:
+    """Absorb one measurement (x, y) arriving at ``sensor`` of ``field``.
+
+    Returns ``(problem, state, absorbed)``.  An arrival at a sensor with no
+    free neighborhood slot is DROPPED (in-graph guard; no corruption) and
+    ``absorbed`` — a traced scalar bool, inspectable without a device sync
+    until the caller converts it — reports which happened.  Callers that
+    must not lose data check ``capacity_left`` up front or accumulate the
+    flags; capacity comes from building the topology with d_max headroom.
+    jit-compiled; ``field`` and ``sensor`` may be traced ints, so one
+    compiled program serves every arrival.
+
+    donate=True hands the input buffers to XLA for in-place update — the
+    per-arrival cost drops from a full copy of the per-field arrays to the
+    touched rows.  The caller must not use the OLD problem/state afterwards
+    (the serving/streaming hot loop rebinds them, so it can).
+    """
+    if not problem.batched:
+        raise ValueError("streaming requires a batched problem (use B = 1)")
+    if problem.n_stream == 0:
+        raise ValueError(
+            "problem has no streaming capacity — build the topology with "
+            "d_max headroom (build_topology(pos, r, d_max=max_degree + k))"
+        )
+    fn = _absorb_donate if donate else _absorb_copy
+    return fn(problem, state, field, sensor, x, y)
+
+
+def rebuild_chol(problem: SNTrainProblem) -> jnp.ndarray:
+    """From-scratch Cholesky of every local system — the O(D^3) reference
+    the streaming update is tested against."""
+    lam_pad = problem.lam_pad
+
+    def per_sensor(gram_s, mask_s, lam_s):
+        diag = jnp.where(mask_s, lam_s, 1.0)
+        return jsl.cholesky(gram_s + jnp.diag(diag), lower=True)
+
+    per_field = jax.vmap(per_sensor, in_axes=(0, 0, 0))
+    if problem.batched:
+        return jax.vmap(lambda g, m: per_field(g, m, lam_pad))(
+            problem.gram, problem.nbr_mask
+        )
+    return per_field(problem.gram, problem.nbr_mask, lam_pad)

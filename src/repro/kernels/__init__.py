@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the paper's compute hot spots, with jnp oracles.
 
-kernel_matvec — fused Gram x coef streaming evaluation (testing phase)
+kernel_matvec — fused Gram x coef streaming evaluation (testing phase);
+                also the multi-field batched variant (B expansions against a
+                shared query grid in one launch)
 gram          — tiled RBF Gram materialization (training-side local solves)
 ops           — general-shape jit wrappers (auto interpret off-TPU)
 ref           — pure-jnp oracles used by tests and benchmarks

@@ -49,6 +49,74 @@ def _kernel(xq_ref, an_ref, coef_ref, out_ref, *, gamma: float):
     out_ref[...] += k @ coef
 
 
+def _batched_kernel(xq_ref, an_ref, coef_ref, out_ref, *, gamma: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    xq = xq_ref[...].astype(jnp.float32)  # (BQ, d)
+    an = an_ref[0].astype(jnp.float32)  # (BN, d) — this field's anchor tile
+    coef = coef_ref[0].astype(jnp.float32)  # (BN,)
+
+    sq_q = jnp.sum(xq * xq, axis=-1)[:, None]
+    sq_a = jnp.sum(an * an, axis=-1)[None, :]
+    cross = jax.lax.dot_general(
+        xq,
+        an,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (BQ, BN) on the MXU
+    d2 = jnp.maximum(sq_q + sq_a - 2.0 * cross, 0.0)
+    k = jnp.exp(-gamma * d2)
+    out_ref[0, :] += k @ coef
+
+
+@functools.partial(
+    jax.jit, static_argnames=("gamma", "block_q", "block_n", "interpret")
+)
+def kernel_matvec_batched_pallas(
+    xq: jax.Array,
+    anchors: jax.Array,
+    coef: jax.Array,
+    *,
+    gamma: float = 1.0,
+    block_q: int = 128,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Multi-field evaluation: out[b, q] = sum_j coef[b, j] K(xq[q], anchors[b, j]).
+
+    Queries are shared across the B fields (the serving pattern: one request
+    grid, many concurrent workloads); anchors/coefficients are per-field.
+    Grid (B, Q/BQ, N/BN) with the anchor axis innermost so each (b, q-block)
+    accumulator stays resident in VMEM across anchor tiles — the same
+    streaming contraction as the single-field kernel, amortizing the query
+    tile loads over all B fields.
+
+    Padded inputs required: Q % block_q == 0, N % block_n == 0.  Use
+    `repro.kernels.ops.kernel_matvec` for the general-shape wrapper.
+    """
+    q, d = xq.shape
+    b, n, _ = anchors.shape
+    assert coef.shape == (b, n), (coef.shape, b, n)
+    assert q % block_q == 0 and n % block_n == 0, (q, n, block_q, block_n)
+    grid = (b, q // block_q, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_batched_kernel, gamma=gamma),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda b, i, j: (i, 0)),
+            pl.BlockSpec((1, block_n, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_n), lambda b, i, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q), lambda b, i, j: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((b, q), jnp.float32),
+        interpret=interpret,
+    )(xq, anchors, coef)
+
+
 @functools.partial(
     jax.jit, static_argnames=("gamma", "block_q", "block_n", "interpret")
 )

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from .gram import rbf_gram_pallas
-from .kernel_matvec import kernel_matvec_pallas
+from .kernel_matvec import kernel_matvec_batched_pallas, kernel_matvec_pallas
 
 
 def _auto_interpret(interpret: bool | None) -> bool:
@@ -21,12 +21,17 @@ def _auto_interpret(interpret: bool | None) -> bool:
     return interpret
 
 
-def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
-    r = x.shape[0]
-    pad = (-r) % mult
+def _pad_dim(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
     if pad == 0:
         return x
-    return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
+    return _pad_dim(x, 0, mult)
 
 
 def kernel_matvec(
@@ -41,16 +46,43 @@ def kernel_matvec(
 ) -> jax.Array:
     """f(xq) = sum_j coef_j exp(-gamma ||xq - x_j||^2) for arbitrary shapes.
 
+    Multi-field batching: pass coef as (B, N) — and optionally anchors as
+    (B, N, d) for per-field anchor sets (streaming problems) — to evaluate B
+    kernel expansions against one shared query grid in a single fused Pallas
+    launch; returns (B, Q).  Single-field (N,) coef returns (Q,) as before.
+
     Padding is exact: padded anchors carry coef 0 (zero contribution) and
     padded query rows are sliced off.
     """
     q = xq.shape[0]
+    coef = jnp.asarray(coef, jnp.float32)
+    anchors = jnp.asarray(anchors, jnp.float32)
+    if coef.ndim == 2:
+        b, n = coef.shape
+        if anchors.ndim == 2:
+            anchors = jnp.broadcast_to(anchors[None], (b,) + anchors.shape)
+        block_q = min(block_q, max(8, q))
+        block_n = min(block_n, max(8, n))
+        xq_p = _pad_rows(jnp.asarray(xq, jnp.float32), block_q)
+        an_p = _pad_dim(anchors, 1, block_n)
+        coef_p = _pad_dim(coef, 1, block_n)
+        out = kernel_matvec_batched_pallas(
+            xq_p,
+            an_p,
+            coef_p,
+            gamma=gamma,
+            block_q=block_q,
+            block_n=block_n,
+            interpret=_auto_interpret(interpret),
+        )
+        return out[:, :q]
+
     n = anchors.shape[0]
     block_q = min(block_q, max(8, q))
     block_n = min(block_n, max(8, n))
     xq_p = _pad_rows(jnp.asarray(xq, jnp.float32), block_q)
-    an_p = _pad_rows(jnp.asarray(anchors, jnp.float32), block_n)
-    coef_p = _pad_rows(jnp.asarray(coef, jnp.float32), block_n)
+    an_p = _pad_rows(anchors, block_n)
+    coef_p = _pad_rows(coef, block_n)
     out = kernel_matvec_pallas(
         xq_p,
         an_p,

@@ -28,6 +28,17 @@ def kernel_matvec_ref(
     return rbf_gram_ref(xq, anchors, gamma) @ coef
 
 
+def kernel_matvec_batched_ref(
+    xq: jax.Array, anchors: jax.Array, coef: jax.Array, gamma: float
+) -> jax.Array:
+    """Multi-field oracle: out[b, q] = sum_j coef[b, j] K(xq[q], anchors[b, j]).
+
+    anchors: (B, N, d) per-field anchor sets; coef: (B, N).  Materializes the
+    full (B, Q, N) Gram tensor the batched Pallas kernel streams through VMEM.
+    """
+    return jax.vmap(lambda an, c: rbf_gram_ref(xq, an, gamma) @ c)(anchors, coef)
+
+
 def local_batched_solve_ref(
     gram: jax.Array, lam: jax.Array, rhs: jax.Array, mask: jax.Array
 ) -> jax.Array:

@@ -5,6 +5,8 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 (256-chip v5e pod) or 2x16x16 (2 pods, 512 chips).
@@ -15,17 +17,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(*, model: int = 1):
     """Small mesh over whatever devices exist (tests/examples on CPU hosts)."""
     n = len(jax.devices())
     assert n % model == 0, (n, model)
-    return jax.make_mesh(
-        (n // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return compat.make_mesh((n // model, model), ("data", "model"))
 
 
 # v5e hardware constants used by the roofline analysis (per chip)

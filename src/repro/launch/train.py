@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.checkpoint import latest_step, restore, save
 from repro.configs import ARCH_NAMES, get_config
 from repro.core import consensus
@@ -41,7 +42,7 @@ from repro.optim import adamw, cosine_warmup
 
 def build(cfg, *, dp_mode: str, lr: float, steps: int):
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((n_dev,), ("data",))
     opt = adamw(cosine_warmup(lr, min(100, steps // 10 + 1), steps))
 
     if dp_mode == "sop_gossip":
@@ -59,12 +60,11 @@ def build(cfg, *, dp_mode: str, lr: float, steps: int):
         lift = lambda a: a[None]
         return jax.tree.map(lift, p1), jax.tree.map(lift, o1), m
 
-    sharded = jax.shard_map(
+    sharded = compat.shard_map(
         device_fn,
         mesh=mesh,
         in_specs=(P("data"), P("data"), P("data"), P("data")),
         out_specs=(P("data"), P("data"), P()),
-        check_vma=False,
     )
     return mesh, opt, jax.jit(sharded), n_dev
 

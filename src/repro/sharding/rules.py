@@ -44,17 +44,28 @@ def _axis_size(mesh: Mesh, axes) -> int:
 
 
 def _fit(dim: int, mesh: Mesh, axes):
-    """Return `axes` if it divides dim, else None (replicate fallback)."""
+    """Return `axes` if it divides dim, else None (replicate fallback).
+
+    Single-element tuples are unwrapped to the bare axis name: PartitionSpec
+    treats ``("data",)`` and ``"data"`` as distinct entries, and downstream
+    spec comparisons expect the scalar form.
+    """
     if axes is None:
         return None
+
+    def norm(a):
+        if isinstance(a, tuple) and len(a) == 1:
+            return a[0]
+        return a
+
     if dim % _axis_size(mesh, axes) == 0:
-        return axes
+        return norm(axes)
     if isinstance(axes, tuple) and len(axes) > 1:
         # try a prefix (e.g. drop 'pod' but keep 'data')
         for k in range(len(axes) - 1, 0, -1):
             sub = axes[:k]
             if dim % _axis_size(mesh, sub) == 0:
-                return sub
+                return norm(sub)
     return None
 
 

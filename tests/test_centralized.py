@@ -2,7 +2,7 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import Kernel, fit_krr
 from repro.core.centralized import mse, predict

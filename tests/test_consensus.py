@@ -8,7 +8,7 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import consensus
 
@@ -78,6 +78,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.core import consensus
 
 n = 4
@@ -86,17 +87,17 @@ stacked = {"w": jnp.asarray(rng.normal(size=(n, 3, 2)).astype(np.float32))}
 sched = consensus.hypercube_schedule(n)
 sim = consensus.sim_gossip_sweep(stacked, sched)
 
-mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((n,), ("data",))
 def dev(tree):
     t = jax.tree.map(lambda a: a[0], tree)
     for s in sched:
         t = consensus.pairwise_project(t, "data", s)
     return jax.tree.map(lambda a: a[None], t)
-out = jax.jit(jax.shard_map(dev, mesh=mesh, in_specs=(P("data"),), out_specs=P("data"), check_vma=False))(stacked)
+out = jax.jit(compat.shard_map(dev, mesh=mesh, in_specs=(P("data"),), out_specs=P("data")))(stacked)
 assert np.allclose(np.asarray(out["w"]), np.asarray(sim["w"]), atol=1e-5)
-d = jax.jit(jax.shard_map(
+d = jax.jit(compat.shard_map(
     lambda t: consensus.consensus_sq_distance(jax.tree.map(lambda a: a[0], t), "data")[None],
-    mesh=mesh, in_specs=(P("data"),), out_specs=P("data"), check_vma=False))(out)
+    mesh=mesh, in_specs=(P("data"),), out_specs=P("data")))(out)
 assert float(np.asarray(d)[0]) < 1e-8
 print("OK")
 """
@@ -115,6 +116,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.configs import get_config
 from repro.models import init_params, make_train_step
 from repro.optim import sgd, constant
@@ -124,7 +126,7 @@ cfg = get_config("smollm-135m", variant="smoke")
 opt = sgd(constant(1e-2))
 step = make_train_step(cfg, opt, dp_axis="data", dp_mode="allreduce")
 n = 4
-mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((n,), ("data",))
 params = init_params(cfg, jax.random.PRNGKey(0))
 opt_state = opt.init(params)
 stack = lambda a: jnp.broadcast_to(a[None], (n,) + a.shape)
@@ -135,8 +137,8 @@ def dev(p, o, b):
     p1 = jax.tree.map(lambda a: a[0], p); o1 = jax.tree.map(lambda a: a[0], o)
     p1, o1, m = step(p1, o1, b)
     return jax.tree.map(lambda a: a[None], p1), jax.tree.map(lambda a: a[None], o1)
-j = jax.jit(jax.shard_map(dev, mesh=mesh, in_specs=(P("data"), P("data"), P("data")),
-            out_specs=(P("data"), P("data")), check_vma=False))
+j = jax.jit(compat.shard_map(dev, mesh=mesh, in_specs=(P("data"), P("data"), P("data")),
+            out_specs=(P("data"), P("data"))))
 for i in range(3):
     b = {k: jnp.asarray(v) for k, v in stream.batch_at(i).items()}
     params, opt_state = j(params, opt_state, b)

@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, strategies as st
 
 from repro.kernels import kernel_matvec, rbf_gram
 from repro.kernels.ref import kernel_matvec_ref, local_batched_solve_ref, rbf_gram_ref

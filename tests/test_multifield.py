@@ -1,0 +1,352 @@
+"""Batched multi-field SN-Train engine + streaming absorption properties.
+
+Covers the ISSUE-1 tentpole guarantees:
+  (a) per-field Fejér monotonicity (Lemma 2.1) under the batched sweeps;
+  (b) a full hypercube gossip sweep equals pmean (Lemma 3.1) with a batch
+      axis;
+  (c) the streaming rank-1 Cholesky update matches a from-scratch rebuild
+      after many arrivals;
+plus B=1 equivalence with the single-field path and the fused multi-field
+serving evaluation.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core import (
+    Kernel,
+    build_topology,
+    colored_sweep,
+    consensus,
+    field_view,
+    fusion,
+    init_state,
+    local_only,
+    make_batch_problem,
+    make_problem,
+    serial_sweep,
+    streaming,
+    uniform_sensors,
+    weighted_norm_sq,
+)
+from repro.kernels import kernel_matvec
+from repro.kernels.ref import kernel_matvec_batched_ref
+
+KERN = Kernel("rbf", gamma=1.0)
+
+
+def _setup(n=30, b=3, radius=0.8, seed=0, lam=0.1, headroom=0):
+    pos = uniform_sensors(n, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    freq = rng.uniform(0.5, 2.0, size=(b, 1))
+    ys = np.sin(np.pi * freq * pos[None, :, 0]) + 0.3 * rng.normal(size=(b, n))
+    topo = build_topology(pos, radius)
+    if headroom:
+        d_max = int(np.asarray(topo.degrees).max()) + headroom
+        topo = build_topology(pos, radius, d_max=d_max)
+    lams = None if lam is None else jnp.full((n,), lam)
+    return topo, ys, make_batch_problem(topo, KERN, ys, lams), pos
+
+
+# ---------------------------------------------------------------------------
+# B = 1 and per-field equivalence with the single-field engine
+# ---------------------------------------------------------------------------
+
+
+def test_batched_b1_colored_identical_to_single_field():
+    """Acceptance: batched colored_sweep at B=1 == single-field path <=1e-5.
+
+    (They share one core, so the match is exact.)"""
+    topo, ys, prob_b, _ = _setup(b=1)
+    prob_1 = make_problem(topo, KERN, ys[0], jnp.full((topo.n,), 0.1))
+    out_b = colored_sweep(prob_b, init_state(prob_b), n_sweeps=30)
+    out_1 = colored_sweep(prob_1, init_state(prob_1), n_sweeps=30)
+    np.testing.assert_allclose(
+        np.asarray(out_b.z[0]), np.asarray(out_1.z), atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_b.coef[0]), np.asarray(out_1.coef), atol=1e-5
+    )
+
+
+def test_batched_b1_serial_matches_single_field():
+    topo, ys, prob_b, _ = _setup(b=1)
+    prob_1 = make_problem(topo, KERN, ys[0], jnp.full((topo.n,), 0.1))
+    out_b = serial_sweep(prob_b, init_state(prob_b), n_sweeps=30)
+    out_1 = serial_sweep(prob_1, init_state(prob_1), n_sweeps=30)
+    # the vmapped lowering may reassociate reductions: tiny f32 drift allowed
+    np.testing.assert_allclose(
+        np.asarray(out_b.z[0]), np.asarray(out_1.z), atol=1e-4
+    )
+
+
+@settings(deadline=None, max_examples=5)
+@given(seed=st.integers(0, 500))
+def test_batched_colored_equals_per_field_singles(seed):
+    """Each field of a B=4 batch solves ITS problem, untouched by the rest."""
+    topo, ys, prob_b, _ = _setup(b=4, seed=seed)
+    out_b = colored_sweep(prob_b, init_state(prob_b), n_sweeps=10)
+    for b in range(4):
+        prob_1 = make_problem(topo, KERN, ys[b], jnp.full((topo.n,), 0.1))
+        out_1 = colored_sweep(prob_1, init_state(prob_1), n_sweeps=10)
+        np.testing.assert_allclose(
+            np.asarray(out_b.z[b]), np.asarray(out_1.z), atol=1e-5
+        )
+
+
+def test_local_only_batched_matches_per_field():
+    topo, ys, prob_b, _ = _setup(b=3)
+    out_b = local_only(prob_b)
+    for b in range(3):
+        prob_1 = make_problem(topo, KERN, ys[b], jnp.full((topo.n,), 0.1))
+        out_1 = local_only(prob_1)
+        np.testing.assert_allclose(
+            np.asarray(out_b.coef[b]), np.asarray(out_1.coef), atol=1e-6
+        )
+
+
+# ---------------------------------------------------------------------------
+# (a) Per-field Fejér monotonicity under the batched sweeps (Lemma 2.1)
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=6)
+@given(seed=st.integers(0, 1000))
+def test_batched_fejer_monotone_per_field_paper_lambdas(seed):
+    """||z_b||^2 + sum_i lambda_i ||f_{b,i}||^2 never increases, per field,
+    with the paper's own lambda_i = kappa/|N_i|^2 (see test_sn_train for the
+    f32 slack rationale)."""
+    _, _, prob, _ = _setup(b=4, seed=seed, lam=None)  # paper default lambdas
+    state = init_state(prob)
+    prev = np.asarray(weighted_norm_sq(prob, state))
+    assert prev.shape == (4,)
+    for _ in range(5):
+        state = colored_sweep(prob, state, n_sweeps=1)
+        cur = np.asarray(weighted_norm_sq(prob, state))
+        assert (cur <= prev * 1.06 + 1e-5).all(), (cur, prev)
+        prev = cur
+
+
+@settings(deadline=None, max_examples=4)
+@given(seed=st.integers(0, 1000))
+def test_batched_serial_fejer_monotone_per_field(seed):
+    _, _, prob, _ = _setup(b=3, seed=seed, lam=1e-2)
+    state = init_state(prob)
+    prev = np.asarray(weighted_norm_sq(prob, state))
+    for _ in range(4):
+        state = serial_sweep(prob, state, n_sweeps=1)
+        cur = np.asarray(weighted_norm_sq(prob, state))
+        assert (cur <= prev * 1.03 + 1e-5).all(), (cur, prev)
+        prev = cur
+
+
+# ---------------------------------------------------------------------------
+# (b) Hypercube gossip sweep == pmean with a batch axis (Lemma 3.1)
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 1000), logn=st.integers(1, 4), batch=st.integers(1, 5))
+def test_hypercube_gossip_equals_pmean_with_batch_axis(seed, logn, batch):
+    """The complete pairing sweep averages every replica — independently for
+    every field of a leading batch axis on each leaf."""
+    n = 2**logn
+    rng = np.random.default_rng(seed)
+    tree = {
+        "w": jnp.asarray(rng.normal(size=(n, batch, 4, 3)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(n, batch, 5)).astype(np.float32)),
+    }
+    out = consensus.sim_gossip_sweep(tree, consensus.hypercube_schedule(n))
+    for k, v in out.items():
+        mean = jnp.mean(tree[k], axis=0, keepdims=True)  # per-field mean
+        np.testing.assert_allclose(
+            np.asarray(v), np.broadcast_to(np.asarray(mean), v.shape), atol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# (c) Streaming rank-1 absorption vs from-scratch rebuild
+# ---------------------------------------------------------------------------
+
+
+def _absorb_many(prob, state, pos, n_events, seed, b):
+    rng = np.random.default_rng(seed)
+    n = prob.n
+    for _ in range(n_events):
+        f = int(rng.integers(0, b))
+        s = int(rng.integers(0, n))
+        x = (pos[s] + 0.1 * rng.normal(size=pos.shape[1])).astype(np.float32)
+        prob, state, _ = streaming.absorb(prob, state, f, s, x, float(rng.normal()))
+    return prob, state
+
+
+def test_streaming_chol_matches_rebuild_after_50_arrivals():
+    """Acceptance: 50 rank-1 grow updates == full refactorization <= 1e-4."""
+    topo, ys, prob, pos = _setup(b=3, headroom=8)
+    state = init_state(prob)
+    prob, state = _absorb_many(prob, state, pos, 50, seed=7, b=3)
+    ref = streaming.rebuild_chol(prob)
+    np.testing.assert_allclose(
+        np.asarray(prob.chol), np.asarray(ref), atol=1e-4
+    )
+    # gram stays symmetric with zeros off the occupancy mask
+    g = np.asarray(prob.gram)
+    np.testing.assert_allclose(g, np.swapaxes(g, -1, -2), atol=1e-6)
+    mask = np.asarray(prob.nbr_mask)
+    outer = mask[..., :, None] & mask[..., None, :]
+    assert (g[~outer] == 0).all()
+
+
+@settings(deadline=None, max_examples=4)
+@given(seed=st.integers(0, 1000))
+def test_streaming_preserves_fejer_and_converges(seed):
+    """Absorption keeps every constraint set a subspace containing 0: sweeps
+    after arrivals still Fejér-decrease, and the iterates stay finite."""
+    topo, ys, prob, pos = _setup(b=2, headroom=6)
+    state = colored_sweep(prob, init_state(prob), n_sweeps=3)
+    prob, state = _absorb_many(prob, state, pos, 12, seed=seed, b=2)
+    prev = np.asarray(weighted_norm_sq(prob, state))
+    for _ in range(4):
+        state = colored_sweep(prob, state, n_sweeps=1)
+        cur = np.asarray(weighted_norm_sq(prob, state))
+        assert np.isfinite(cur).all()
+        assert (cur <= prev * 1.06 + 1e-5).all(), (cur, prev)
+        prev = cur
+
+
+def test_streaming_overflow_drops_instead_of_corrupting():
+    """An arrival at a FULL sensor must be a no-op, not an aliased write."""
+    import pytest
+
+    topo, ys, prob, pos = _setup(b=1, headroom=2)
+    state = init_state(prob)
+    s = 0
+    free = int(np.asarray(streaming.capacity_left(prob))[0, s])
+    for i in range(free):  # fill sensor 0 of field 0 to capacity
+        prob, state, ok = streaming.absorb(
+            prob, state, 0, s, pos[s] + 0.01 * (i + 1), 1.0
+        )
+        assert bool(ok)
+    assert int(np.asarray(streaming.capacity_left(prob))[0, s]) == 0
+    over_p, over_s, ok = streaming.absorb(prob, state, 0, s, pos[s] + 0.5, 9.9)
+    assert not bool(ok)
+    np.testing.assert_array_equal(np.asarray(over_p.gram), np.asarray(prob.gram))
+    np.testing.assert_array_equal(
+        np.asarray(over_p.nbr_mask), np.asarray(prob.nbr_mask)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(over_s.z[:, :-1]), np.asarray(state.z[:, :-1])
+    )
+
+    # zero-capacity problems are rejected statically
+    topo0 = build_topology(uniform_sensors(6, seed=0), 5.0)  # complete graph
+    prob0 = make_batch_problem(topo0, KERN, np.zeros((1, 6)), jnp.full((6,), 0.1))
+    with pytest.raises(ValueError, match="streaming capacity"):
+        streaming.absorb(prob0, init_state(prob0), 0, 0, np.zeros(1), 0.0)
+
+
+def test_local_only_refuses_absorbed_problems():
+    import pytest
+
+    topo, ys, prob, pos = _setup(b=2, headroom=3)
+    local_only(prob)  # fine pre-streaming
+    prob, state, _ = streaming.absorb(prob, init_state(prob), 0, 1, pos[1] + 0.1, 1.0)
+    with pytest.raises(NotImplementedError, match="pre-streaming"):
+        local_only(prob)
+
+
+def test_streaming_arrival_seeds_its_message_slot():
+    topo, ys, prob, pos = _setup(b=2, headroom=4)
+    state = init_state(prob)
+    n = prob.n
+    x = (pos[5] + 0.05).astype(np.float32)
+    prob2, state2, _ = streaming.absorb(prob, state, 1, 5, x, 2.5)
+    # sensor 5 of field 1 gained exactly one slot; field 0 untouched
+    d_mask = np.asarray(prob2.nbr_mask[1]) != np.asarray(prob.nbr_mask[1])
+    assert d_mask.sum() == 1 and d_mask[5].sum() == 1
+    assert (np.asarray(prob2.nbr_mask[0]) == np.asarray(prob.nbr_mask[0])).all()
+    k = int(np.argmax(d_mask[5]))
+    zid = int(np.asarray(prob2.nbr_idx)[5, k])
+    assert zid >= n
+    assert float(state2.z[1, zid]) == 2.5
+    assert float(state2.z[0, zid]) == 0.0
+    np.testing.assert_allclose(np.asarray(prob2.stream_pos[1, zid - n]), x)
+
+
+# ---------------------------------------------------------------------------
+# Batched serving path: sharded fields + fused multi-field evaluation
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_fields_matches_batched_colored_subprocess():
+    """Field-sharded engine (4 devices) == batched colored engine."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax, jax.numpy as jnp
+from repro import compat
+from repro.core import *
+pos = uniform_sensors(24, seed=0)
+rng = np.random.default_rng(1)
+ys = np.sin(np.pi*rng.uniform(0.5,2,(8,1))*pos[None,:,0]) + 0.3*rng.normal(size=(8,24))
+topo = build_topology(pos, 0.8)
+prob = make_batch_problem(topo, Kernel("rbf", gamma=1.0), ys, jnp.full((24,), 1e-2))
+st0 = init_state(prob)
+ref = colored_sweep(prob, st0, n_sweeps=7)
+mesh = compat.make_mesh((4,), ("fields",))
+sh = sharded_sweep(prob, st0, mesh, axis="fields", n_sweeps=7)
+assert np.allclose(np.asarray(ref.z), np.asarray(sh.z), atol=1e-5), np.abs(np.asarray(ref.z)-np.asarray(sh.z)).max()
+assert np.allclose(np.asarray(ref.coef), np.asarray(sh.coef), atol=1e-5)
+print("OK")
+"""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+def test_global_coefficients_fused_eval_matches_fusion_rules():
+    """One batched kernel_matvec over the collapsed expansions == per-field
+    conn/avg fusion of the per-sensor estimates (including stream anchors)."""
+    topo, ys, prob, pos = _setup(b=3, headroom=4)
+    state = colored_sweep(prob, init_state(prob), n_sweeps=10)
+    prob, state = _absorb_many(prob, state, pos, 9, seed=3, b=3)
+    state = colored_sweep(prob, state, n_sweeps=3)
+    xq = np.linspace(-1, 1, 33)[:, None].astype(np.float32)
+    for rule in ("conn", "avg"):
+        anchors, coefs = fusion.global_coefficients(prob, state, rule=rule)
+        fused = kernel_matvec(xq, anchors, coefs, gamma=1.0)  # (B, Q) Pallas
+        for b in range(3):
+            pv, sv = field_view(prob, state, b)
+            direct = fusion.fuse(pv, sv, xq, rule)
+            np.testing.assert_allclose(
+                np.asarray(fused[b]), np.asarray(direct), atol=2e-5
+            )
+
+
+@settings(deadline=None, max_examples=6)
+@given(
+    q=st.sampled_from([1, 7, 130]),
+    n=st.sampled_from([1, 13, 600]),
+    b=st.integers(1, 6),
+)
+def test_batched_kernel_matvec_matches_ref(q, n, b):
+    rng = np.random.default_rng(q * 7 + n + b)
+    xq = rng.normal(size=(q, 2)).astype(np.float32)
+    an = rng.normal(size=(b, n, 2)).astype(np.float32)
+    c = rng.normal(size=(b, n)).astype(np.float32)
+    out = kernel_matvec(xq, an, c, gamma=1.3)
+    ref = kernel_matvec_batched_ref(
+        jnp.asarray(xq), jnp.asarray(an), jnp.asarray(c), 1.3
+    )
+    assert out.shape == (b, q)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)

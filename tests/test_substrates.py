@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, strategies as st
 
 from repro.checkpoint import latest_step, restore, save
 from repro.core.topology import build_topology, geometric_adjacency, greedy_coloring, uniform_sensors
