@@ -4,19 +4,29 @@ Measures, for batch sizes B = 1 .. 256 over one shared sensor network:
 
   * fields/sec of the batched colored_sweep engine (the training hot path);
   * the batching speedup of B=64 vs 64 sequential B=1 runs: the batched
-    engine's lane-vectorized triangular solves and one-hot message matmuls
-    amortize the per-color-step overhead that dominates bounded-degree
-    networks (the realistic mote regime — the default below is a 2-D
-    geometric graph with D ~ 13);
+    engine's lane-vectorized triangular solves and static-plan message
+    scatters amortize the per-color-step overhead that dominates
+    bounded-degree networks (the realistic mote regime — the default below
+    is a 2-D geometric graph with D ~ 13);
   * streaming per-update latency: one rank-1 (grow-one) Cholesky absorption
     vs a from-scratch refactorization of every local system.
 
+``--scaling`` instead runs the n-scaling sweep of the colored engines
+(radius shrinks as 1/sqrt(n) so the padded degree D stays ~constant): the
+``onehot`` reference realizes each color-step scatter as a dense
+``(M*D, n_z)`` GEMM — O(n^2) per sweep — where the ``plan`` engine's static
+gather is O(n*D).  Results (ms/sweep per engine and the speedup at
+n = 1000) are written to ``BENCH_colored_scaling.json``.
+
 Run:  PYTHONPATH=src python -m benchmarks.multifield_bench [--sensors 100]
+      PYTHONPATH=src python -m benchmarks.multifield_bench --scaling
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import math
 import time
 
 import numpy as np
@@ -40,14 +50,66 @@ def _fields(b, n, pos, rng):
     return np.sin(np.pi * freq * pos[None, :, 0] + phase) + 0.3 * rng.normal(size=(b, n))
 
 
-def time_sweeps(prob, state, sweeps, reps=3):
-    colored_sweep(prob, state, n_sweeps=sweeps).z.block_until_ready()  # compile
+def time_sweeps(prob, state, sweeps, reps=3, engine="plan"):
+    run = lambda: colored_sweep(prob, state, n_sweeps=sweeps, engine=engine)
+    run().z.block_until_ready()  # compile
     best = float("inf")
     for _ in range(reps):
         t0 = time.perf_counter()
-        colored_sweep(prob, state, n_sweeps=sweeps).z.block_until_ready()
+        run().z.block_until_ready()
         best = min(best, time.perf_counter() - t0)
     return best
+
+
+def scaling_main(args):
+    """n-scaling of one colored sweep per engine -> BENCH_colored_scaling.json."""
+    rng = np.random.default_rng(0)
+    kern = Kernel("rbf", gamma=1.0)
+    engines = [e.strip() for e in args.engines.split(",") if e.strip()]
+    ns = [int(s) for s in args.ns.split(",")]
+    b, sweeps = args.batch, args.scaling_sweeps
+    entries = []
+    hdr = " ".join(f"{('ms/sweep ' + e):>16s}" for e in engines)
+    print(f"{'n':>6s} {'D':>4s} {'colors':>6s} {'n_z':>7s} {hdr}")
+    for n in ns:
+        # Shrink the radius with 1/sqrt(n) so the expected degree (and the
+        # padded neighborhood D) stays ~constant — the mote regime where the
+        # message traffic, not the local solves, dominates.
+        r = args.radius * math.sqrt(100.0 / n)
+        pos = uniform_sensors(n, d=2, seed=0)
+        topo = build_topology(pos, r)
+        prob = make_batch_problem(
+            topo, kern, _fields(b, n, pos, rng), jnp.full((n,), args.lam)
+        )
+        state = init_state(prob)
+        row = {
+            "n": n, "d_max": topo.d_max, "n_colors": topo.n_colors,
+            "n_z": prob.n_z, "batch": b, "sweeps": sweeps,
+        }
+        for engine in engines:
+            t = time_sweeps(prob, state, sweeps, reps=2, engine=engine)
+            row[f"ms_per_sweep_{engine}"] = t * 1e3 / sweeps
+        entries.append(row)
+        cols = " ".join(
+            f"{row[f'ms_per_sweep_{e}']:>16.2f}" for e in engines
+        )
+        print(f"{n:6d} {topo.d_max:4d} {topo.n_colors:6d} {prob.n_z:7d} {cols}")
+
+    out = {"name": "colored_scaling", "batch": b, "entries": entries}
+    ref = next((e for e in entries if e["n"] == 1000), None)
+    if ref is not None and "ms_per_sweep_onehot" in ref:
+        for e in engines:
+            if e != "onehot" and f"ms_per_sweep_{e}" in ref:
+                out[f"speedup_at_n1000_{e}"] = (
+                    ref["ms_per_sweep_onehot"] / ref[f"ms_per_sweep_{e}"]
+                )
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    for k, v in out.items():
+        if k.startswith("speedup"):
+            print(f"{k}: {v:.1f}x")
+    print(f"wrote {args.out}")
 
 
 def main():
@@ -59,7 +121,20 @@ def main():
     ap.add_argument("--lam", type=float, default=0.1)
     ap.add_argument("--stream", type=int, default=64, help="streaming updates to time")
     ap.add_argument("--max_batch", type=int, default=256)
+    ap.add_argument("--scaling", action="store_true",
+                    help="run the n-scaling engine comparison instead")
+    ap.add_argument("--ns", default="100,200,500,1000,2000",
+                    help="sensor counts for --scaling")
+    ap.add_argument("--batch", type=int, default=16, help="fields for --scaling")
+    ap.add_argument("--scaling_sweeps", type=int, default=2)
+    ap.add_argument("--engines", default="onehot,plan",
+                    help="comma list of colored_sweep engines for --scaling")
+    ap.add_argument("--out", default="BENCH_colored_scaling.json")
     args = ap.parse_args()
+
+    if args.scaling:
+        scaling_main(args)
+        return
 
     n = args.sensors
     rng = np.random.default_rng(0)

@@ -1,7 +1,11 @@
 """Benchmark harness — one function per paper table/figure plus kernel and
-consensus benches.  Prints ``name,us_per_call,derived`` CSV.
+consensus benches.  Prints ``name,us_per_call,derived`` CSV and writes one
+machine-readable ``BENCH_<name>.json`` (``{name, us_per_call, derived}``)
+per row into ``--json-dir`` — the artifacts CI uploads so the perf
+trajectory is tracked per commit.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only PREFIX] [--fast]
+           [--json-dir bench_out]
 """
 
 from __future__ import annotations
@@ -21,7 +25,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="run benches whose name starts with this")
     ap.add_argument("--fast", action="store_true", help="skip the slow paper figures")
+    ap.add_argument(
+        "--json-dir", default=None,
+        help="directory for the per-row BENCH_<name>.json files "
+        "(defaults to bench_out under --fast, otherwise off)",
+    )
     args = ap.parse_args()
+    if args.json_dir is None and args.fast:
+        args.json_dir = "bench_out"
 
     from . import consensus_bench, kernels_bench, paper_figs
 
@@ -48,6 +59,21 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    if args.json_dir:
+        import json
+
+        os.makedirs(args.json_dir, exist_ok=True)
+        for name, us, derived in rows:
+            path = os.path.join(
+                args.json_dir, f"BENCH_{name.replace('/', '_')}.json"
+            )
+            with open(path, "w") as f:
+                json.dump(
+                    {"name": name, "us_per_call": us, "derived": derived}, f
+                )
+                f.write("\n")
+        print(f"# wrote {len(rows)} BENCH_*.json to {args.json_dir}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -23,8 +23,8 @@ Fixed shapes everywhere: neighborhoods are padded to D_max, color classes to
 M_max, and the message vector carries one sentinel slot (its last index) so
 padded scatters are harmless.
 
-Message-slot layout
--------------------
+Message-slot layout and scatter plans
+-------------------------------------
 z has ``n + n_stream + 1`` slots:
 
   [0, n)                 one per sensor (the paper's z vector);
@@ -35,9 +35,39 @@ z has ``n + n_stream + 1`` slots:
   n + n_stream           the write sentinel.
 
 Because the reserved ids are assigned at build time, ``nbr_idx`` NEVER
-diverges across fields or over time — which is what lets the batched engines
-express their message scatters as exact one-hot matmuls (each slot has a
-unique owner within a color class) instead of per-field scatter ops.
+diverges across fields or over time, and the distance-2 coloring makes every
+message slot touched by a color class have a UNIQUE ``(member, lane)`` owner
+within that class.  The whole color-step message/coefficient update is
+therefore a *static permutation* known at ``make_problem`` time, precomputed
+host-side as two int32 **scatter plans** per color ``c``:
+
+  ``plan_z[c]``    (n_z,)   for every message slot: its own index (keep), or
+                            ``n_z + m*D + k`` — take the value sensor
+                            ``members[c, m]`` just computed for its lane
+                            ``k``.  One gather from
+                            ``concat([z, z_new.reshape(B, -1)], -1)``
+                            realizes the entire update in O(n_z);
+  ``plan_coef[c]`` (n+1,)   the same for coefficient rows: keep, or
+                            ``(n+1) + m`` from the color's fresh solves.
+
+Engine selection (``colored_sweep(..., engine=...)``):
+
+  ``"plan"``   (default)  the static-gather realization above — O(n·D) per
+                          full sweep on bounded-degree networks;
+  ``"onehot"`` (reference) materializes the one-hot matrix
+                          ``(M·D, n_z)`` and applies the update as two dense
+                          GEMMs — O(n²) per sweep, kept as the independently
+                          simple oracle the plans are tested against;
+  ``"pallas"``            the fused color-step kernel
+                          (repro.kernels.color_step): gather → lane-blocked
+                          forward/back substitution → local (D,D)@(D,) GEMM
+                          → scatter, all in VMEM, blocked over the B·M lane
+                          grid (interpret mode off-TPU).
+
+All three produce identical fixed points (plan == onehot bit-for-bit; see
+tests/test_scatter_plan.py).  ``sharded_sweep`` reuses the plans to shrink
+its per-color transport to the (M·D,) touched slot values instead of full
+(n_z,) + (n+1, D) deltas.
 
 Multi-field batching
 --------------------
@@ -85,7 +115,8 @@ class SNTrainProblem:
     (``n_stream``).  Single-field problems carry the shapes written below;
     batched problems (``make_batch_problem``) prepend a field axis ``B`` to
     ``y``, ``nbr_pos``, ``nbr_mask``, ``gram``, ``chol`` and ``stream_pos``
-    (``nbr_idx`` stays shared — reserved ids are fixed).
+    (``nbr_idx`` and the scatter plans stay shared — reserved ids and the
+    coloring are fixed).
     """
 
     topology: SensorTopology
@@ -99,6 +130,8 @@ class SNTrainProblem:
     chol: jnp.ndarray  # (n+1, D, D) lower Cholesky of K_s + lambda_s I (padded dims get identity)
     lam_pad: jnp.ndarray  # (n+1,)
     stream_pos: jnp.ndarray  # (S, d) arrival positions (zeros until absorbed)
+    plan_z: jnp.ndarray  # (n_colors, n_z) color-step gather plan for z
+    plan_coef: jnp.ndarray  # (n_colors, n+1) color-step gather plan for coef
     n_stream: int = dataclasses.field(default=0, metadata=dict(static=True))
 
     @property
@@ -136,6 +169,44 @@ def default_lambdas(topology: SensorTopology, kappa: float = 0.01) -> jnp.ndarra
     """Paper Sec. 4.1: lambda_i = kappa / |N_i|^2 with kappa = 0.01."""
     deg = topology.degrees.astype(jnp.float32)
     return kappa / (deg**2)
+
+
+def _build_color_plans(
+    topology: SensorTopology, idx_full: np.ndarray, n_stream: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Host-side static scatter plans, one per color class.
+
+    The distance-2 coloring guarantees that within a color every touched
+    message slot and every touched coefficient row has exactly one source, so
+    the color-step update is a permutation gather:
+
+      plan_z[c][j]    = j               keep z[j], or
+                      = n_z + m*D + k   slot j is owned by lane k of the
+                                        color's m-th member;
+      plan_coef[c][r] = r               keep coef row r, or
+                      = (n+1) + m       row r is the color's m-th member.
+
+    The sentinel slot and the sentinel coefficient row always KEEP (they are
+    invariantly zero; the one-hot reference engine writes zeros there, so
+    both realizations agree bit-for-bit).  Codes always reference flat
+    positions < n_z + M_max*D, so the same plan applies when a caller pads
+    the member list wider (sharded_sweep pads to a device multiple).
+    """
+    n, d_max = topology.nbr_idx.shape
+    n_z = n + n_stream + 1
+    members = np.asarray(topology.color_members)
+    cmask = np.asarray(topology.color_mask)
+    n_colors, m_max = members.shape
+    plan_z = np.tile(np.arange(n_z, dtype=np.int32), (n_colors, 1))
+    plan_coef = np.tile(np.arange(n + 1, dtype=np.int32), (n_colors, 1))
+    for c in range(n_colors):
+        m_pos = np.nonzero(cmask[c])[0]  # positions of real members
+        mem = members[c, m_pos]
+        plan_coef[c, mem] = (n + 1) + m_pos
+        slots = idx_full[mem]  # (m_real, D) unique ids (no sentinel)
+        flat = m_pos[:, None] * d_max + np.arange(d_max)[None, :]
+        plan_z[c, slots.reshape(-1)] = n_z + flat.reshape(-1)
+    return jnp.asarray(plan_z), jnp.asarray(plan_coef)
 
 
 def make_problem(
@@ -176,9 +247,9 @@ def make_problem(
     idx_np = np.asarray(topology.nbr_idx).copy()
     for i in range(n):
         idx_np[i, deg[i]:] = offsets[i] + np.arange(free[i])
-    nbr_idx = jnp.asarray(
-        np.concatenate([idx_np, np.full((1, d_max), sentinel)]), jnp.int32
-    )
+    idx_full = np.concatenate([idx_np, np.full((1, d_max), sentinel)])
+    nbr_idx = jnp.asarray(idx_full, jnp.int32)
+    plan_z, plan_coef = _build_color_plans(topology, idx_full, n_stream)
     nbr_mask = jnp.concatenate(
         [topology.nbr_mask, jnp.zeros((1, d_max), bool)], axis=0
     )
@@ -216,6 +287,8 @@ def make_problem(
         chol=chol,
         lam_pad=lam_pad,
         stream_pos=jnp.zeros((n_stream, d), dtype),
+        plan_z=plan_z,
+        plan_coef=plan_coef,
         n_stream=n_stream,
     )
 
@@ -376,10 +449,12 @@ def serial_sweep(
 # local solves are fixed-shape triangular substitution vectorized over all
 # B*M lanes (2D scan steps of batched row ops — no per-matrix LAPACK calls,
 # and empirically tighter f32 error than batched cho_solve at the paper's
-# ill-conditioned lambdas), and the message/coefficient updates are EXACT
-# one-hot matmuls: within one color class every touched message slot has a
-# unique owner (distance-2 coloring makes same-color neighborhoods disjoint;
-# reserved slots are per-sensor), so "sum of one contribution" == "write".
+# ill-conditioned lambdas).  The message/coefficient updates are EXACT
+# writes: within one color class every touched message slot has a unique
+# owner (distance-2 coloring makes same-color neighborhoods disjoint;
+# reserved slots are per-sensor), realized either as the precomputed static
+# gather plans ("plan"/"pallas") or as the dense one-hot matmul reference
+# ("onehot") — see the module docstring for the engine taxonomy.
 # ---------------------------------------------------------------------------
 
 
@@ -415,14 +490,15 @@ def _tri_solve_spd(chol, rhs):
     return x
 
 
-def _color_update_b(
-    nbr_idx, nbr_mask, gram, chol, lam_pad, n_z, n_rows,
-    z, coef, members, member_mask,
+def _color_solve(
+    nbr_idx, lam_pad, nbr_mask, gram, chol, z, coef, members, member_mask
 ):
-    """Simultaneous P_{C_s} for all sensors of one color, all B fields.
+    """Simultaneous P_{C_s} local solves for one color, all B fields.
 
     Shapes: z (B, NZ); coef (B, n+1, D); nbr_idx (n+1, D) shared;
     nbr_mask/gram/chol per-field; members (M,), member_mask (M,).
+    Returns (idx_m (M, D), coef_new (B, M, D), z_new (B, M, D)); the engines
+    differ only in how they scatter these back.
     """
     idx_m = nbr_idx[members]  # (M, D) shared across fields
     mask_m = nbr_mask[:, members] & member_mask[None, :, None]  # (B, M, D)
@@ -436,9 +512,24 @@ def _color_update_b(
     rhs = jnp.where(mask_m, z_nbr + lam_m[None, :, None] * coef_m, 0.0)
     coef_new = _tri_solve_spd(chol_m, rhs)  # (K_s + lambda_s I)^{-1} rhs
     z_new = jnp.einsum("bmij,bmj->bmi", gram_m, coef_new)  # f_s at N_s
+    return idx_m, coef_new, z_new
 
-    # One-hot message scatter (exact: slot ids unique within a color; the
-    # sentinel id may repeat but only ever receives zeros, 0 * (1-hit) == 0).
+
+def _apply_plan(z, coef, z_new, coef_new, plan_z_c, plan_coef_c):
+    """Static-gather realization of the color-step scatter: O(n_z + n*D)."""
+    b = z.shape[0]
+    z = jnp.concatenate([z, z_new.reshape(b, -1)], axis=-1)[:, plan_z_c]
+    coef = jnp.concatenate([coef, coef_new], axis=1)[:, plan_coef_c]
+    return z, coef
+
+
+def _apply_onehot(z, coef, z_new, coef_new, idx_m, members, n_z, n_rows):
+    """Dense one-hot reference realization: O(M*D*n_z) GEMMs per color.
+
+    Exact because slot ids are unique within a color; the sentinel id may
+    repeat but only ever receives zeros, 0 * (1-hit) == 0.
+    """
+    b = z.shape[0]
     flat_idx = idx_m.reshape(-1)  # (M*D,)
     oh = (flat_idx[:, None] == jnp.arange(n_z)[None, :]).astype(z.dtype)
     hit = oh.sum(axis=0)  # (NZ,)
@@ -455,50 +546,89 @@ def _color_update_b(
     return z, coef
 
 
-def _colored_core(problem: SNTrainProblem, nbr_mask, gram, chol, z, coef, n_sweeps):
-    """Batched colored sweep over explicitly-leading field axes."""
-    topo = problem.topology
-    update = partial(
-        _color_update_b,
-        problem.nbr_idx, lam_pad=problem.lam_pad,
-        n_z=problem.n_z, n_rows=problem.n + 1,
-    )
+ENGINES = ("plan", "onehot", "pallas")
 
-    def color_body(carry, cm):
-        z, coef = carry
-        members, member_mask = cm
-        z, coef = update(
-            nbr_mask=nbr_mask, gram=gram, chol=chol,
-            z=z, coef=coef, members=members, member_mask=member_mask,
-        )
-        return (z, coef), None
+
+def _colored_core(
+    problem: SNTrainProblem, nbr_mask, gram, chol, z, coef, n_sweeps,
+    engine: str = "plan",
+):
+    """Batched colored sweep over explicitly-leading field axes."""
+    if engine not in ENGINES:
+        raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+    topo = problem.topology
+    solve = partial(_color_solve, problem.nbr_idx, problem.lam_pad)
+    xs = (topo.color_members, topo.color_mask, problem.plan_z, problem.plan_coef)
+
+    if engine == "pallas":
+        from repro.kernels.color_step import color_step_fused
+
+        def color_body(carry, cm):
+            z, coef = carry
+            members, member_mask, _, _ = cm
+            z, coef = color_step_fused(
+                z, coef, members,
+                problem.nbr_idx[members],
+                nbr_mask[:, members] & member_mask[None, :, None],
+                gram[:, members], chol[:, members],
+                problem.lam_pad[members],
+            )
+            return (z, coef), None
+    else:
+
+        def color_body(carry, cm):
+            z, coef = carry
+            members, member_mask, plan_z_c, plan_coef_c = cm
+            idx_m, coef_new, z_new = solve(
+                nbr_mask, gram, chol, z, coef, members, member_mask
+            )
+            if engine == "plan":
+                z, coef = _apply_plan(
+                    z, coef, z_new, coef_new, plan_z_c, plan_coef_c
+                )
+            else:
+                z, coef = _apply_onehot(
+                    z, coef, z_new, coef_new, idx_m, members,
+                    problem.n_z, problem.n + 1,
+                )
+            return (z, coef), None
 
     def sweep(carry, _):
-        carry, _ = jax.lax.scan(color_body, carry, (topo.color_members, topo.color_mask))
+        carry, _ = jax.lax.scan(color_body, carry, xs)
         return carry, None
 
     (z, coef), _ = jax.lax.scan(sweep, (z, coef), None, length=n_sweeps)
     return z, coef
 
 
-@partial(jax.jit, static_argnames=("n_sweeps",))
+@partial(jax.jit, static_argnames=("n_sweeps", "engine"))
 def colored_sweep(
-    problem: SNTrainProblem, state: SNTrainState, n_sweeps: int = 1
+    problem: SNTrainProblem,
+    state: SNTrainState,
+    n_sweeps: int = 1,
+    *,
+    engine: str = "plan",
 ) -> SNTrainState:
     """Distance-2-colored parallel SOP (paper Sec. 3.3 'Parallelism').
 
     Single-field problems run the same core with B = 1 (so batched B=1 and
-    single-field results are identical by construction)."""
+    single-field results are identical by construction).
+
+    engine: "plan" (static scatter plans, the O(n*D) default), "onehot"
+    (dense one-hot GEMM reference, O(n^2)) or "pallas" (fused VMEM color-step
+    kernel).  All three share the local solves and produce identical fixed
+    points; see the module docstring.
+    """
     if problem.batched:
         z, coef = _colored_core(
             problem, problem.nbr_mask, problem.gram, problem.chol,
-            state.z, state.coef, n_sweeps,
+            state.z, state.coef, n_sweeps, engine,
         )
         return SNTrainState(z=z, coef=coef)
     z, coef = _colored_core(
         problem,
         problem.nbr_mask[None], problem.gram[None], problem.chol[None],
-        state.z[None], state.coef[None], n_sweeps,
+        state.z[None], state.coef[None], n_sweeps, engine,
     )
     return SNTrainState(z=z[0], coef=coef[0])
 
@@ -554,16 +684,20 @@ def sharded_sweep(
     *,
     axis: str = "sensors",
     n_sweeps: int = 1,
+    engine: str = "plan",
 ) -> SNTrainState:
     """colored_sweep distributed with shard_map over `axis`.
 
     Single-field: color members are sharded across devices.  Every device
-    updates its shard of the current color class; because a color's
-    neighborhoods are disjoint, the per-device message updates are disjoint,
-    and the transport reduces to one psum of deltas per color step — the
-    all-reduce realization of the paper's neighbor messages (DESIGN.md
-    Sec. 2).  z and coef are replicated; the heavy per-sensor solves are
-    fully parallel.
+    solves its shard of the current color class; because a color's
+    neighborhoods are disjoint, the per-device updates touch disjoint slots,
+    and the transport reduces to one all-gather of the color's TOUCHED
+    values — shape (M*D,) of fresh z messages plus (M, D) of fresh
+    coefficients — after which every device applies the color's static
+    scatter plan locally.  This replaces the former full (n_z,) + (n+1, D)
+    delta psum: per-color traffic is proportional to the color's work, not
+    the network size.  z and coef are replicated; the heavy per-sensor
+    solves are fully parallel.
 
     Batched: the *field* axis is sharded instead — fields are independent
     problems, so each device runs the colored engine on its own B/n_dev
@@ -572,9 +706,17 @@ def sharded_sweep(
     """
     if problem.batched:
         return _sharded_sweep_fields(
-            problem, state, mesh, axis=axis, n_sweeps=n_sweeps
+            problem, state, mesh, axis=axis, n_sweeps=n_sweeps, engine=engine
         )
 
+    if engine not in ENGINES:
+        raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+    if engine != "plan":
+        raise NotImplementedError(
+            "single-field sharded_sweep implements the plan transport only "
+            "(the psum payload IS the plan's touched-slot buffer); engine "
+            "selection applies to batched, field-sharded problems"
+        )
     topo = problem.topology
     n_dev = mesh.shape[axis]
     n_colors, m_max = topo.color_members.shape
@@ -583,13 +725,11 @@ def sharded_sweep(
     members = jnp.pad(topo.color_members, ((0, 0), (0, pad)), constant_values=problem.n)
     mask = jnp.pad(topo.color_mask, ((0, 0), (0, pad)))
     # (n_colors, n_dev, m_pad // n_dev): device axis second for sharding.
+    # Padding is APPENDED, so a member's global flat position (m*D + k, the
+    # coordinate system of the scatter plans) is dev*m_local*D + local.
     members = members.reshape(n_colors, n_dev, -1)
     mask = mask.reshape(n_colors, n_dev, -1)
-    update = partial(
-        _color_update_b,
-        problem.nbr_idx, lam_pad=problem.lam_pad,
-        n_z=problem.n_z, n_rows=problem.n + 1,
-    )
+    solve = partial(_color_solve, problem.nbr_idx, problem.lam_pad)
 
     def device_fn(z, coef, members_l, mask_l):
         # members_l: (n_colors, 1, m_local) local shard.
@@ -598,18 +738,32 @@ def sharded_sweep(
 
         def color_body(carry, cm):
             z, coef = carry
-            mem, mmask = cm
-            z_new, coef_new = update(
-                nbr_mask=problem.nbr_mask[None], gram=problem.gram[None],
-                chol=problem.chol[None],
-                z=z[None], coef=coef[None], members=mem, member_mask=mmask,
+            mem, mmask, plan_z_c, plan_coef_c = cm
+            _, coef_new, z_new = solve(
+                problem.nbr_mask[None], problem.gram[None], problem.chol[None],
+                z[None], coef[None], mem, mmask,
             )
-            dz = jax.lax.psum(z_new[0] - z, axis)
-            dcoef = jax.lax.psum(coef_new[0] - coef, axis)
-            return (z + dz, coef + dcoef), None
+            # Assemble the color's touched values: device order equals the
+            # plans' flat member order (padding is appended), so one tiled
+            # all-gather of each device's fresh slice IS the (m_pad, D)
+            # buffer — no zero-padded psum, payload exactly M*D.
+            z_full = jax.lax.all_gather(
+                z_new[0].reshape(-1), axis, tiled=True
+            )  # (m_pad*D,)
+            c_full = jax.lax.all_gather(
+                coef_new[0], axis, tiled=True
+            )  # (m_pad, D)
+            z, coef = _apply_plan(
+                z[None], coef[None], z_full[None], c_full[None],
+                plan_z_c, plan_coef_c,
+            )
+            return (z[0], coef[0]), None
 
         def sweep(carry, _):
-            carry, _ = jax.lax.scan(color_body, carry, (members_l, mask_l))
+            carry, _ = jax.lax.scan(
+                color_body, carry,
+                (members_l, mask_l, problem.plan_z, problem.plan_coef),
+            )
             return carry, None
 
         (z, coef), _ = jax.lax.scan(sweep, (z, coef), None, length=n_sweeps)
@@ -625,7 +779,7 @@ def sharded_sweep(
     return SNTrainState(z=z, coef=coef)
 
 
-def _sharded_sweep_fields(problem, state, mesh, *, axis, n_sweeps):
+def _sharded_sweep_fields(problem, state, mesh, *, axis, n_sweeps, engine="plan"):
     """Field-data-parallel sharding of the batched colored engine."""
     b = problem.batch_size
     n_dev = mesh.shape[axis]
@@ -633,7 +787,9 @@ def _sharded_sweep_fields(problem, state, mesh, *, axis, n_sweeps):
         raise ValueError(f"batch size {b} must divide over {n_dev} devices")
 
     def device_fn(nbr_mask, gram, chol, z, coef):
-        return _colored_core(problem, nbr_mask, gram, chol, z, coef, n_sweeps)
+        return _colored_core(
+            problem, nbr_mask, gram, chol, z, coef, n_sweeps, engine
+        )
 
     spec = P(axis)
     fn = compat.shard_map(

@@ -32,6 +32,14 @@ sweep machinery — serial, colored, sharded — runs unchanged on the absorbed
 problem; a few post-arrival sweeps propagate the new information through the
 network.  All constraint sets remain subspaces containing 0, so Fejér
 monotonicity of the weighted norm (Lemma 2.1) is preserved across arrivals.
+
+Over-capacity policy: by default an arrival at a FULL sensor is dropped.
+``evict_oldest`` frees a full sensor's oldest arrival instead — remaining
+arrivals shift down one slot (preserving the left-to-right == chronological
+invariant the grow-one update relies on) and the sensor's factor is
+downdated by a masked rebuild of its (D, D) Cholesky, O(D^3) for ONE sensor.
+``absorb(..., on_full="evict")`` applies it automatically, turning each
+sensor's stream slots into a sliding window over its most recent arrivals.
 """
 
 from __future__ import annotations
@@ -124,6 +132,18 @@ _absorb_copy = jax.jit(_absorb)
 _absorb_donate = jax.jit(_absorb, donate_argnums=(0, 1))
 
 
+def _absorb_evict(problem, state, field, sensor, x, y):
+    """One fused program: evict the oldest arrival IF the sensor is full,
+    then absorb — a single dispatch/copy per arrival, not two."""
+    full = jnp.all(problem.nbr_mask[field, sensor])
+    problem, state, _ = _evict_core(problem, state, field, sensor, full)
+    return _absorb(problem, state, field, sensor, x, y)
+
+
+_absorb_evict_copy = jax.jit(_absorb_evict)
+_absorb_evict_donate = jax.jit(_absorb_evict, donate_argnums=(0, 1))
+
+
 def absorb(
     problem: SNTrainProblem,
     state: SNTrainState,
@@ -133,6 +153,7 @@ def absorb(
     y: jax.Array,
     *,
     donate: bool = False,
+    on_full: str = "drop",
 ) -> tuple[SNTrainProblem, SNTrainState, jax.Array]:
     """Absorb one measurement (x, y) arriving at ``sensor`` of ``field``.
 
@@ -144,6 +165,14 @@ def absorb(
     flags; capacity comes from building the topology with d_max headroom.
     jit-compiled; ``field`` and ``sensor`` may be traced ints, so one
     compiled program serves every arrival.
+
+    on_full="evict" frees the sensor's OLDEST arrival first (see
+    ``evict_oldest``) whenever the sensor is full, so its stream slots act
+    as a sliding window over the most recent measurements.  The one fused
+    program handles both cases (no extra dispatch when the sensor has
+    room).  Note the window needs at least one stream slot: a sensor built
+    with ZERO headroom (deg == d_max) holds no arrival to evict, so its
+    arrivals are still dropped — check ``capacity_left`` at build time.
 
     donate=True hands the input buffers to XLA for in-place update — the
     per-arrival cost drops from a full copy of the per-field arrays to the
@@ -157,8 +186,133 @@ def absorb(
             "problem has no streaming capacity — build the topology with "
             "d_max headroom (build_topology(pos, r, d_max=max_degree + k))"
         )
-    fn = _absorb_donate if donate else _absorb_copy
+    if on_full not in ("drop", "evict"):
+        raise ValueError(f"on_full must be 'drop' or 'evict', got {on_full!r}")
+    if on_full == "evict":
+        fn = _absorb_evict_donate if donate else _absorb_evict_copy
+    else:
+        fn = _absorb_donate if donate else _absorb_copy
     return fn(problem, state, field, sensor, x, y)
+
+
+def _evict_core(
+    problem: SNTrainProblem,
+    state: SNTrainState,
+    field: jax.Array,
+    sensor: jax.Array,
+    gate: jax.Array,
+) -> tuple[SNTrainProblem, SNTrainState, jax.Array]:
+    n = problem.n
+    d_max = problem.nbr_idx.shape[-1]
+    field = jnp.asarray(field, jnp.int32)
+    sensor = jnp.asarray(sensor, jnp.int32)
+    deg = problem.topology.degrees[sensor]  # structural |N_s| (self incl.)
+    mask_s = problem.nbr_mask[field, sensor]  # (D,)
+    ar = jnp.arange(d_max)
+    occ = mask_s & (ar >= deg)  # occupied stream slots (contiguous from deg)
+    ok = occ.any() & jnp.asarray(gate, bool)
+    last = deg + jnp.sum(occ) - 1  # last occupied stream slot (when ok)
+
+    # Shift stream slots [deg+1, last] down one; slot `last` becomes free.
+    # Every per-slot array is permuted the same way, so the left-to-right
+    # chronological fill invariant (absorb's argmin and the grow-one update
+    # both rely on it) is restored after the eviction.
+    perm = jnp.where((ar >= deg) & (ar < last), ar + 1, ar)
+    freed = ar == last
+
+    pos_s = problem.nbr_pos[field, sensor]  # (D, d)
+    own = problem.topology.positions[sensor].astype(pos_s.dtype)  # (d,)
+    new_pos = jnp.where(freed[:, None], own[None, :], pos_s[perm])
+    new_mask = jnp.where(freed, False, mask_s[perm])
+
+    # Gram: permute rows/cols (exact — the kept entries are the very floats
+    # the original absorptions computed), then zero the freed row/col.
+    g = problem.gram[field, sensor]
+    keep = ~freed
+    g2 = jnp.where(keep[:, None] & keep[None, :], g[perm][:, perm], 0.0)
+
+    # Downdate = masked rebuild of this ONE sensor's factor, O(D^3): padded
+    # rows get unit diagonal so the factor stays SPD and the grow-one update
+    # keeps working on the evicted problem.
+    lam_s = problem.lam_pad[sensor]
+    diag = jnp.where(new_mask, lam_s, jnp.ones((), lam_s.dtype))
+    new_chol = jsl.cholesky(g2 + jnp.diag(diag), lower=True)
+
+    # Messages and coefficients ride along with their slots; the freed
+    # slot's message/coefficient reset to 0 (the unoccupied convention).
+    zids = problem.nbr_idx[sensor]  # (D,) fixed slot ids
+    zvals = state.z[field, zids]
+    tvals = jnp.where(freed, 0.0, zvals[perm])
+    z_write = jnp.where(ok & (ar >= deg), tvals, zvals)
+    z = state.z.at[field, zids].set(z_write)
+
+    coef_s = state.coef[field, sensor]
+    c_new = jnp.where(freed, 0.0, coef_s[perm])
+    c_write = jnp.where(ok & (ar >= deg), c_new, coef_s)
+    coef = state.coef.at[field, sensor].set(c_write)
+
+    # stream_pos entries of this sensor shift the same way (dump writes for
+    # non-stream lanes and the not-ok case into a scratch row).
+    s_cap = problem.n_stream
+    spv = jnp.pad(problem.stream_pos[field], ((0, 1), (0, 0)))
+    sp_gather = jnp.where(ar >= deg, jnp.clip(zids - n, 0, s_cap), s_cap)
+    cur_sp = spv[sp_gather]  # (D, d); zeros for non-stream lanes
+    sp_vals = jnp.where(freed[:, None], 0.0, cur_sp[perm])
+    sp_idx = jnp.where(ok & (ar >= deg), zids - n, s_cap)
+    new_sp = spv.at[sp_idx].set(sp_vals)[:s_cap]
+
+    problem = dataclasses.replace(
+        problem,
+        nbr_pos=problem.nbr_pos.at[field, sensor].set(
+            jnp.where(ok, new_pos, pos_s)
+        ),
+        nbr_mask=problem.nbr_mask.at[field, sensor].set(
+            jnp.where(ok, new_mask, mask_s)
+        ),
+        gram=problem.gram.at[field, sensor].set(jnp.where(ok, g2, g)),
+        chol=problem.chol.at[field, sensor].set(
+            jnp.where(ok, new_chol, problem.chol[field, sensor])
+        ),
+        stream_pos=problem.stream_pos.at[field].set(new_sp),
+    )
+    return problem, SNTrainState(z=z, coef=coef), ok
+
+
+_evict_jit = jax.jit(_evict_core)
+_evict_donate = jax.jit(_evict_core, donate_argnums=(0, 1))
+
+
+def evict_oldest(
+    problem: SNTrainProblem,
+    state: SNTrainState,
+    field: jax.Array,
+    sensor: jax.Array,
+    *,
+    donate: bool = False,
+) -> tuple[SNTrainProblem, SNTrainState, jax.Array]:
+    """Free the OLDEST occupied reserved slot of ``sensor`` in ``field``.
+
+    Returns ``(problem, state, evicted)``; ``evicted`` is False (and the
+    call is a no-op) when the sensor holds no absorbed arrival.  The
+    remaining arrivals shift down one slot so absorb's left-to-right fill
+    invariant survives, the sensor's Gram is permuted accordingly, and its
+    Cholesky factor is downdated by a masked rebuild (O(D^3) for the one
+    sensor; everything else is untouched).  After evict, an ``absorb`` at
+    the same sensor reuses the freed slot — the round-trip equals building
+    the window's problem from scratch (tests/test_multifield.py).
+
+    donate=True hands the buffers to XLA in place, same contract as
+    ``absorb``: the caller must rebind and drop the old problem/state.
+    """
+    if not problem.batched:
+        raise ValueError("streaming requires a batched problem (use B = 1)")
+    if problem.n_stream == 0:
+        raise ValueError(
+            "problem has no streaming capacity — build the topology with "
+            "d_max headroom (build_topology(pos, r, d_max=max_degree + k))"
+        )
+    fn = _evict_donate if donate else _evict_jit
+    return fn(problem, state, field, sensor, True)
 
 
 def rebuild_chol(problem: SNTrainProblem) -> jnp.ndarray:

@@ -4,11 +4,23 @@ kernel_matvec — fused Gram x coef streaming evaluation (testing phase);
                 also the multi-field batched variant (B expansions against a
                 shared query grid in one launch)
 gram          — tiled RBF Gram materialization (training-side local solves)
+color_step    — fused colored-sweep step: gather -> lane-blocked triangular
+                substitution -> local GEMM -> scatter, all in VMEM (the
+                ``engine="pallas"`` path of sn_train.colored_sweep)
 ops           — general-shape jit wrappers (auto interpret off-TPU)
 ref           — pure-jnp oracles used by tests and benchmarks
 """
 
-from . import ops, ref
+from . import color_step, ops, ref
+from .color_step import color_step_fused
 from .ops import kernel_matvec, rbf_gram, ssd_chunked_fused
 
-__all__ = ["kernel_matvec", "ops", "rbf_gram", "ref", "ssd_chunked_fused"]
+__all__ = [
+    "color_step",
+    "color_step_fused",
+    "kernel_matvec",
+    "ops",
+    "rbf_gram",
+    "ref",
+    "ssd_chunked_fused",
+]

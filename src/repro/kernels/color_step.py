@@ -1,0 +1,186 @@
+"""Fused Pallas color-step kernel for the colored SN-Train engine.
+
+One color step of the paper's Sec-3.3 parallel SOP sweep, entirely in VMEM:
+
+  gather   z at the color's (M, D) message-slot ids and the members' previous
+           coefficient rows;
+  solve    (L L^T)^{-1} rhs by lane-blocked forward/back triangular
+           substitution (the same substitution math as
+           ``sn_train._tri_solve_spd``, one lane per member of the block);
+  GEMM     z_new = K_s @ coef_new per lane — a local (D, D) @ (D,) contract;
+  scatter  the freshly solved messages/coefficients back into the full z and
+           coef buffers.  Distance-2 coloring guarantees every touched slot
+           has a unique owner, so the scatter is an exact write (the static
+           scatter plan of sn_train, realized here as an in-VMEM ``.at.set``).
+
+Grid: (B, M / block_m) with the lane-block axis innermost, so each field's
+(1, NZ) / (1, n+1, D) output blocks stay resident in VMEM while the color's
+lane blocks stream through — the same revisiting-accumulator pattern as
+``kernels.kernel_matvec``.  Different lane blocks of one color touch disjoint
+slots (the coloring again), so reading the output block between lane steps is
+exact.
+
+dtype follows the inputs (f32 or, under JAX_ENABLE_X64, f64 — the solver is
+dtype-generic).  On non-TPU backends the wrapper runs in interpret mode (the
+repo's validation mode, see ``kernels.ops``); the in-kernel gathers/scatters
+use dynamic indices, which interpret mode executes exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _color_step_kernel(
+    z_ref, coef_ref, mem_ref, idx_ref, mask_ref, gram_ref, chol_ref, lam_ref,
+    zout_ref, cout_ref,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        zout_ref[...] = z_ref[...]
+        cout_ref[...] = coef_ref[...]
+
+    z = zout_ref[0, :]  # (NZ,) — prior lane blocks wrote disjoint slots
+    coefv = cout_ref[0]  # (R, D)
+    mem = mem_ref[...]  # (bm,)
+    idx = idx_ref[...]  # (bm, D)
+    mask = mask_ref[0] != 0  # (bm, D)
+    gram = gram_ref[0]  # (bm, D, D)
+    chol = chol_ref[0]  # (bm, D, D)
+    lam = lam_ref[...]  # (bm,)
+    d = idx.shape[-1]
+
+    # Gather: this block's messages and previous coefficients.
+    z_nbr = z[idx]  # (bm, D)
+    coef_m = coefv[mem]  # (bm, D)
+    rhs = jnp.where(mask, z_nbr + lam[:, None] * coef_m, 0.0)
+
+    # Lane-blocked forward substitution  L y = rhs.
+    def fwd(i, y):
+        yi = (rhs[:, i] - jnp.sum(chol[:, i, :] * y, axis=-1)) / chol[:, i, i]
+        return y.at[:, i].set(yi)
+
+    y = jax.lax.fori_loop(0, d, fwd, jnp.zeros_like(rhs))
+
+    # Lane-blocked back substitution  L^T x = y.
+    def bwd(t, x):
+        i = d - 1 - t
+        xi = (y[:, i] - jnp.sum(chol[:, :, i] * x, axis=-1)) / chol[:, i, i]
+        return x.at[:, i].set(xi)
+
+    coef_new = jax.lax.fori_loop(0, d, bwd, jnp.zeros_like(rhs))
+
+    # Local (D, D) @ (D,) GEMM per lane: f_s at the neighborhood points.
+    z_new = jnp.einsum("mij,mj->mi", gram, coef_new)
+
+    # Scatter (unique owners; padded lanes write zeros to the sentinels).
+    zout_ref[0, :] = z.at[idx.reshape(-1)].set(z_new.reshape(-1))
+    cout_ref[0] = coefv.at[mem].set(coef_new)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def color_step_pallas(
+    z: jax.Array,
+    coef: jax.Array,
+    members: jax.Array,
+    idx_m: jax.Array,
+    mask_m: jax.Array,
+    gram_m: jax.Array,
+    chol_m: jax.Array,
+    lam_m: jax.Array,
+    *,
+    block_m: int = 8,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Padded inputs required: M % block_m == 0.  Use ``color_step_fused``
+    for the general-shape wrapper."""
+    b, n_z = z.shape
+    _, r, d = coef.shape
+    m = members.shape[0]
+    assert idx_m.shape == (m, d), (idx_m.shape, m, d)
+    assert gram_m.shape == (b, m, d, d) and chol_m.shape == (b, m, d, d)
+    assert m % block_m == 0, (m, block_m)
+    grid = (b, m // block_m)
+    return pl.pallas_call(
+        _color_step_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n_z), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, r, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((block_m,), lambda b, j: (j,)),
+            pl.BlockSpec((block_m, d), lambda b, j: (j, 0)),
+            pl.BlockSpec((1, block_m, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_m, d, d), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, block_m, d, d), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((block_m,), lambda b, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n_z), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, r, d), lambda b, j: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(z.shape, z.dtype),
+            jax.ShapeDtypeStruct(coef.shape, coef.dtype),
+        ],
+        interpret=interpret,
+    )(z, coef, members, idx_m, mask_m, gram_m, chol_m, lam_m)
+
+
+def color_step_fused(
+    z: jax.Array,
+    coef: jax.Array,
+    members: jax.Array,
+    idx_m: jax.Array,
+    mask_m: jax.Array,
+    gram_m: jax.Array,
+    chol_m: jax.Array,
+    lam_m: jax.Array,
+    *,
+    block_m: int = 8,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """General-shape wrapper: one fused color step for all B fields.
+
+    z (B, NZ); coef (B, n+1, D); members (M,) int; idx_m (M, D) int;
+    mask_m (B, M, D) bool; gram_m/chol_m (B, M, D, D); lam_m (M,).
+    Returns the updated (z, coef).
+
+    The lane axis is padded to a block multiple with inert lanes (sentinel
+    member row, sentinel slot ids, identity Cholesky): they solve to exact
+    zeros and scatter them onto the sentinels, which are invariantly zero.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, n_z = z.shape
+    _, r, d = coef.shape
+    m = members.shape[0]
+    block_m = min(block_m, max(1, m))
+    pad = (-m) % block_m
+    if pad:
+        members = jnp.concatenate(
+            [members, jnp.full((pad,), r - 1, members.dtype)]
+        )
+        idx_m = jnp.concatenate(
+            [idx_m, jnp.full((pad, d), n_z - 1, idx_m.dtype)]
+        )
+        mask_m = jnp.concatenate(
+            [mask_m, jnp.zeros((b, pad, d), mask_m.dtype)], axis=1
+        )
+        gram_m = jnp.concatenate(
+            [gram_m, jnp.zeros((b, pad, d, d), gram_m.dtype)], axis=1
+        )
+        eye = jnp.broadcast_to(jnp.eye(d, dtype=chol_m.dtype), (b, pad, d, d))
+        chol_m = jnp.concatenate([chol_m, eye], axis=1)
+        lam_m = jnp.concatenate([lam_m, jnp.ones((pad,), lam_m.dtype)])
+    return color_step_pallas(
+        z, coef,
+        members.astype(jnp.int32), idx_m.astype(jnp.int32),
+        mask_m.astype(jnp.int8), gram_m, chol_m, lam_m,
+        block_m=block_m, interpret=interpret,
+    )

@@ -279,6 +279,98 @@ def test_streaming_arrival_seeds_its_message_slot():
     np.testing.assert_allclose(np.asarray(prob2.stream_pos[1, zid - n]), x)
 
 
+def test_evict_oldest_round_trip_matches_scratch():
+    """Over-capacity policy (ROADMAP): absorb A,B,C -> evict_oldest ->
+    absorb D equals building the B,C,D window from scratch — exactly for
+    every permuted array, to float noise for the downdated factor."""
+    topo, ys, prob0, pos = _setup(b=2, headroom=3)
+    rng = np.random.default_rng(11)
+    s = 4
+    events = [
+        ((pos[s] + 0.1 * rng.normal(size=pos.shape[1])).astype(np.float32),
+         float(rng.normal()))
+        for _ in range(4)
+    ]
+    a, b, c, d = events
+
+    prob1, st1 = prob0, init_state(prob0)
+    for x, y in (a, b, c):
+        prob1, st1, ok = streaming.absorb(prob1, st1, 0, s, x, y)
+        assert bool(ok)
+    prob1, st1, ev = streaming.evict_oldest(prob1, st1, 0, s)
+    assert bool(ev)
+    prob1, st1, ok = streaming.absorb(prob1, st1, 0, s, *d)
+    assert bool(ok)
+
+    prob2, st2 = prob0, init_state(prob0)
+    for x, y in (b, c, d):
+        prob2, st2, ok = streaming.absorb(prob2, st2, 0, s, x, y)
+        assert bool(ok)
+
+    for name in ("nbr_pos", "nbr_mask", "gram", "stream_pos"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(prob1, name)), np.asarray(getattr(prob2, name)),
+            err_msg=name,
+        )
+    np.testing.assert_array_equal(np.asarray(st1.z), np.asarray(st2.z))
+    # the masked-rebuild downdate vs three grow-one updates: same factor up
+    # to float noise, and still consistent with a from-scratch rebuild
+    np.testing.assert_allclose(
+        np.asarray(prob1.chol), np.asarray(prob2.chol), atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(prob1.chol), np.asarray(streaming.rebuild_chol(prob1)),
+        atol=1e-5,
+    )
+
+
+def test_evict_oldest_empty_sensor_is_noop():
+    topo, ys, prob, pos = _setup(b=2, headroom=2)
+    state = init_state(prob)
+    prob2, state2, ev = streaming.evict_oldest(prob, state, 1, 7)
+    assert not bool(ev)
+    np.testing.assert_array_equal(np.asarray(prob2.gram), np.asarray(prob.gram))
+    np.testing.assert_array_equal(
+        np.asarray(prob2.nbr_mask), np.asarray(prob.nbr_mask)
+    )
+    np.testing.assert_array_equal(np.asarray(state2.z), np.asarray(state.z))
+
+
+def test_absorb_on_full_evicts_sliding_window():
+    """on_full="evict": a full sensor absorbs by dropping its OLDEST
+    arrival; sweeps on the evicted problem stay finite and Fejér-decrease."""
+    topo, ys, prob, pos = _setup(b=1, headroom=2)
+    state = init_state(prob)
+    s = 0
+    cap = int(np.asarray(streaming.capacity_left(prob))[0, s])
+    xs = [pos[s] + np.float32(0.01 * (i + 1)) for i in range(cap + 1)]
+    for i in range(cap):
+        prob, state, ok = streaming.absorb(prob, state, 0, s, xs[i], float(i))
+        assert bool(ok)
+    prob, state, ok = streaming.absorb(
+        prob, state, 0, s, xs[cap], 99.0, on_full="evict"
+    )
+    assert bool(ok)  # absorbed, not dropped
+    assert int(np.asarray(streaming.capacity_left(prob))[0, s]) == 0
+    # the window now holds arrivals 1..cap: the sensor's stream positions
+    # match xs[1:], in order
+    deg = int(np.asarray(topo.degrees)[s])
+    zids = np.asarray(prob.nbr_idx)[s, deg:]
+    got = np.asarray(prob.stream_pos)[0, zids - prob.n]
+    np.testing.assert_allclose(got, np.asarray(xs[1:]), atol=1e-7)
+    np.testing.assert_allclose(
+        np.asarray(prob.chol), np.asarray(streaming.rebuild_chol(prob)),
+        atol=1e-4,
+    )
+    prev = np.asarray(weighted_norm_sq(prob, state))
+    for _ in range(3):
+        state = colored_sweep(prob, state, n_sweeps=1)
+        cur = np.asarray(weighted_norm_sq(prob, state))
+        assert np.isfinite(cur).all()
+        assert (cur <= prev * 1.06 + 1e-5).all()
+        prev = cur
+
+
 # ---------------------------------------------------------------------------
 # Batched serving path: sharded fields + fused multi-field evaluation
 # ---------------------------------------------------------------------------
