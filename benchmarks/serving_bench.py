@@ -1,0 +1,161 @@
+"""kNN-fusion serving throughput: dense oracle vs static query plans.
+
+Sweeps the network size n at fixed query load (Q queries x B fields, kNN
+order k) and times one warm dispatch of every ``fusion.fuse(rule="knn")``
+engine:
+
+  * ``dense``  — evaluate all n sensors + dense (Q, n) top-k, O(Q*n*D);
+  * ``plan``   — static cell-candidate query plan, O(Q*k*D);
+  * ``pallas`` — the fused VMEM kernel over the same plan
+                 (``repro.kernels.knn_fuse``; interpret mode off-TPU).
+
+The radius shrinks as 1/sqrt(n) so the padded degree D and the plan's
+candidate width K_max stay ~constant — the mote regime where per-query
+work should not grow with the network.  Expected shape: dense
+field-queries/s degrades ~1/n while plan/pallas stay ~flat (the serving
+analogue of ``multifield_bench --scaling`` for the training sweep).
+
+Results go to ``BENCH_serving.json``; ``serving_fast`` is the trimmed
+variant ``benchmarks/run.py --fast`` runs so the numbers land in the CI
+``bench-json`` artifact.
+
+Run:  PYTHONPATH=src python -m benchmarks.serving_bench
+      PYTHONPATH=src python -m benchmarks.serving_bench --ns 100,1000 --queries 4096
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (
+    Kernel,
+    build_topology,
+    colored_sweep,
+    fusion,
+    init_state,
+    make_batch_problem,
+    make_serving_plan,
+    uniform_sensors,
+)
+
+
+def _problem(n, b, radius, lam, seed=0):
+    rng = np.random.default_rng(seed)
+    pos = uniform_sensors(n, d=2, seed=seed)
+    topo = build_topology(pos, radius)
+    freq = rng.uniform(0.5, 2.0, size=(b, 1))
+    ys = np.sin(np.pi * freq * pos[None, :, 0]) + 0.3 * rng.normal(size=(b, n))
+    prob = make_batch_problem(
+        topo, Kernel("rbf", gamma=1.0), ys, jnp.full((n,), lam)
+    )
+    state = colored_sweep(prob, init_state(prob), n_sweeps=3)
+    return prob, state
+
+
+def _time_engine(prob, state, xq, k, engine, plan, reps=2):
+    run = lambda: fusion.fuse(
+        prob, state, xq, "knn", k=k, engine=engine, plan=plan
+    )
+    run().block_until_ready()  # compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run().block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def sweep(ns, queries, k, batch, engines, radius=0.3, lam=0.1, reps=2):
+    rng = np.random.default_rng(1)
+    xq = rng.uniform(-1, 1, size=(queries, 2)).astype(np.float32)
+    entries = []
+    hdr = " ".join(f"{('fq/s ' + e):>14s}" for e in engines)
+    print(f"{'n':>6s} {'D':>4s} {'K_max':>6s} {hdr}")
+    for n in ns:
+        r = radius * math.sqrt(100.0 / n)
+        prob, state = _problem(n, batch, r, lam)
+        plan = make_serving_plan(prob, k=k)
+        row = {
+            "n": n, "d_max": prob.topology.d_max, "k": k,
+            "batch": batch, "queries": queries,
+            "plan_cells": plan.n_cells, "plan_k_max": plan.k_max,
+        }
+        for engine in engines:
+            t = _time_engine(prob, state, xq, k, engine, plan, reps=reps)
+            row[f"s_per_call_{engine}"] = t
+            row[f"fqps_{engine}"] = queries * batch / t
+        entries.append(row)
+        cols = " ".join(f"{row[f'fqps_{e}']:>14.0f}" for e in engines)
+        print(f"{n:6d} {prob.topology.d_max:4d} {plan.k_max:6d} {cols}")
+    return entries
+
+
+def _speedups(out, entries, engines, at_n):
+    ref = next((e for e in entries if e["n"] == at_n), None)
+    if ref is None or "s_per_call_dense" not in ref:
+        return
+    for e in engines:
+        if e != "dense" and f"s_per_call_{e}" in ref:
+            out[f"speedup_at_n{at_n}_{e}"] = (
+                ref["s_per_call_dense"] / ref[f"s_per_call_{e}"]
+            )
+
+
+def serving_fast(rows):
+    """Trimmed sweep for ``benchmarks/run.py --fast`` (CI bench-json rows)."""
+    engines = ("dense", "plan", "pallas")
+    entries = sweep(
+        ns=(100, 300), queries=512, k=3, batch=4, engines=engines, reps=1
+    )
+    for e in entries:
+        for eng in engines:
+            rows.append(
+                (
+                    f"serving.n{e['n']}.{eng}",
+                    e[f"s_per_call_{eng}"] * 1e6,
+                    f"fqps={e[f'fqps_{eng}']:.0f}",
+                )
+            )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ns", default="100,200,500,1000,2000")
+    ap.add_argument("--queries", type=int, default=4096)
+    ap.add_argument("--k", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--engines", default="dense,plan,pallas")
+    ap.add_argument("--radius", type=float, default=0.3)
+    ap.add_argument("--lam", type=float, default=0.1)
+    ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+    ns = [int(s) for s in args.ns.split(",")]
+    engines = [e.strip() for e in args.engines.split(",") if e.strip()]
+    entries = sweep(
+        ns, args.queries, args.k, args.batch, engines,
+        radius=args.radius, lam=args.lam, reps=args.reps,
+    )
+    out = {
+        "name": "serving", "batch": args.batch, "queries": args.queries,
+        "k": args.k, "entries": entries,
+    }
+    for at_n in (1000, ns[-1]):
+        _speedups(out, entries, engines, at_n)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    for key, v in out.items():
+        if key.startswith("speedup"):
+            print(f"{key}: {v:.1f}x")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,9 @@ def main():
     ap.add_argument("--sweeps", type=int, default=30)
     ap.add_argument("--stream", type=int, default=0)
     ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--fusion", default="conn", choices=["conn", "knn"])
+    ap.add_argument("--k", type=int, default=3)
+    ap.add_argument("--engine", default="plan", choices=["dense", "plan", "pallas"])
     args = ap.parse_args()
 
     if args.mode == "field":
@@ -42,6 +45,9 @@ def main():
             "--sweeps", str(args.sweeps),
             "--stream", str(args.stream),
             "--queries", str(args.queries),
+            "--fusion", args.fusion,
+            "--k", str(args.k),
+            "--engine", args.engine,
         ]
     else:
         cmd = [

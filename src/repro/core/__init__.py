@@ -17,6 +17,7 @@ from . import (
     consensus,
     fusion,
     kernels_math,
+    serving,
     sn_train,
     sop,
     streaming,
@@ -24,6 +25,7 @@ from . import (
 )
 from .centralized import KRRModel, fit_krr, predict
 from .kernels_math import Kernel
+from .serving import ServingPlan, make_serving_plan
 from .sn_train import (
     SNTrainProblem,
     SNTrainState,
@@ -50,6 +52,9 @@ __all__ = [
     "SNTrainProblem",
     "SNTrainState",
     "SensorTopology",
+    "ServingPlan",
+    "make_serving_plan",
+    "serving",
     "build_topology",
     "centralized",
     "colored_sweep",

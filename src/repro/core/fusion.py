@@ -9,6 +9,27 @@ them with one of three strategies from the paper:
   * connectivity-averaged: f(x) = sum_s |N_s| f_s(x) / sum_s |N_s| (Eq. 20)
 
 k = 1 is "nearest neighbor", k = n is the plain network average.
+
+Every rule accepts single-field problems ((Q,) output) and batched
+multi-field problems ((B, Q) output).  Dtypes follow the problem/state
+arrays, so x64 problems (the paper-lambda configuration) serve f64
+predictions end-to-end through every rule in this module and through the
+plan engines of ``repro.core.serving``.  (The one f32 fast path is the
+collapsed ``global_coefficients`` expansion when evaluated via
+``repro.kernels.kernel_matvec``, whose Pallas matvec computes in f32 by
+its documented TPU contract.)
+
+Serving engines (the query-plan taxonomy; the training-side analogue is
+``sn_train``'s color-step scatter plans):
+
+  ``fuse(rule="knn"/"nn", engine=...)`` selects how kNN fusion executes —
+  ``"dense"`` (default; this module) evaluates ALL n sensors at all Q
+  queries and top-k's a dense (Q, n) distance matrix — O(Q*n*D), the
+  independently simple oracle; ``"plan"`` and ``"pallas"`` route through
+  the static cell-candidate query plans of ``repro.core.serving``
+  (``make_serving_plan``), touching one bounded cell neighborhood per
+  query — O(Q*k*D), with ``"pallas"`` fusing the whole select+evaluate
+  step per query tile in VMEM (``repro.kernels.knn_fuse``).
 """
 
 from __future__ import annotations
@@ -35,8 +56,13 @@ def _eval_all(kernel, nbr_pos, nbr_mask, coef, xq):
 def evaluate_sensors(
     problem: SNTrainProblem, state: SNTrainState, xq: jax.Array
 ) -> jax.Array:
-    """Per-sensor global estimates at queries: (n, Q)."""
-    xq = jnp.atleast_2d(jnp.asarray(xq, jnp.float32))
+    """Per-sensor global estimates at queries: (n, Q), batched (B, n, Q)."""
+    xq = jnp.atleast_2d(jnp.asarray(xq, problem.nbr_pos.dtype))
+    if problem.batched:
+        preds = jax.vmap(
+            lambda np_, nm, cf: _eval_all(problem.kernel, np_, nm, cf, xq)
+        )(problem.nbr_pos, problem.nbr_mask, state.coef)
+        return preds[:, : problem.n]
     preds = _eval_all(
         problem.kernel, problem.nbr_pos, problem.nbr_mask, state.coef, xq
     )
@@ -44,18 +70,29 @@ def evaluate_sensors(
 
 
 def single_sensor(preds: jax.Array, s: int = 0) -> jax.Array:
-    return preds[s]
+    return preds[..., s, :]
 
 
 def knn_fusion(
     preds: jax.Array, positions: jax.Array, xq: jax.Array, k: int
 ) -> jax.Array:
-    """Average the k sensors nearest each query (paper Eq. 19)."""
-    xq = jnp.atleast_2d(jnp.asarray(xq, jnp.float32))
+    """Average the k sensors nearest each query (paper Eq. 19).
+
+    preds: (..., n, Q) per-sensor estimates (any leading field axes); the
+    selected sensors depend only on the shared positions, so the top-k runs
+    once and broadcasts.  This is the dense O(Q*n) oracle — serving goes
+    through ``repro.core.serving.knn_fuse``, which answers the same rule
+    from a static cell-candidate plan in O(Q*k).
+    """
+    xq = jnp.atleast_2d(jnp.asarray(xq, preds.dtype))
+    positions = positions.astype(preds.dtype)
     d2 = jnp.sum((xq[:, None, :] - positions[None, :, :]) ** 2, axis=-1)  # (Q, n)
     _, idx = jax.lax.top_k(-d2, k)  # (Q, k)
-    gathered = jnp.take_along_axis(preds.T, idx, axis=1)  # (Q, k)
-    return jnp.mean(gathered, axis=1)
+    pt = jnp.swapaxes(preds, -1, -2)  # (..., Q, n)
+    gathered = jnp.take_along_axis(
+        pt, jnp.broadcast_to(idx, pt.shape[:-2] + idx.shape), axis=-1
+    )  # (..., Q, k)
+    return jnp.mean(gathered, axis=-1)
 
 
 def nearest_neighbor(preds: jax.Array, positions: jax.Array, xq: jax.Array) -> jax.Array:
@@ -63,13 +100,13 @@ def nearest_neighbor(preds: jax.Array, positions: jax.Array, xq: jax.Array) -> j
 
 
 def network_average(preds: jax.Array) -> jax.Array:
-    return jnp.mean(preds, axis=0)
+    return jnp.mean(preds, axis=-2)
 
 
 def connectivity_averaged(preds: jax.Array, degrees: jax.Array) -> jax.Array:
     """Degree-weighted average (paper Eq. 20)."""
-    w = degrees.astype(jnp.float32)
-    return (w[:, None] * preds).sum(0) / w.sum()
+    w = degrees.astype(preds.dtype)
+    return (w[:, None] * preds).sum(-2) / w.sum()
 
 
 def global_coefficients(
@@ -86,15 +123,16 @@ def global_coefficients(
     of n per-sensor evaluations.
 
     Returns (anchors, coefs): single-field (A, d), (A,); batched
-    (B, A, d), (B, A) with A = n + n_stream.
+    (B, A, d), (B, A) with A = n + n_stream.  Dtypes follow the state.
     """
     n = problem.n
     s_cap = problem.n_stream
-    deg = problem.topology.degrees.astype(jnp.float32)
+    cdt = state.coef.dtype
+    deg = problem.topology.degrees.astype(cdt)
     if rule == "conn":
         w = deg / deg.sum()
     elif rule == "avg":
-        w = jnp.full((n,), 1.0 / n, jnp.float32)
+        w = jnp.full((n,), 1.0 / n, cdt)
     else:
         raise ValueError(f"global_coefficients supports 'avg'/'conn', got {rule!r}")
     w_pad = jnp.concatenate([w, jnp.zeros((1,), w.dtype)])  # sentinel sensor row
@@ -127,8 +165,32 @@ def fuse(
     *,
     k: int = 1,
     sensor: int = 0,
+    engine: str = "dense",
+    plan=None,
 ) -> jax.Array:
-    """Convenience dispatcher over the paper's three rules."""
+    """Convenience dispatcher over the paper's three rules.
+
+    Returns (Q,) for single-field problems, (B, Q) for batched ones.
+
+    engine: for the kNN rules ("nn"/"knn"), "dense" runs the all-sensors
+    oracle in this module; "plan"/"pallas" route through the static query
+    plans of ``repro.core.serving`` (pass a prebuilt ``plan`` from
+    ``make_serving_plan`` to amortize the host-side precomputation across
+    requests).  The other rules are already O(n)-per-query and accept only
+    "dense".
+    """
+    if rule in ("nn", "knn") and engine != "dense":
+        from . import serving
+
+        return serving.knn_fuse(
+            problem, state, xq,
+            k=(1 if rule == "nn" else k), plan=plan, engine=engine,
+        )
+    if engine != "dense":
+        raise ValueError(
+            f"engine={engine!r} applies to the kNN rules only; "
+            f"rule {rule!r} supports engine='dense'"
+        )
     preds = evaluate_sensors(problem, state, xq)
     if rule == "single":
         return single_sensor(preds, sensor)

@@ -1,0 +1,295 @@
+"""Static query plans for kNN-fusion serving (paper Sec. 3.3, Eq. 19).
+
+The paper's testing phase answers a query x by averaging the k sensors
+nearest x (kNN fusion — the rule their Sec. 4 simulations show wins for
+field estimation).  The dense realization (``fusion.evaluate_sensors`` +
+``fusion.knn_fusion``) evaluates ALL n sensors at ALL Q queries and
+materializes a (Q, n) distance matrix: O(Q*n*D) compute and O(Q*n) HBM for
+an answer that only ever reads k ~ 1..5 sensors per query.
+
+This module applies the same locality that makes SN-Train itself local: a
+query's k nearest sensors live in a bounded spatial neighborhood, so
+per-query work should be independent of n.  Mirroring the static scatter
+plans of ``sn_train._build_color_plans``, everything data-dependent is
+precomputed host-side at problem-build time:
+
+  * the sensor positions are bucketed into a uniform spatial grid;
+  * every cell gets a padded **candidate list** — the sensors PROVABLY
+    sufficient for exact kNN of any query inside the cell.  With cell
+    center m, half-diagonal h and d_k = distance from m to its k-th
+    nearest sensor, any in-cell query's k-th neighbor lies within
+    d_k + h, and every sensor that close to the query lies within
+    d_k + 2h of m — so the candidate set {s : |s - m| <= d_k + 2h}
+    is exact, and on bounded-density networks its size is O(k), not O(n).
+
+Serving then touches one cell's candidate row per query:
+
+  ``knn_select``  query -> cell -> masked top-k over K_max candidates;
+  ``knn_fuse``    + gather the selected sensors' (D,) representers and
+                  evaluate f_s(x) = K(x, N_s) @ c_s locally, O(Q*k*D) total.
+
+Engines (``fusion.fuse(rule="knn", engine=...)`` dispatches here):
+
+  ``"plan"``    the jnp realization of the plan path (any kernel, any
+                dtype — the reference the Pallas kernel is tested against);
+  ``"pallas"``  the fused VMEM kernel ``repro.kernels.knn_fuse`` (RBF
+                only): candidate gather, distance tile, masked top-k
+                selection network and the k local (D,) contractions all
+                happen per query tile in VMEM — the (n, Q) predictions
+                and (Q, n) distances never exist in HBM;
+  ``"dense"``   (in ``fusion``) the original all-sensors oracle.
+
+Exactness contract: plans are exact for queries inside the plan's domain
+[lo, hi] (default: the sensor bounding box, which the paper's query grids
+live in).  Queries outside are clipped to the boundary cell for candidate
+lookup, so far-field queries degrade gracefully to approximate kNN rather
+than erroring.  Distance ties are broken toward the lower sensor index by
+every engine (top_k and the selection network both scan ascending), so
+engines agree bit-for-bit on the selected set except on exact ties between
+equidistant sensors at different indices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .sn_train import SNTrainProblem, SNTrainState
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ServingPlan:
+    """Frozen query-time plan: uniform grid + per-cell candidate lists.
+
+    Built host-side by ``make_serving_plan``; all arrays are padded to fixed
+    shapes so query answering is pure gathers (no data-dependent shapes).
+
+    Attributes:
+      origin:    (d,) grid origin (domain lower corner).
+      inv_cell:  (d,) reciprocal cell edge lengths.
+      cells:     (C, K_max) int32 candidate sensor ids per flattened cell,
+                 padded with n (the sentinel row of the padded problem
+                 arrays — always masked).
+      cell_mask: (C, K_max) bool validity of ``cells`` entries.
+      grid_shape: static per-dim cell counts (prod == C).
+      k:         static kNN order the plan guarantees exactness for
+                 (queries inside the domain; any k' <= k is also exact).
+    """
+
+    origin: jnp.ndarray
+    inv_cell: jnp.ndarray
+    cells: jnp.ndarray
+    cell_mask: jnp.ndarray
+    grid_shape: tuple = dataclasses.field(metadata=dict(static=True))
+    k: int = dataclasses.field(default=1, metadata=dict(static=True))
+
+    @property
+    def n_cells(self) -> int:
+        return int(self.cells.shape[0])
+
+    @property
+    def k_max(self) -> int:
+        """Padded candidate-list width (max candidates over cells)."""
+        return int(self.cells.shape[1])
+
+
+def make_serving_plan(
+    problem: SNTrainProblem,
+    *,
+    k: int = 8,
+    cells_per_dim: int | None = None,
+    lo=None,
+    hi=None,
+) -> ServingPlan:
+    """Host-side precomputation of the kNN query plan for ``problem``.
+
+    k: largest kNN order the plan must answer exactly (candidate radii are
+    computed for this k; serving with any smaller k reuses the same plan).
+    cells_per_dim: grid resolution; the default targets ~4 sensors per
+    cell so K_max stays O(k) on uniform-density networks.  lo/hi override
+    the plan domain (defaults: the sensor bounding box) — widen them when
+    query grids extend beyond the sensors.
+    """
+    pos = np.asarray(problem.topology.positions, np.float64)  # (n, d)
+    n, d = pos.shape
+    k = int(min(k, n))
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    lo = pos.min(axis=0) if lo is None else np.broadcast_to(
+        np.asarray(lo, np.float64), (d,)
+    )
+    hi = pos.max(axis=0) if hi is None else np.broadcast_to(
+        np.asarray(hi, np.float64), (d,)
+    )
+    span = np.maximum(hi - lo, 1e-6)
+    if cells_per_dim is None:
+        cells_per_dim = max(1, int(round((n / 4.0) ** (1.0 / d))))
+    g = int(cells_per_dim)
+    cell = span / g
+    half_diag = 0.5 * float(np.linalg.norm(cell))
+
+    grid_shape = (g,) * d
+    n_cells = g**d
+    centers = np.stack(
+        np.meshgrid(
+            *[lo[j] + (np.arange(g) + 0.5) * cell[j] for j in range(d)],
+            indexing="ij",
+        ),
+        axis=-1,
+    ).reshape(n_cells, d)
+
+    # d(center, s) for every (cell, sensor): O(C*n) host work, build-time
+    # only (the same budget class as the coloring / scatter plans).
+    dc = np.sqrt(
+        np.maximum(
+            np.sum((centers[:, None, :] - pos[None, :, :]) ** 2, axis=-1), 0.0
+        )
+    )  # (C, n)
+    d_k = np.sort(dc, axis=1)[:, k - 1]  # (C,) k-th nearest to each center
+    radius = d_k + 2.0 * half_diag + 1e-7  # exactness bound, see module doc
+    member = dc <= radius[:, None]  # (C, n)
+
+    k_max = int(member.sum(axis=1).max())
+    cells = np.full((n_cells, k_max), n, dtype=np.int32)  # sentinel pad
+    mask = np.zeros((n_cells, k_max), dtype=bool)
+    for c in range(n_cells):
+        ids = np.nonzero(member[c])[0]
+        cells[c, : len(ids)] = ids
+        mask[c, : len(ids)] = True
+
+    dt = problem.topology.positions.dtype
+    return ServingPlan(
+        origin=jnp.asarray(lo, dt),
+        inv_cell=jnp.asarray(1.0 / cell, dt),
+        cells=jnp.asarray(cells),
+        cell_mask=jnp.asarray(mask),
+        grid_shape=grid_shape,
+        k=k,
+    )
+
+
+def query_cells(plan: ServingPlan, xq: jax.Array) -> jax.Array:
+    """Flattened cell id per query, (Q,) int32 (out-of-domain clipped)."""
+    rel = (xq - plan.origin[None, :]) * plan.inv_cell[None, :]
+    idx = jnp.floor(rel).astype(jnp.int32)
+    dims = jnp.asarray(plan.grid_shape, jnp.int32)
+    idx = jnp.clip(idx, 0, dims[None, :] - 1)
+    strides = np.concatenate(
+        [np.cumprod(plan.grid_shape[::-1])[-2::-1], [1]]
+    ).astype(np.int32)
+    return idx @ jnp.asarray(strides)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def knn_select(
+    plan: ServingPlan, positions: jax.Array, xq: jax.Array, k: int
+) -> jax.Array:
+    """(Q, k) ids of each query's k nearest sensors via the cell plan.
+
+    positions: the (n, d) sensor positions the plan was built from.  Ties
+    break toward the lower sensor id, matching ``fusion.knn_fusion``.
+    """
+    cid = query_cells(plan, xq)  # (Q,)
+    cand = plan.cells[cid]  # (Q, K_max)
+    cmask = plan.cell_mask[cid]  # (Q, K_max)
+    pos_pad = jnp.concatenate(
+        [positions, jnp.zeros((1, positions.shape[1]), positions.dtype)]
+    )
+    cpos = pos_pad[cand]  # (Q, K_max, d)
+    d2 = jnp.sum((xq[:, None, :] - cpos) ** 2, axis=-1)
+    d2 = jnp.where(cmask, d2, jnp.inf)
+    _, top = jax.lax.top_k(-d2, k)  # (Q, k) candidate positions
+    return jnp.take_along_axis(cand, top, axis=1)
+
+
+@partial(jax.jit, static_argnames=("kernel", "k"))
+def _eval_selected(kernel, nbr_pos, nbr_mask, coef, sel, xq, k: int):
+    """mean_j f_{sel[q,j]}(xq[q]) for one field: O(Q*k*D)."""
+    d = xq.shape[-1]
+    d_max = nbr_pos.shape[-2]
+
+    def per_query(x, sel_q):
+        npos = nbr_pos[sel_q]  # (k, D, d)
+        cf = jnp.where(nbr_mask[sel_q], coef[sel_q], 0.0)  # (k, D)
+        kv = kernel(x[None, :], npos.reshape(k * d_max, d))[0].reshape(
+            k, d_max
+        )
+        return jnp.mean(jnp.sum(kv * cf, axis=-1))
+
+    return jax.vmap(per_query)(xq, sel)
+
+
+def knn_fuse(
+    problem: SNTrainProblem,
+    state: SNTrainState,
+    xq: jax.Array,
+    k: int = 1,
+    *,
+    plan: ServingPlan | None = None,
+    engine: str = "plan",
+) -> jax.Array:
+    """Plan-based kNN fusion (paper Eq. 19) — O(Q*k*D) per field.
+
+    Returns (Q,) for single-field problems, (B, Q) for batched ones (the
+    selected sensor set depends only on the shared positions, so selection
+    runs once and the B evaluations share it).  ``plan`` defaults to a
+    fresh ``make_serving_plan(problem, k=k)``; serving processes build the
+    plan once and pass it in.
+    """
+    if engine not in ("plan", "pallas"):
+        raise ValueError(f"engine must be 'plan' or 'pallas', got {engine!r}")
+    if k < 1 or k > problem.n:
+        raise ValueError(f"k must be in [1, n={problem.n}], got {k}")
+    if plan is None:
+        plan = make_serving_plan(problem, k=k)
+    if k > plan.k:
+        raise ValueError(
+            f"plan guarantees exact kNN only up to k={plan.k}; got k={k} "
+            "(rebuild with make_serving_plan(problem, k=...))"
+        )
+    dt = problem.nbr_pos.dtype
+    xq = jnp.atleast_2d(jnp.asarray(xq, dt))
+    positions = problem.topology.positions.astype(dt)
+
+    if engine == "pallas":
+        from repro.kernels.knn_fuse import knn_fuse_fused
+
+        if problem.kernel.name != "rbf":
+            raise NotImplementedError(
+                "engine='pallas' fuses the RBF kernel only; use "
+                "engine='plan' for other kernels"
+            )
+        cid = query_cells(plan, xq)
+        pos_pad = jnp.concatenate([positions, jnp.zeros((1, xq.shape[1]), dt)])
+        if problem.batched:
+            nbr_pos, nbr_mask, coef = (
+                problem.nbr_pos, problem.nbr_mask, state.coef,
+            )
+        else:
+            nbr_pos = problem.nbr_pos[None]
+            nbr_mask = problem.nbr_mask[None]
+            coef = state.coef[None]
+        out = knn_fuse_fused(
+            xq, cid, plan.cells, plan.cell_mask, pos_pad,
+            nbr_pos, nbr_mask, coef,
+            gamma=problem.kernel.gamma, k=k,
+        )
+        return out if problem.batched else out[0]
+
+    sel = knn_select(plan, positions, xq, k)  # (Q, k) shared across fields
+    if problem.batched:
+        return jax.vmap(
+            lambda np_, nm, cf: _eval_selected(
+                problem.kernel, np_, nm, cf, sel, xq, k
+            )
+        )(problem.nbr_pos, problem.nbr_mask, state.coef)
+    return _eval_selected(
+        problem.kernel, problem.nbr_pos, problem.nbr_mask, state.coef,
+        sel, xq, k,
+    )

@@ -69,6 +69,12 @@ tests/test_scatter_plan.py).  ``sharded_sweep`` reuses the plans to shrink
 its per-color transport to the (M·D,) touched slot values instead of full
 (n_z,) + (n+1, D) deltas.
 
+The serving half of the system applies the same static-plan idea to the
+paper's *testing phase*: ``repro.core.serving.make_serving_plan``
+precomputes per-cell kNN candidate lists so ``fusion.fuse(rule="knn",
+engine="plan"/"pallas")`` answers queries in O(Q·k·D) instead of the dense
+O(Q·n·D) oracle — see the query-plan taxonomy in ``repro.core.fusion``.
+
 Multi-field batching
 --------------------
 ``make_batch_problem`` runs B independent regression problems ("fields")

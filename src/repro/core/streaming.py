@@ -33,6 +33,12 @@ problem; a few post-arrival sweeps propagate the new information through the
 network.  All constraint sets remain subspaces containing 0, so Fejér
 monotonicity of the weighted norm (Lemma 2.1) is preserved across arrivals.
 
+``absorb`` handles one arrival per dispatch; ``absorb_many`` runs a whole
+arrival window through the identical per-step update under one
+``lax.scan`` (one compiled program, one host round-trip — the serving
+stream loop's configuration; equals repeated ``absorb`` exactly, see
+tests/test_serving.py).
+
 Over-capacity policy: by default an arrival at a FULL sensor is dropped.
 ``evict_oldest`` frees a full sensor's oldest arrival instead — remaining
 arrivals shift down one slot (preserving the left-to-right == chronological
@@ -45,6 +51,7 @@ sensor's stream slots into a sliding window over its most recent arrivals.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -193,6 +200,84 @@ def absorb(
     else:
         fn = _absorb_donate if donate else _absorb_copy
     return fn(problem, state, field, sensor, x, y)
+
+
+def _absorb_many_core(problem, state, fields, sensors, xs, ys, evict):
+    step = _absorb_evict if evict else _absorb
+
+    def body(carry, arrival):
+        p, s = carry
+        f, sn, x, y = arrival
+        p, s, ok = step(p, s, f, sn, x, y)
+        return (p, s), ok
+
+    (problem, state), flags = jax.lax.scan(
+        body, (problem, state), (fields, sensors, xs, ys)
+    )
+    return problem, state, flags
+
+
+_absorb_many_drop_copy = jax.jit(
+    partial(_absorb_many_core, evict=False))
+_absorb_many_drop_donate = jax.jit(
+    partial(_absorb_many_core, evict=False), donate_argnums=(0, 1))
+_absorb_many_evict_copy = jax.jit(
+    partial(_absorb_many_core, evict=True))
+_absorb_many_evict_donate = jax.jit(
+    partial(_absorb_many_core, evict=True), donate_argnums=(0, 1))
+
+
+def absorb_many(
+    problem: SNTrainProblem,
+    state: SNTrainState,
+    fields: jax.Array,
+    sensors: jax.Array,
+    xs: jax.Array,
+    ys: jax.Array,
+    *,
+    donate: bool = False,
+    on_full: str = "drop",
+) -> tuple[SNTrainProblem, SNTrainState, jax.Array]:
+    """Absorb a BATCH of A arrivals in one dispatch (lax.scan over them).
+
+    ``fields``/``sensors`` are (A,) ints, ``xs`` (A, d), ``ys`` (A,);
+    arrivals apply in order with exactly the per-step math of ``absorb``
+    (same grow-one Cholesky update, same over-capacity ``on_full``
+    policy), so the result equals A sequential ``absorb`` calls — but as
+    ONE compiled program instead of A host round-trips, which is what the
+    serving stream loop wants (see ``launch/serve.py``).  Returns the
+    per-arrival absorbed flags as an (A,) bool vector.
+
+    The compiled program is specialized on A; serving processes that batch
+    arrivals into fixed-size windows reuse one program.  ``donate`` has
+    the ``absorb`` contract: the caller rebinds and drops the old buffers.
+    """
+    if not problem.batched:
+        raise ValueError("streaming requires a batched problem (use B = 1)")
+    if problem.n_stream == 0:
+        raise ValueError(
+            "problem has no streaming capacity — build the topology with "
+            "d_max headroom (build_topology(pos, r, d_max=max_degree + k))"
+        )
+    if on_full not in ("drop", "evict"):
+        raise ValueError(f"on_full must be 'drop' or 'evict', got {on_full!r}")
+    fields = jnp.asarray(fields, jnp.int32)
+    sensors = jnp.asarray(sensors, jnp.int32)
+    xs = jnp.asarray(xs, problem.nbr_pos.dtype)
+    ys = jnp.asarray(ys, state.z.dtype)
+    a = fields.shape[0]
+    if xs.ndim != 2 or xs.shape[0] != a:
+        raise ValueError(f"xs must be (A={a}, d), got {xs.shape}")
+    if sensors.shape != (a,) or ys.shape != (a,):
+        raise ValueError(
+            f"fields/sensors/ys must share length A={a}, got "
+            f"{sensors.shape} / {ys.shape}"
+        )
+    if on_full == "evict":
+        fn = _absorb_many_evict_donate if donate else _absorb_many_evict_copy
+    else:
+        fn = _absorb_many_drop_donate if donate else _absorb_many_drop_copy
+    return fn(problem, state, fields, sensors, xs, ys)
 
 
 def _evict_core(

@@ -7,18 +7,26 @@ gram          — tiled RBF Gram materialization (training-side local solves)
 color_step    — fused colored-sweep step: gather -> lane-blocked triangular
                 substitution -> local GEMM -> scatter, all in VMEM (the
                 ``engine="pallas"`` path of sn_train.colored_sweep)
+knn_fuse      — fused plan-based kNN-fusion serving step: candidate gather
+                -> masked top-k selection network -> k local (D,)
+                contractions per query tile in VMEM (the
+                ``engine="pallas"`` path of fusion.fuse(rule="knn"))
 ops           — general-shape jit wrappers (auto interpret off-TPU)
 ref           — pure-jnp oracles used by tests and benchmarks
 """
 
-from . import color_step, ops, ref
+from . import color_step, knn_fuse, ops, ref
 from .color_step import color_step_fused
-from .ops import kernel_matvec, rbf_gram, ssd_chunked_fused
+from .knn_fuse import knn_fuse_fused
+from .ops import bucket_rows, kernel_matvec, rbf_gram, ssd_chunked_fused
 
 __all__ = [
+    "bucket_rows",
     "color_step",
     "color_step_fused",
     "kernel_matvec",
+    "knn_fuse",
+    "knn_fuse_fused",
     "ops",
     "rbf_gram",
     "ref",

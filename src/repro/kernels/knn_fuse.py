@@ -1,0 +1,161 @@
+"""Fused kNN-fusion serving kernel — plan-based testing phase in VMEM.
+
+One launch answers a query grid under the paper's kNN fusion rule (Eq. 19)
+for all B fields without ever materializing the dense intermediates the
+oracle path builds in HBM (the (n, Q) per-sensor predictions and the (Q, n)
+distance matrix).  Per (field, query-tile) grid step, entirely in VMEM:
+
+  gather   the tile's cell candidate rows from the static serving plan
+           (``repro.core.serving.make_serving_plan``) and the candidates'
+           sensor positions;
+  distance one (BQ, K_max) masked squared-distance tile;
+  select   top-k by a k-step masked selection network: argmin, record,
+           disable, repeat — k is tiny (1..8), so the unrolled network
+           beats a full sort and ties break toward the lower sensor id
+           exactly like ``lax.top_k`` on the dense path;
+  evaluate for each selected sensor, gather its (D, d) neighborhood
+           anchors + masked (D,) representer row and contract
+           f_s(x) = sum_j c_{s,j} exp(-gamma ||x - x_j||^2) locally;
+  average  the k local estimates into the (BQ,) output block.
+
+Grid: (B, Q / block_q) with the query axis innermost, so each field's plan
+tables / anchor tables / coefficients stay resident in VMEM while the query
+tiles stream through — HBM traffic is O(B*n*D + Q), compute O(B*Q*k*D),
+versus O(B*Q*n*D) compute and O(B*Q*n) HBM for the dense oracle.
+
+dtype follows the inputs (f32, or f64 under JAX_ENABLE_X64 — the kernel is
+pure gathers + VPU elementwise math).  On non-TPU backends the wrapper runs
+in interpret mode (the repo's validation mode, see ``kernels.ops``); the
+in-kernel gathers use dynamic indices, which interpret mode executes
+exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _knn_fuse_kernel(
+    xq_ref, cid_ref, cells_ref, cmask_ref, spos_ref,
+    npos_ref, nmask_ref, coef_ref, out_ref,
+    *, gamma: float, k: int,
+):
+    xq = xq_ref[...]  # (BQ, d)
+    cid = cid_ref[...]  # (BQ,)
+    cand = cells_ref[...][cid]  # (BQ, K) this tile's candidate rows
+    cmask = cmask_ref[...][cid] != 0  # (BQ, K)
+    cpos = spos_ref[...][cand]  # (BQ, K, d)
+    npos = npos_ref[0]  # (n+1, D, d) — this field's anchors
+    nmask = nmask_ref[0]  # (n+1, D)
+    coef = coef_ref[0]  # (n+1, D)
+
+    bq, kmax = cand.shape
+    inf = jnp.asarray(jnp.inf, xq.dtype)
+    d2 = jnp.sum((xq[:, None, :] - cpos) ** 2, axis=-1)  # (BQ, K)
+    d2 = jnp.where(cmask, d2, inf)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bq, kmax), 1)
+
+    acc = jnp.zeros((bq,), xq.dtype)
+    for _ in range(k):  # masked selection network, k unrolled steps
+        best = jnp.argmin(d2, axis=1)  # (BQ,) first-min == lowest id
+        sel = jnp.take_along_axis(cand, best[:, None], axis=1)[:, 0]
+        d2 = jnp.where(cols == best[:, None], inf, d2)  # disable selected
+        cf = jnp.where(nmask[sel] != 0, coef[sel], 0.0)  # (BQ, D)
+        dd = jnp.sum((xq[:, None, :] - npos[sel]) ** 2, axis=-1)  # (BQ, D)
+        acc += jnp.sum(jnp.exp(-gamma * dd) * cf, axis=-1)
+    out_ref[0, :] = acc / k
+
+
+@functools.partial(
+    jax.jit, static_argnames=("gamma", "k", "block_q", "interpret")
+)
+def knn_fuse_pallas(
+    xq: jax.Array,
+    qcell: jax.Array,
+    cells: jax.Array,
+    cmask: jax.Array,
+    spos: jax.Array,
+    nbr_pos: jax.Array,
+    nbr_mask: jax.Array,
+    coef: jax.Array,
+    *,
+    gamma: float = 1.0,
+    k: int = 1,
+    block_q: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Padded inputs required: Q % block_q == 0.  Use ``knn_fuse_fused``
+    for the general-shape wrapper.
+
+    xq (Q, d); qcell (Q,) int32 flattened cell ids; cells (C, K) int32;
+    cmask (C, K) int8; spos (n+1, d) padded sensor positions;
+    nbr_pos (B, n+1, D, d); nbr_mask (B, n+1, D) int8; coef (B, n+1, D).
+    Returns (B, Q).
+    """
+    q, d = xq.shape
+    c, kmax = cells.shape
+    b, r, d_max, _ = nbr_pos.shape
+    assert q % block_q == 0, (q, block_q)
+    assert nbr_mask.shape == (b, r, d_max) and coef.shape == (b, r, d_max)
+    grid = (b, q // block_q)
+    return pl.pallas_call(
+        functools.partial(_knn_fuse_kernel, gamma=gamma, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda b, i: (i, 0)),
+            pl.BlockSpec((block_q,), lambda b, i: (i,)),
+            pl.BlockSpec((c, kmax), lambda b, i: (0, 0)),
+            pl.BlockSpec((c, kmax), lambda b, i: (0, 0)),
+            pl.BlockSpec(spos.shape, lambda b, i: (0, 0)),
+            pl.BlockSpec((1, r, d_max, d), lambda b, i: (b, 0, 0, 0)),
+            pl.BlockSpec((1, r, d_max), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, r, d_max), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((b, q), xq.dtype),
+        interpret=interpret,
+    )(xq, qcell, cells, cmask, spos, nbr_pos, nbr_mask, coef)
+
+
+def knn_fuse_fused(
+    xq: jax.Array,
+    qcell: jax.Array,
+    cells: jax.Array,
+    cell_mask: jax.Array,
+    spos: jax.Array,
+    nbr_pos: jax.Array,
+    nbr_mask: jax.Array,
+    coef: jax.Array,
+    *,
+    gamma: float = 1.0,
+    k: int = 1,
+    block_q: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """General-shape wrapper: pad the query axis, launch, slice back.
+
+    Queries are padded to the power-of-two bucket of Q (see
+    ``kernels.ops.bucket_rows``) so a serving process with varied request
+    sizes compiles O(log Q) programs; padded rows point at cell 0 and are
+    sliced off.  Returns (B, Q) in the input dtype.
+    """
+    from .ops import _auto_interpret, bucket_rows
+
+    q = xq.shape[0]
+    q_pad = bucket_rows(q)
+    block_q = min(block_q, q_pad)
+    q_pad = -(-q_pad // block_q) * block_q
+    if q_pad != q:
+        xq = jnp.pad(xq, ((0, q_pad - q), (0, 0)))
+        qcell = jnp.pad(qcell, ((0, q_pad - q),))
+    return knn_fuse_pallas(
+        xq, qcell.astype(jnp.int32),
+        cells.astype(jnp.int32), cell_mask.astype(jnp.int8), spos,
+        nbr_pos, nbr_mask.astype(jnp.int8), coef,
+        gamma=gamma, k=k, block_q=block_q,
+        interpret=_auto_interpret(interpret),
+    )[:, :q]

@@ -34,6 +34,19 @@ def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
     return _pad_dim(x, 0, mult)
 
 
+def bucket_rows(q: int, min_rows: int = 8) -> int:
+    """Round a row count up to its power-of-two bucket (min ``min_rows``).
+
+    A serving process sees many distinct request sizes; padding each query
+    grid to the next power of two means the padded shape — and therefore
+    the lowered Pallas program — takes O(log Q) distinct values instead of
+    one fresh compile per size (tests/test_serving.py counts the programs
+    via the jit cache).  Padded rows are exact: they carry zeros and are
+    sliced off by the callers.
+    """
+    return 1 << max(q - 1, min_rows - 1).bit_length()
+
+
 def kernel_matvec(
     xq: jax.Array,
     anchors: jax.Array,
@@ -52,18 +65,25 @@ def kernel_matvec(
     launch; returns (B, Q).  Single-field (N,) coef returns (Q,) as before.
 
     Padding is exact: padded anchors carry coef 0 (zero contribution) and
-    padded query rows are sliced off.
+    padded query rows are sliced off.  The query axis is padded to its
+    power-of-two bucket (``bucket_rows``), so varied request sizes against
+    one anchor set lower O(log Q) distinct programs, not O(#sizes).
     """
     q = xq.shape[0]
+    q_pad = bucket_rows(q)
     coef = jnp.asarray(coef, jnp.float32)
     anchors = jnp.asarray(anchors, jnp.float32)
     if coef.ndim == 2:
         b, n = coef.shape
         if anchors.ndim == 2:
             anchors = jnp.broadcast_to(anchors[None], (b,) + anchors.shape)
-        block_q = min(block_q, max(8, q))
+        block_q = min(block_q, q_pad)
         block_n = min(block_n, max(8, n))
-        xq_p = _pad_rows(jnp.asarray(xq, jnp.float32), block_q)
+        # q <= q_pad, so padding to a q_pad multiple lands exactly on the
+        # bucket; the outer pad only matters for non-power-of-two block_q.
+        xq_p = _pad_rows(
+            _pad_rows(jnp.asarray(xq, jnp.float32), q_pad), block_q
+        )
         an_p = _pad_dim(anchors, 1, block_n)
         coef_p = _pad_dim(coef, 1, block_n)
         out = kernel_matvec_batched_pallas(
@@ -78,9 +98,11 @@ def kernel_matvec(
         return out[:, :q]
 
     n = anchors.shape[0]
-    block_q = min(block_q, max(8, q))
+    block_q = min(block_q, q_pad)
     block_n = min(block_n, max(8, n))
-    xq_p = _pad_rows(jnp.asarray(xq, jnp.float32), block_q)
+    xq_p = _pad_rows(
+        _pad_rows(jnp.asarray(xq, jnp.float32), q_pad), block_q
+    )
     an_p = _pad_rows(anchors, block_n)
     coef_p = _pad_rows(coef, block_n)
     out = kernel_matvec_pallas(
