@@ -1,0 +1,190 @@
+"""Membership-churn latency: incremental lifecycle repair vs host rebuild.
+
+A sensor joining or leaving the network used to mean rebuilding every
+frozen plan layer from scratch on the host — ``build_topology`` (O(n^2)
+adjacency + greedy distance-2 coloring), ``make_problem`` (reserved-slot
+assignment, scatter plans, n Cholesky factorizations) and
+``make_serving_plan`` (O(C*n) cell candidate lists) — plus the XLA
+recompilations the fresh arrays trigger.  The lifecycle plan layer
+(``repro.core.plans``) replaces all of that with O(1)-per-event device-side
+repairs: ``streaming.add_sensor`` / ``remove_sensor`` patch the factors and
+scatter plans, ``serving.plan_add_sensor`` / ``plan_remove_sensor`` patch
+the query-plan candidate lists — at fixed shapes, zero recompiles.
+
+This bench times one warm JOIN+LEAVE cycle of the incremental path against
+the full host rebuild, per network size, and derives the amortized speedup
+across churn RATES: if E membership events land between serving windows, a
+rebuild-based server pays one rebuild per window while the incremental
+server pays E repairs, so the advantage is t_rebuild / (E * t_event).
+
+Acceptance (ISSUE 4): incremental repair >= 10x faster than the host
+rebuild per event at n=1000, B=16.  Results go to ``BENCH_churn.json``;
+``churn_fast`` is the trimmed variant ``benchmarks/run.py --fast`` runs so
+the numbers land in the CI ``bench-json`` artifact.
+
+Run:  PYTHONPATH=src python -m benchmarks.churn_bench
+      PYTHONPATH=src python -m benchmarks.churn_bench --ns 100,1000 --batch 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    Kernel,
+    add_sensor,
+    build_topology,
+    colored_sweep,
+    init_state,
+    make_batch_problem,
+    make_serving_plan,
+    plan_add_sensor,
+    plan_remove_sensor,
+    remove_sensor,
+)
+
+KERN = Kernel("rbf", gamma=1.0)
+
+
+def _build(n, b, radius, lam, spares, seed=0):
+    rng = np.random.default_rng(seed)
+    pos = np.random.default_rng(seed).uniform(-1, 1, size=(n, 2)).astype(np.float32)
+    topo = build_topology(pos, radius)
+    d_max = int(np.asarray(topo.degrees).max()) + 4
+    topo = build_topology(pos, radius, d_max=d_max, n_max=n + spares)
+    ys = np.sin(np.pi * pos[None, :, 0]) + 0.3 * rng.normal(size=(b, n))
+    prob = make_batch_problem(topo, KERN, ys, jnp.full((n,), lam))
+    state = colored_sweep(prob, init_state(prob), n_sweeps=2)
+    return pos, topo, ys, prob, state
+
+
+def _time_incremental(prob, state, plan, b, lam, reps):
+    """One warm JOIN + LEAVE cycle (problem + query-plan repairs), seconds."""
+    x = np.asarray([0.11, -0.07], np.float32)
+    ys_new = np.zeros((b,), np.float32)
+
+    def cycle(prob, state, plan):
+        prob, state, slot, _ = add_sensor(prob, state, x, ys_new, lam=lam)
+        plan, _ = plan_add_sensor(plan, x, slot)
+        prob, state, _ = remove_sensor(prob, state, slot)
+        plan = plan_remove_sensor(plan, slot)
+        return prob, state, plan
+
+    prob, state, plan = cycle(prob, state, plan)  # compile
+    jax.block_until_ready((prob.chol, plan.cells))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        prob, state, plan = cycle(prob, state, plan)
+        jax.block_until_ready((prob.chol, plan.cells))
+        best = min(best, time.perf_counter() - t0)
+    return best / 2.0  # two membership events per cycle
+
+
+def _time_rebuild(pos, ys, radius, lam, spares, k, reps):
+    """Full host-side rebuild after a membership change, seconds."""
+    n = pos.shape[0]
+    pos2 = np.concatenate([pos, [[0.11, -0.07]]]).astype(np.float32)
+    ys2 = np.concatenate([ys, ys[:, :1]], axis=1)
+    best = float("inf")
+    for _ in range(reps + 1):
+        t0 = time.perf_counter()
+        topo = build_topology(pos2, radius)
+        d_max = int(np.asarray(topo.degrees).max()) + 4
+        topo = build_topology(pos2, radius, d_max=d_max, n_max=n + 1 + spares)
+        prob = make_batch_problem(topo, KERN, ys2, jnp.full((n + 1,), lam))
+        plan = make_serving_plan(prob, k=k)
+        jax.block_until_ready((prob.chol, plan.cells))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def sweep(ns, batch, rates, radius=0.3, lam=0.1, spares=8, k=3, reps=3):
+    entries = []
+    print(f"{'n':>6s} {'D':>4s} {'ms/event inc':>13s} {'ms rebuild':>11s} "
+          f"{'speedup':>8s}")
+    for n in ns:
+        r = radius * math.sqrt(100.0 / n)
+        pos, topo, ys, prob, state = _build(n, batch, r, lam, spares)
+        plan = make_serving_plan(prob, k=k, spare=4, slack=2)
+        t_inc = _time_incremental(prob, state, plan, batch, lam, reps)
+        t_reb = _time_rebuild(pos, ys, r, lam, spares, k, reps)
+        row = {
+            "n": n, "batch": batch, "d_max": prob.topology.d_max,
+            "s_per_event_incremental": t_inc,
+            "s_per_rebuild": t_reb,
+            "speedup_per_event": t_reb / t_inc,
+        }
+        # Amortized advantage when E events share one serving window: a
+        # rebuild server pays one rebuild, the incremental server E repairs.
+        for e in rates:
+            row[f"speedup_rate_{e}"] = t_reb / (e * t_inc)
+        entries.append(row)
+        print(
+            f"{n:6d} {row['d_max']:4d} {t_inc*1e3:13.2f} {t_reb*1e3:11.1f} "
+            f"{row['speedup_per_event']:8.1f}"
+        )
+    return entries
+
+
+def churn_fast(rows):
+    """Trimmed sweep for ``benchmarks/run.py --fast`` (CI bench-json rows)."""
+    entries = sweep(ns=(100, 300), batch=4, rates=(1, 8), reps=2)
+    for e in entries:
+        rows.append(
+            (
+                f"churn.n{e['n']}.incremental",
+                e["s_per_event_incremental"] * 1e6,
+                f"speedup_vs_rebuild={e['speedup_per_event']:.1f}x",
+            )
+        )
+        rows.append(
+            (
+                f"churn.n{e['n']}.rebuild",
+                e["s_per_rebuild"] * 1e6,
+                f"amortized_at_rate8={e['speedup_rate_8']:.1f}x",
+            )
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ns", default="100,200,500,1000")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--rates", default="1,4,16",
+                    help="membership events per serving window (amortization)")
+    ap.add_argument("--radius", type=float, default=0.3)
+    ap.add_argument("--lam", type=float, default=0.1)
+    ap.add_argument("--spares", type=int, default=8)
+    ap.add_argument("--k", type=int, default=3)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_churn.json")
+    args = ap.parse_args()
+    ns = [int(s) for s in args.ns.split(",")]
+    rates = [int(s) for s in args.rates.split(",")]
+    entries = sweep(
+        ns, args.batch, rates,
+        radius=args.radius, lam=args.lam, spares=args.spares,
+        k=args.k, reps=args.reps,
+    )
+    out = {"name": "churn", "batch": args.batch, "rates": rates,
+           "entries": entries}
+    ref = next((e for e in entries if e["n"] == 1000), entries[-1])
+    out["speedup_at_n1000_per_event"] = ref["speedup_per_event"]
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(f"speedup_at_n{ref['n']}_per_event: {ref['speedup_per_event']:.1f}x")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,7 +34,13 @@ def main() -> None:
     if args.json_dir is None and args.fast:
         args.json_dir = "bench_out"
 
-    from . import consensus_bench, kernels_bench, paper_figs, serving_bench
+    from . import (
+        churn_bench,
+        consensus_bench,
+        kernels_bench,
+        paper_figs,
+        serving_bench,
+    )
 
     benches = [
         ("fig4_convergence_case1", paper_figs.fig4_convergence_case1, True),
@@ -46,6 +52,7 @@ def main() -> None:
         ("kernel_matvec_correctness", kernels_bench.kernel_matvec_correctness, False),
         ("gossip_vs_allreduce", consensus_bench.gossip_vs_allreduce, False),
         ("serving", serving_bench.serving_fast, False),
+        ("churn", churn_bench.churn_fast, False),
     ]
 
     rows: list[tuple[str, float, str]] = []

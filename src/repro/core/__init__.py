@@ -17,6 +17,7 @@ from . import (
     consensus,
     fusion,
     kernels_math,
+    plans,
     serving,
     sn_train,
     sop,
@@ -25,7 +26,13 @@ from . import (
 )
 from .centralized import KRRModel, fit_krr, predict
 from .kernels_math import Kernel
-from .serving import ServingPlan, make_serving_plan
+from .plans import LifecycleLayout
+from .serving import (
+    ServingPlan,
+    make_serving_plan,
+    plan_add_sensor,
+    plan_remove_sensor,
+)
 from .sn_train import (
     SNTrainProblem,
     SNTrainState,
@@ -38,22 +45,36 @@ from .sn_train import (
     make_problem,
     random_sweep,
     robust_sweep,
+    robust_sweep_links,
     serial_sweep,
     sharded_sweep,
     weighted_norm_sq,
     weighted_norm_sq_hetero,
     weighted_sweep,
 )
-from .topology import SensorTopology, build_topology, ring_topology, uniform_sensors
+from .streaming import AbsorbReceipt, add_sensor, remove_sensor
+from .topology import (
+    SensorTopology,
+    build_topology,
+    pad_topology,
+    ring_topology,
+    uniform_sensors,
+)
 
 __all__ = [
+    "AbsorbReceipt",
     "Kernel",
     "KRRModel",
+    "LifecycleLayout",
     "SNTrainProblem",
     "SNTrainState",
     "SensorTopology",
     "ServingPlan",
+    "add_sensor",
     "make_serving_plan",
+    "plan_add_sensor",
+    "plan_remove_sensor",
+    "plans",
     "serving",
     "build_topology",
     "centralized",
@@ -68,10 +89,13 @@ __all__ = [
     "local_only",
     "make_batch_problem",
     "make_problem",
+    "pad_topology",
     "predict",
     "random_sweep",
+    "remove_sensor",
     "ring_topology",
     "robust_sweep",
+    "robust_sweep_links",
     "serial_sweep",
     "sharded_sweep",
     "sn_train",

@@ -74,38 +74,62 @@ def single_sensor(preds: jax.Array, s: int = 0) -> jax.Array:
 
 
 def knn_fusion(
-    preds: jax.Array, positions: jax.Array, xq: jax.Array, k: int
+    preds: jax.Array, positions: jax.Array, xq: jax.Array, k: int,
+    alive: jax.Array | None = None,
 ) -> jax.Array:
-    """Average the k sensors nearest each query (paper Eq. 19).
+    """Average the k LIVE sensors nearest each query (paper Eq. 19).
 
     preds: (..., n, Q) per-sensor estimates (any leading field axes); the
     selected sensors depend only on the shared positions, so the top-k runs
-    once and broadcasts.  This is the dense O(Q*n) oracle — serving goes
+    once and broadcasts.  ``alive`` is the optional (n,) row liveness of a
+    lifecycle problem — dead/spare rows are pushed to +inf distance so they
+    are never selected.  This is the dense O(Q*n) oracle — serving goes
     through ``repro.core.serving.knn_fuse``, which answers the same rule
     from a static cell-candidate plan in O(Q*k).
     """
     xq = jnp.atleast_2d(jnp.asarray(xq, preds.dtype))
     positions = positions.astype(preds.dtype)
     d2 = jnp.sum((xq[:, None, :] - positions[None, :, :]) ** 2, axis=-1)  # (Q, n)
-    _, idx = jax.lax.top_k(-d2, k)  # (Q, k)
+    if alive is not None:
+        d2 = jnp.where(alive[None, :], d2, jnp.inf)
+    neg, idx = jax.lax.top_k(-d2, k)  # (Q, k)
     pt = jnp.swapaxes(preds, -1, -2)  # (..., Q, n)
     gathered = jnp.take_along_axis(
         pt, jnp.broadcast_to(idx, pt.shape[:-2] + idx.shape), axis=-1
     )  # (..., Q, k)
-    return jnp.mean(gathered, axis=-1)
+    if alive is None:
+        return jnp.mean(gathered, axis=-1)
+    # Fewer than k live sensors: top_k must still return k indices, so the
+    # overflow picks +inf-distance (dead) rows — average the live ones only.
+    valid = jnp.isfinite(neg)  # (Q, k)
+    return jnp.sum(jnp.where(valid, gathered, 0.0), axis=-1) / jnp.maximum(
+        jnp.sum(valid, axis=-1), 1
+    )
 
 
-def nearest_neighbor(preds: jax.Array, positions: jax.Array, xq: jax.Array) -> jax.Array:
-    return knn_fusion(preds, positions, xq, k=1)
+def nearest_neighbor(
+    preds: jax.Array, positions: jax.Array, xq: jax.Array,
+    alive: jax.Array | None = None,
+) -> jax.Array:
+    return knn_fusion(preds, positions, xq, k=1, alive=alive)
 
 
-def network_average(preds: jax.Array) -> jax.Array:
-    return jnp.mean(preds, axis=-2)
+def network_average(
+    preds: jax.Array, alive: jax.Array | None = None
+) -> jax.Array:
+    if alive is None:
+        return jnp.mean(preds, axis=-2)
+    w = alive.astype(preds.dtype)
+    return (w[:, None] * preds).sum(-2) / w.sum()
 
 
-def connectivity_averaged(preds: jax.Array, degrees: jax.Array) -> jax.Array:
-    """Degree-weighted average (paper Eq. 20)."""
+def connectivity_averaged(
+    preds: jax.Array, degrees: jax.Array, alive: jax.Array | None = None
+) -> jax.Array:
+    """Degree-weighted average (paper Eq. 20) over the LIVE sensors."""
     w = degrees.astype(preds.dtype)
+    if alive is not None:
+        w = jnp.where(alive, w, 0.0)
     return (w[:, None] * preds).sum(-2) / w.sum()
 
 
@@ -128,11 +152,14 @@ def global_coefficients(
     n = problem.n
     s_cap = problem.n_stream
     cdt = state.coef.dtype
-    deg = problem.topology.degrees.astype(cdt)
+    # Dead/spare rows carry zero fusion weight (and their reserved anchors
+    # zero coefficients), so churned problems serve from live sensors only.
+    live = problem.alive[:n]
+    deg = jnp.where(live, problem.topology.degrees, 0).astype(cdt)
     if rule == "conn":
         w = deg / deg.sum()
     elif rule == "avg":
-        w = jnp.full((n,), 1.0 / n, cdt)
+        w = jnp.where(live, 1.0, 0.0).astype(cdt) / jnp.sum(live)
     else:
         raise ValueError(f"global_coefficients supports 'avg'/'conn', got {rule!r}")
     w_pad = jnp.concatenate([w, jnp.zeros((1,), w.dtype)])  # sentinel sensor row
@@ -192,14 +219,15 @@ def fuse(
             f"rule {rule!r} supports engine='dense'"
         )
     preds = evaluate_sensors(problem, state, xq)
+    live = problem.alive[: problem.n]
     if rule == "single":
         return single_sensor(preds, sensor)
     if rule == "nn":
-        return nearest_neighbor(preds, problem.topology.positions, xq)
+        return nearest_neighbor(preds, problem.topology.positions, xq, live)
     if rule == "knn":
-        return knn_fusion(preds, problem.topology.positions, xq, k)
+        return knn_fusion(preds, problem.topology.positions, xq, k, live)
     if rule == "avg":
-        return network_average(preds)
+        return network_average(preds, live)
     if rule == "conn":
-        return connectivity_averaged(preds, problem.topology.degrees)
+        return connectivity_averaged(preds, problem.topology.degrees, live)
     raise ValueError(f"unknown fusion rule {rule!r}")

@@ -1,0 +1,486 @@
+"""Unified network-lifecycle plan layer: capacity-padded plans + repair ops.
+
+The paper's operating regime (Sec. 3.3 "Robustness") is an ad-hoc network
+whose membership churns: motes die, drain batteries, and get redeployed.
+PRs 1-3 grew three *separate* host-side frozen plan builders — the
+distance-2 coloring (``topology``), the per-color scatter plans
+(``sn_train.make_problem``) and the per-cell kNN candidate lists
+(``serving.make_serving_plan``) — so any membership change meant a full
+numpy rebuild plus an XLA recompilation.  This module is the shared layer
+those three now build on, organized around one idea:
+
+  **capacity padding + a device-side alive mask + incremental repairs.**
+
+Build once at capacity ``n_max`` (spare sensor rows parked far away, one
+reserved *singleton color* per spare so a joining sensor never conflicts
+with the frozen distance-2 coloring), then mutate membership by flipping
+the ``alive`` mask and patching plan *values* on device — never plan
+*shapes* — so an arbitrary join/leave/churn trace compiles a constant
+number of programs.
+
+Host-side builders (numpy, build time — shared by ``topology.build_topology``
+/ ``ring_topology``, ``sn_train.make_problem`` and
+``serving.make_serving_plan`` instead of each rolling its own):
+
+  ``padded_neighborhoods``  adjacency -> fixed-shape (n, D) neighbor table;
+  ``color_classes``         distance-2 greedy coloring of the base graph
+                            plus the spare-color budget (one singleton
+                            color per spare row);
+  ``assign_stream_slots``   the reserved message-slot layout (every free
+                            padded lane owns a fixed global id);
+  ``slot_owner_map``        message slot -> owning sensor row (the map that
+                            turns row liveness into slot liveness);
+  ``build_color_plans``     the per-color scatter plans (moved here from
+                            ``sn_train``), skipping rows dead at build;
+  ``build_cell_lists``      the serving grid's per-cell candidate lists
+                            (moved here from ``serving``), with spare
+                            candidate columns and a removal-slack radius.
+
+Device-side repair ops (pure jnp, fixed shapes — jitted by their callers in
+``streaming`` / ``serving``; each event touches one color class and O(1)
+grid cells):
+
+  ``color_plans_remove``  revert a row's scatter codes to "keep";
+  ``color_plans_add``     install scatter codes for a (re)joined row;
+  ``cells_remove``        drop a sensor from every cell candidate list;
+  ``cells_add``           insert a joined sensor into the candidate lists
+                          of every cell whose exactness radius covers it.
+
+``LifecycleLayout`` is the event-invariant metadata the repairs need
+(color / member position / slot ownership / the pristine slot table for
+row recycling); the mutable ``alive`` vector lives on ``SNTrainProblem``
+directly.  See ``sn_train`` for how the sweep engines consume ``alive``
+and ``streaming.add_sensor`` / ``remove_sensor`` for the event ops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+# Spare rows park here until a join gives them a real position: far enough
+# that an RBF kernel underflows to 0 and no in-domain query ever selects
+# them, near enough that f32 squared distances stay finite.
+FAR = 1.0e6
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LifecycleLayout:
+    """Event-invariant lifecycle metadata of a capacity-padded problem.
+
+    All arrays are device-side and fixed at build; repairs read them but
+    never write them.  ``n`` below is the padded capacity (``n_max``), and
+    row ids in ``[n_base, n)`` are the spare rows joins may occupy.
+
+    Attributes:
+      color_of:   (n+1,) int32 color id per sensor row (spares hold their
+                  reserved singleton color; the sentinel row holds
+                  ``n_colors``, an out-of-range placeholder).
+      member_pos: (n+1,) int32 position of each row within its color's
+                  member list (the ``m`` of the scatter-plan codes).
+      slot_owner: (n_z,) int32 owning sensor row per message slot: sensor
+                  slots own themselves, reserved slots belong to the row
+                  whose free lane they back, the sentinel owns itself via
+                  the sentinel row ``n``.
+      nbr_idx0:   (n+1, D) int32 pristine build-time slot table — the
+                  reserved ids a recycled spare row restores its free
+                  lanes from.
+      n_base:     static int, number of real (build-time) sensors.
+    """
+
+    color_of: jnp.ndarray
+    member_pos: jnp.ndarray
+    slot_owner: jnp.ndarray
+    nbr_idx0: jnp.ndarray
+    n_base: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_spare(self) -> int:
+        """Capacity reserved for joins (rows [n_base, n))."""
+        return int(self.color_of.shape[0]) - 1 - self.n_base
+
+
+# ---------------------------------------------------------------------------
+# Host-side builders (numpy, build time).
+# ---------------------------------------------------------------------------
+
+
+def padded_neighborhoods(
+    adj: np.ndarray, d_max: int | None = None
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Fixed-shape neighbor table of a bool adjacency (self loops included).
+
+    Rows with no neighbors at all (spare rows) get degree 0 and a fully
+    masked row padded with the row's own index.  Returns
+    ``(nbr_idx (n, D) int32, nbr_mask (n, D) bool, degrees (n,) int32)``.
+    """
+    n = adj.shape[0]
+    degrees = adj.sum(axis=1).astype(np.int32)
+    dm = int(degrees.max()) if d_max is None else int(d_max)
+    if dm < int(degrees.max()):
+        raise ValueError(f"d_max={dm} < max degree {int(degrees.max())}")
+    nbr_idx = np.zeros((n, dm), dtype=np.int32)
+    nbr_mask = np.zeros((n, dm), dtype=bool)
+    for i in range(n):
+        nbrs = np.nonzero(adj[i])[0]
+        nbr_idx[i, : len(nbrs)] = nbrs
+        nbr_idx[i, len(nbrs):] = i  # pad with self (masked)
+        nbr_mask[i, : len(nbrs)] = True
+    return nbr_idx, nbr_mask, degrees
+
+
+def color_classes(
+    adj: np.ndarray, greedy_coloring, n_spare: int = 0
+) -> tuple[np.ndarray, int, np.ndarray, np.ndarray]:
+    """Distance-2 color classes of the base graph + the spare-color budget.
+
+    The first ``n_base`` rows of ``adj`` are colored greedily on G^2 (two
+    sensors conflict iff they share a neighbor).  Each of the ``n_spare``
+    spare rows is then assigned its own reserved *singleton* color: a
+    sensor joining at ANY position updates alone in its color step, so the
+    frozen coloring never needs revalidation under churn.
+
+    Returns ``(colors (n,), n_colors, color_members (n_colors, M),
+    color_mask (n_colors, M))`` with ``n = n_base + n_spare`` and members
+    padded with ``n`` (the sentinel row id).
+    """
+    n_base = adj.shape[0]
+    g2 = (adj.astype(np.int64) @ adj.astype(np.int64)) > 0
+    base_colors, n_base_colors = greedy_coloring(g2)
+    n = n_base + n_spare
+    colors = np.concatenate(
+        [base_colors, n_base_colors + np.arange(n_spare, dtype=np.int32)]
+    ).astype(np.int32)
+    n_colors = n_base_colors + n_spare
+    max_members = max(
+        int(np.bincount(base_colors, minlength=n_base_colors).max()),
+        1 if n_spare else 0,
+    )
+    color_members = np.full((n_colors, max_members), n, dtype=np.int32)
+    color_mask = np.zeros((n_colors, max_members), dtype=bool)
+    for c in range(n_colors):
+        members = np.nonzero(colors == c)[0]
+        color_members[c, : len(members)] = members
+        color_mask[c, : len(members)] = True
+    return colors, n_colors, color_members, color_mask
+
+
+def assign_stream_slots(
+    nbr_idx: np.ndarray, degrees: np.ndarray
+) -> tuple[np.ndarray, int]:
+    """Reserve a fixed global message id for every free padded lane.
+
+    Returns ``(idx_full (n+1, D) int32, n_stream)``: row ``i``'s free
+    lanes ``[deg_i, D)`` hold the reserved ids ``n + offset_i + ...`` and
+    the appended sentinel row points every lane at the write sentinel
+    ``n + n_stream``.  Spare rows (degree 0) reserve the full lane budget,
+    which doubles as their join capacity.
+    """
+    n, d_max = nbr_idx.shape
+    deg = np.asarray(degrees)
+    free = d_max - deg
+    n_stream = int(free.sum())
+    sentinel = n + n_stream
+    offsets = n + np.concatenate([[0], np.cumsum(free)[:-1]])
+    idx_np = np.asarray(nbr_idx).copy()
+    for i in range(n):
+        idx_np[i, deg[i]:] = offsets[i] + np.arange(free[i])
+    return (
+        np.concatenate([idx_np, np.full((1, d_max), sentinel)]).astype(
+            np.int32
+        ),
+        n_stream,
+    )
+
+
+def slot_owner_map(idx_full: np.ndarray, n_stream: int) -> np.ndarray:
+    """(n_z,) int32: the sensor row whose liveness governs each slot.
+
+    Sensor slots own themselves; each reserved slot belongs to the row
+    whose free lane it backs (a sensor's absorbed arrivals die with it);
+    the sentinel belongs to the sentinel row ``n``.
+    """
+    n = idx_full.shape[0] - 1
+    owner = np.arange(n + n_stream + 1, dtype=np.int32)
+    owner[n:] = n  # sentinel default
+    for i in range(n):
+        stream = idx_full[i][idx_full[i] >= n]
+        owner[stream] = i
+    owner[n + n_stream] = n
+    return owner
+
+
+def build_color_plans(
+    color_members: np.ndarray,
+    color_mask: np.ndarray,
+    idx_full: np.ndarray,
+    n_stream: int,
+    alive0: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side static scatter plans, one per color class.
+
+    (Moved from ``sn_train._build_color_plans``.)  The distance-2 coloring
+    guarantees that within a color every touched message slot and every
+    touched coefficient row has exactly one source, so the color-step
+    update is a permutation gather:
+
+      plan_z[c][j]    = j               keep z[j], or
+                      = n_z + m*D + k   slot j is owned by lane k of the
+                                        color's m-th member;
+      plan_coef[c][r] = r               keep coef row r, or
+                      = (n+1) + m       row r is the color's m-th member.
+
+    Rows dead at build (the spare rows, ``alive0`` False) start at "keep"
+    on every lane — ``plans.color_plans_add`` installs their scatter codes
+    on device when a join occupies them, and ``color_plans_remove``
+    reverts on leave.  The sentinel slot and sentinel coefficient row
+    always KEEP (they are invariantly zero; the one-hot reference engine
+    writes zeros there, so both realizations agree bit-for-bit).  Codes
+    always reference flat positions < n_z + M_max*D, so the same plan
+    applies when a caller pads the member list wider (sharded_sweep pads
+    to a device multiple).
+    """
+    n, d_max = idx_full.shape
+    n = n - 1
+    n_z = n + n_stream + 1
+    members = np.asarray(color_members)
+    cmask = np.asarray(color_mask)
+    alive0 = np.asarray(alive0, bool)
+    n_colors, _ = members.shape
+    plan_z = np.tile(np.arange(n_z, dtype=np.int32), (n_colors, 1))
+    plan_coef = np.tile(np.arange(n + 1, dtype=np.int32), (n_colors, 1))
+    for c in range(n_colors):
+        m_pos = np.nonzero(cmask[c])[0]  # positions of real members
+        mem = members[c, m_pos]
+        live = alive0[mem]
+        m_pos, mem = m_pos[live], mem[live]
+        plan_coef[c, mem] = (n + 1) + m_pos
+        slots = idx_full[mem]  # (m_live, D) unique ids (no sentinel)
+        flat = m_pos[:, None] * d_max + np.arange(d_max)[None, :]
+        plan_z[c, slots.reshape(-1)] = n_z + flat.reshape(-1)
+    return plan_z, plan_coef
+
+
+def build_layout(
+    idx_full: np.ndarray,
+    colors: np.ndarray,
+    color_members: np.ndarray,
+    color_mask: np.ndarray,
+    n_stream: int,
+    n_base: int,
+) -> LifecycleLayout:
+    """Assemble the device-side ``LifecycleLayout`` from the host builders."""
+    n = idx_full.shape[0] - 1
+    n_colors = color_members.shape[0]
+    color_of = np.concatenate(
+        [np.asarray(colors), [n_colors]]
+    ).astype(np.int32)
+    member_pos = np.zeros(n + 1, dtype=np.int32)
+    members = np.asarray(color_members)
+    cmask = np.asarray(color_mask)
+    for c in range(n_colors):
+        m_pos = np.nonzero(cmask[c])[0]
+        member_pos[members[c, m_pos]] = m_pos
+    return LifecycleLayout(
+        color_of=jnp.asarray(color_of),
+        member_pos=jnp.asarray(member_pos),
+        slot_owner=jnp.asarray(slot_owner_map(idx_full, n_stream)),
+        nbr_idx0=jnp.asarray(idx_full, jnp.int32),
+        n_base=int(n_base),
+    )
+
+
+def build_cell_lists(
+    pos: np.ndarray,
+    live: np.ndarray,
+    k: int,
+    cells_per_dim: int | None,
+    lo,
+    hi,
+    spare: int = 0,
+    slack: int = 0,
+) -> dict:
+    """Host-side serving-grid precompute (moved from ``make_serving_plan``).
+
+    Buckets the LIVE sensors into a uniform grid and computes per-cell
+    padded candidate lists with the covering-bound radius
+    ``d_{k+slack} + 2h`` (center's (k+slack)-th live-sensor distance plus
+    twice the cell half-diagonal): exact kNN for in-domain queries, and
+    still exact after up to ``slack`` of any cell's candidates are removed
+    (removals never shrink the radius; adds are covered because a new
+    in-radius sensor is inserted by ``cells_add``).  ``spare`` reserves
+    extra padded candidate columns for those future inserts.
+
+    Returns the grid dict consumed by ``serving.make_serving_plan``.
+    """
+    pos = np.asarray(pos, np.float64)
+    live = np.asarray(live, bool)
+    lpos = pos[live]
+    n, d = pos.shape
+    n_live = lpos.shape[0]
+    kk = int(min(k + slack, n_live))
+    lo = lpos.min(axis=0) if lo is None else np.broadcast_to(
+        np.asarray(lo, np.float64), (d,)
+    )
+    hi = lpos.max(axis=0) if hi is None else np.broadcast_to(
+        np.asarray(hi, np.float64), (d,)
+    )
+    span = np.maximum(hi - lo, 1e-6)
+    if cells_per_dim is None:
+        cells_per_dim = max(1, int(round((n_live / 4.0) ** (1.0 / d))))
+    g = int(cells_per_dim)
+    cell = span / g
+    half_diag = 0.5 * float(np.linalg.norm(cell))
+
+    grid_shape = (g,) * d
+    n_cells = g**d
+    centers = np.stack(
+        np.meshgrid(
+            *[lo[j] + (np.arange(g) + 0.5) * cell[j] for j in range(d)],
+            indexing="ij",
+        ),
+        axis=-1,
+    ).reshape(n_cells, d)
+
+    # d(center, s) for every (cell, live sensor): O(C*n) host work,
+    # build-time only (same budget class as the coloring / scatter plans).
+    dc = np.sqrt(
+        np.maximum(
+            np.sum((centers[:, None, :] - lpos[None, :, :]) ** 2, axis=-1),
+            0.0,
+        )
+    )  # (C, n_live)
+    d_k = np.sort(dc, axis=1)[:, kk - 1]  # (C,) (k+slack)-th nearest
+    radius = d_k + 2.0 * half_diag + 1e-7  # exactness bound, see above
+    member = dc <= radius[:, None]  # (C, n_live)
+
+    live_ids = np.nonzero(live)[0]
+    k_max = int(member.sum(axis=1).max()) + int(spare)
+    cells = np.full((n_cells, k_max), n, dtype=np.int32)  # sentinel pad
+    mask = np.zeros((n_cells, k_max), dtype=bool)
+    for c in range(n_cells):
+        ids = live_ids[np.nonzero(member[c])[0]]
+        cells[c, : len(ids)] = ids
+        mask[c, : len(ids)] = True
+    return dict(
+        origin=lo,
+        cell=cell,
+        centers=centers,
+        radii=radius,
+        cells=cells,
+        mask=mask,
+        grid_shape=grid_shape,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Device-side repair ops (fixed shapes; each event touches one color class
+# and O(1) grid cells).  All are pure and gate on a traced bool so callers
+# can fuse them into one jitted event program.
+# ---------------------------------------------------------------------------
+
+
+def color_plans_remove(
+    plan_z: jax.Array,
+    plan_coef: jax.Array,
+    color_of: jax.Array,
+    slot: jax.Array,
+    idx_row: jax.Array,
+    gate: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Revert row ``slot``'s scatter codes to "keep" in its color's plans.
+
+    ``idx_row`` is the row's CURRENT (D,) slot table — exactly the entries
+    the row owns within its color (disjoint from every other member's by
+    the distance-2 coloring), so the patch is a (D,)-sized scatter.
+    """
+    c = color_of[slot]
+    keep_z = jnp.where(gate, idx_row, plan_z[c, idx_row])
+    plan_z = plan_z.at[c, idx_row].set(keep_z.astype(plan_z.dtype))
+    keep_c = jnp.where(gate, slot, plan_coef[c, slot])
+    plan_coef = plan_coef.at[c, slot].set(keep_c.astype(plan_coef.dtype))
+    return plan_z, plan_coef
+
+
+def color_plans_add(
+    plan_z: jax.Array,
+    plan_coef: jax.Array,
+    color_of: jax.Array,
+    member_pos: jax.Array,
+    slot: jax.Array,
+    idx_row: jax.Array,
+    gate: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Install row ``slot``'s scatter codes (the inverse of ``_remove``).
+
+    Codes follow ``build_color_plans``: slot ``idx_row[k]`` takes
+    ``n_z + m*D + k`` with ``m = member_pos[slot]``, and the coefficient
+    row takes ``(n+1) + m``.
+    """
+    n_z = plan_z.shape[1]
+    d = idx_row.shape[0]
+    c = color_of[slot]
+    m = member_pos[slot]
+    codes = n_z + m * d + jnp.arange(d, dtype=plan_z.dtype)
+    vals = jnp.where(gate, codes, plan_z[c, idx_row])
+    plan_z = plan_z.at[c, idx_row].set(vals.astype(plan_z.dtype))
+    n_rows = plan_coef.shape[1]
+    cval = jnp.where(gate, n_rows + m, plan_coef[c, slot])
+    plan_coef = plan_coef.at[c, slot].set(cval.astype(plan_coef.dtype))
+    return plan_z, plan_coef
+
+
+def cells_remove(
+    cells: jax.Array, cell_mask: jax.Array, slot: jax.Array, gate: jax.Array
+) -> jax.Array:
+    """Mask sensor ``slot`` out of every cell candidate list.
+
+    One fixed-shape compare over the (C, K_max) table; the freed columns
+    become holes a later ``cells_add`` reuses.
+    """
+    return cell_mask & ~((cells == slot) & gate)
+
+
+def cells_add(
+    cells: jax.Array,
+    cell_mask: jax.Array,
+    centers: jax.Array,
+    radii: jax.Array,
+    x: jax.Array,
+    slot: jax.Array,
+    gate: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Insert a joined sensor at ``x`` into every covering cell's list.
+
+    A cell must list the sensor iff it can appear among the exact kNN of
+    some in-cell query, i.e. iff ``|x - center| <= radius`` (the build-time
+    covering bound; adds only shrink true kNN distances, so the bound stays
+    valid).  The sensor takes the first free candidate column of each such
+    cell; cells whose rows are full are skipped and counted in the returned
+    ``overflowed`` scalar (build the plan with more ``spare`` columns if it
+    is ever nonzero).
+    """
+    d2 = jnp.sum((centers - x[None, :]) ** 2, axis=-1)  # (C,)
+    want = gate & (d2 <= radii**2)  # (C,)
+    free_col = jnp.argmin(cell_mask, axis=1)  # first False per cell
+    has_free = ~jnp.take_along_axis(
+        cell_mask, free_col[:, None], axis=1
+    )[:, 0]
+    do = want & has_free
+    rows = jnp.arange(cells.shape[0])
+    cur = jnp.take_along_axis(cells, free_col[:, None], axis=1)[:, 0]
+    new_id = jnp.where(do, slot, cur).astype(cells.dtype)
+    cells = cells.at[rows, free_col].set(new_id)
+    cur_m = jnp.take_along_axis(cell_mask, free_col[:, None], axis=1)[:, 0]
+    cell_mask = cell_mask.at[rows, free_col].set(jnp.where(do, True, cur_m))
+    return cells, cell_mask, jnp.sum(want & ~has_free)
+
+
+def alive_slots(alive: jax.Array, slot_owner: jax.Array) -> jax.Array:
+    """(n_z,) message-slot liveness from (n+1,) row liveness."""
+    return alive[slot_owner]

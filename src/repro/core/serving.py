@@ -10,7 +10,7 @@ an answer that only ever reads k ~ 1..5 sensors per query.
 This module applies the same locality that makes SN-Train itself local: a
 query's k nearest sensors live in a bounded spatial neighborhood, so
 per-query work should be independent of n.  Mirroring the static scatter
-plans of ``sn_train._build_color_plans``, everything data-dependent is
+plans of ``plans.build_color_plans``, everything data-dependent is
 precomputed host-side at problem-build time:
 
   * the sensor positions are bucketed into a uniform spatial grid;
@@ -39,9 +39,16 @@ Engines (``fusion.fuse(rule="knn", engine=...)`` dispatches here):
                 and (Q, n) distances never exist in HBM;
   ``"dense"``   (in ``fusion``) the original all-sensors oracle.
 
+Network lifecycle: the plan's candidate VALUES are device-side data, so
+sensor joins/leaves repair them in place (``plan_add_sensor`` /
+``plan_remove_sensor``, built on ``repro.core.plans``) with zero host work
+and zero recompiles; build with ``spare=`` candidate columns and a
+``slack=`` radius so exactness survives churn, and every select path also
+gates candidates on the problem's ``alive`` mask.
+
 Exactness contract: plans are exact for queries inside the plan's domain
-[lo, hi] (default: the sensor bounding box, which the paper's query grids
-live in).  Queries outside are clipped to the boundary cell for candidate
+[lo, hi] (default: the LIVE-sensor bounding box, which the paper's query
+grids live in).  Queries outside are clipped to the boundary cell for candidate
 lookup, so far-field queries degrade gracefully to approximate kNN rather
 than erroring.  Distance ties are broken toward the lower sensor index by
 every engine (top_k and the selection network both scan ascending), so
@@ -59,20 +66,27 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from . import plans
 from .sn_train import SNTrainProblem, SNTrainState
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class ServingPlan:
-    """Frozen query-time plan: uniform grid + per-cell candidate lists.
+    """Frozen-shape query-time plan: uniform grid + per-cell candidate lists.
 
     Built host-side by ``make_serving_plan``; all arrays are padded to fixed
     shapes so query answering is pure gathers (no data-dependent shapes).
+    Under network lifecycle events the candidate VALUES are repaired on
+    device (``plan_add_sensor`` / ``plan_remove_sensor`` — no host rebuild,
+    no recompile); the shapes never change.
 
     Attributes:
       origin:    (d,) grid origin (domain lower corner).
       inv_cell:  (d,) reciprocal cell edge lengths.
+      centers:   (C, d) cell centers (used by the lifecycle repairs).
+      radii:     (C,) per-cell candidate radius (the exactness bound the
+                 repairs re-apply when inserting a joined sensor).
       cells:     (C, K_max) int32 candidate sensor ids per flattened cell,
                  padded with n (the sentinel row of the padded problem
                  arrays — always masked).
@@ -84,6 +98,8 @@ class ServingPlan:
 
     origin: jnp.ndarray
     inv_cell: jnp.ndarray
+    centers: jnp.ndarray
+    radii: jnp.ndarray
     cells: jnp.ndarray
     cell_mask: jnp.ndarray
     grid_shape: tuple = dataclasses.field(metadata=dict(static=True))
@@ -106,6 +122,8 @@ def make_serving_plan(
     cells_per_dim: int | None = None,
     lo=None,
     hi=None,
+    spare: int = 0,
+    slack: int = 0,
 ) -> ServingPlan:
     """Host-side precomputation of the kNN query plan for ``problem``.
 
@@ -113,65 +131,76 @@ def make_serving_plan(
     computed for this k; serving with any smaller k reuses the same plan).
     cells_per_dim: grid resolution; the default targets ~4 sensors per
     cell so K_max stays O(k) on uniform-density networks.  lo/hi override
-    the plan domain (defaults: the sensor bounding box) — widen them when
-    query grids extend beyond the sensors.
+    the plan domain (defaults: the LIVE-sensor bounding box) — widen them
+    when query grids extend beyond the sensors.
+
+    Lifecycle capacity: ``spare`` reserves extra padded candidate columns
+    for ``plan_add_sensor`` inserts, and ``slack`` widens the per-cell
+    radius to the (k+slack)-th neighbor so exactness survives up to
+    ``slack`` removals from any one cell's candidate list (see
+    ``plans.build_cell_lists``).  Dead rows (spares, removed sensors) are
+    excluded at build.
     """
-    pos = np.asarray(problem.topology.positions, np.float64)  # (n, d)
-    n, d = pos.shape
-    k = int(min(k, n))
+    n = problem.n
+    k = int(min(k, int(np.asarray(problem.alive[:n]).sum())))
     if k < 1:
         raise ValueError(f"k must be >= 1, got {k}")
-    lo = pos.min(axis=0) if lo is None else np.broadcast_to(
-        np.asarray(lo, np.float64), (d,)
+    grid = plans.build_cell_lists(
+        np.asarray(problem.topology.positions),
+        np.asarray(problem.alive[:n]),
+        k,
+        cells_per_dim,
+        lo,
+        hi,
+        spare=spare,
+        slack=slack,
     )
-    hi = pos.max(axis=0) if hi is None else np.broadcast_to(
-        np.asarray(hi, np.float64), (d,)
-    )
-    span = np.maximum(hi - lo, 1e-6)
-    if cells_per_dim is None:
-        cells_per_dim = max(1, int(round((n / 4.0) ** (1.0 / d))))
-    g = int(cells_per_dim)
-    cell = span / g
-    half_diag = 0.5 * float(np.linalg.norm(cell))
-
-    grid_shape = (g,) * d
-    n_cells = g**d
-    centers = np.stack(
-        np.meshgrid(
-            *[lo[j] + (np.arange(g) + 0.5) * cell[j] for j in range(d)],
-            indexing="ij",
-        ),
-        axis=-1,
-    ).reshape(n_cells, d)
-
-    # d(center, s) for every (cell, sensor): O(C*n) host work, build-time
-    # only (the same budget class as the coloring / scatter plans).
-    dc = np.sqrt(
-        np.maximum(
-            np.sum((centers[:, None, :] - pos[None, :, :]) ** 2, axis=-1), 0.0
-        )
-    )  # (C, n)
-    d_k = np.sort(dc, axis=1)[:, k - 1]  # (C,) k-th nearest to each center
-    radius = d_k + 2.0 * half_diag + 1e-7  # exactness bound, see module doc
-    member = dc <= radius[:, None]  # (C, n)
-
-    k_max = int(member.sum(axis=1).max())
-    cells = np.full((n_cells, k_max), n, dtype=np.int32)  # sentinel pad
-    mask = np.zeros((n_cells, k_max), dtype=bool)
-    for c in range(n_cells):
-        ids = np.nonzero(member[c])[0]
-        cells[c, : len(ids)] = ids
-        mask[c, : len(ids)] = True
-
     dt = problem.topology.positions.dtype
     return ServingPlan(
-        origin=jnp.asarray(lo, dt),
-        inv_cell=jnp.asarray(1.0 / cell, dt),
-        cells=jnp.asarray(cells),
-        cell_mask=jnp.asarray(mask),
-        grid_shape=grid_shape,
+        origin=jnp.asarray(grid["origin"], dt),
+        inv_cell=jnp.asarray(1.0 / grid["cell"], dt),
+        centers=jnp.asarray(grid["centers"], dt),
+        radii=jnp.asarray(grid["radii"], dt),
+        cells=jnp.asarray(grid["cells"]),
+        cell_mask=jnp.asarray(grid["mask"]),
+        grid_shape=grid["grid_shape"],
         k=k,
     )
+
+
+@jax.jit
+def plan_remove_sensor(plan: ServingPlan, slot: jax.Array) -> ServingPlan:
+    """Lifecycle repair: drop a removed sensor from every candidate list.
+
+    Device-side, fixed shapes, O(C*K_max) compare — pairs with
+    ``streaming.remove_sensor``.  Removals never shrink the per-cell
+    radius, so exactness holds while at most the plan's build ``slack``
+    candidates of any one cell have been removed.
+    """
+    mask = plans.cells_remove(
+        plan.cells, plan.cell_mask, jnp.asarray(slot, plan.cells.dtype), True
+    )
+    return dataclasses.replace(plan, cell_mask=mask)
+
+
+@jax.jit
+def plan_add_sensor(
+    plan: ServingPlan, x: jax.Array, slot: jax.Array
+) -> tuple[ServingPlan, jax.Array]:
+    """Lifecycle repair: insert a joined sensor into every covering cell.
+
+    Pairs with ``streaming.add_sensor``: the sensor enters the candidate
+    list of every cell whose build-time exactness radius covers ``x`` (adds
+    only shrink true kNN distances, so the bound stays valid).  Returns
+    ``(plan, overflowed)`` where ``overflowed`` counts cells whose candidate
+    rows were full — build the plan with more ``spare`` columns if nonzero.
+    """
+    x = jnp.asarray(x, plan.centers.dtype).reshape(-1)
+    cells, mask, overflowed = plans.cells_add(
+        plan.cells, plan.cell_mask, plan.centers, plan.radii, x,
+        jnp.asarray(slot, plan.cells.dtype), True,
+    )
+    return dataclasses.replace(plan, cells=cells, cell_mask=mask), overflowed
 
 
 def query_cells(plan: ServingPlan, xq: jax.Array) -> jax.Array:
@@ -188,16 +217,21 @@ def query_cells(plan: ServingPlan, xq: jax.Array) -> jax.Array:
 
 @partial(jax.jit, static_argnames=("k",))
 def knn_select(
-    plan: ServingPlan, positions: jax.Array, xq: jax.Array, k: int
+    plan: ServingPlan, positions: jax.Array, xq: jax.Array, k: int,
+    alive: jax.Array | None = None,
 ) -> jax.Array:
     """(Q, k) ids of each query's k nearest sensors via the cell plan.
 
     positions: the (n, d) sensor positions the plan was built from.  Ties
     break toward the lower sensor id, matching ``fusion.knn_fusion``.
+    alive: optional (n+1,) row liveness — dead candidates are never
+    selected, independent of the plan's repair state.
     """
     cid = query_cells(plan, xq)  # (Q,)
     cand = plan.cells[cid]  # (Q, K_max)
     cmask = plan.cell_mask[cid]  # (Q, K_max)
+    if alive is not None:
+        cmask = cmask & alive[cand]
     pos_pad = jnp.concatenate(
         [positions, jnp.zeros((1, positions.shape[1]), positions.dtype)]
     )
@@ -278,11 +312,12 @@ def knn_fuse(
         out = knn_fuse_fused(
             xq, cid, plan.cells, plan.cell_mask, pos_pad,
             nbr_pos, nbr_mask, coef,
-            gamma=problem.kernel.gamma, k=k,
+            alive=problem.alive, gamma=problem.kernel.gamma, k=k,
         )
         return out if problem.batched else out[0]
 
-    sel = knn_select(plan, positions, xq, k)  # (Q, k) shared across fields
+    # (Q, k) shared across fields (liveness is network-level, not per-field)
+    sel = knn_select(plan, positions, xq, k, problem.alive)
     if problem.batched:
         return jax.vmap(
             lambda np_, nm, cf: _eval_selected(

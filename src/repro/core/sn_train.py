@@ -91,6 +91,34 @@ GEMMs, so throughput scales with B (see benchmarks/multifield_bench.py).
 independent, so the transport is pure data parallelism).  With B = 1 the
 batched path IS the single-field path (same core, vmapped), asserted in
 tests/test_multifield.py.
+
+Network lifecycle (paper Sec. 3.3 "Robustness")
+-----------------------------------------------
+``make_problem(..., n_max=...)`` builds at CAPACITY: spare sensor rows
+(parked far away, each with a reserved singleton color — see
+``repro.core.plans``) plus the reserved-slot streaming layout give every
+membership operation a fixed-shape realization.  The problem carries a
+device-side ``alive`` row mask and a ``layout`` (slot ownership, color
+assignments, pristine slot tables); every sweep engine gates on it:
+
+  * dead members never update (their scatters degrade to "keep" in all of
+    plan/onehot/pallas — the Pallas kernels grew explicit alive operands);
+  * dead rows' message slots — and, via the slot-owner map, their absorbed
+    arrivals' slots — drop out of every gather;
+  * at all-True liveness the gates are identities BIT-FOR-BIT.
+
+PERSISTENT membership changes go through ``streaming.add_sensor`` /
+``remove_sensor``: they flip ``alive``, grow/downdate the affected
+Cholesky factors, and patch the color scatter plans (and, via
+``serving.plan_add_sensor`` / ``plan_remove_sensor``, the query-plan
+candidate lists) on device — each event touches one color class and O(1)
+grid cells, and an arbitrary join/leave/absorb/sweep/query trace compiles
+a constant number of programs (jit-cache-counted in
+tests/test_lifecycle.py).  TRANSIENT failures go through ``robust_sweep``,
+which refactorizes the masked systems per sweep (no event, no patched
+factors) but dispatches the same alive-masked colored engines — batched,
+engine-selectable, and bitwise-equal to ``colored_sweep`` at full
+liveness on arrival-free problems.
 """
 
 from __future__ import annotations
@@ -107,8 +135,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
 
+from . import plans
 from .kernels_math import Kernel
-from .topology import SensorTopology
+from .plans import LifecycleLayout
+from .topology import SensorTopology, pad_topology
 
 
 @jax.tree_util.register_dataclass
@@ -138,6 +168,11 @@ class SNTrainProblem:
     stream_pos: jnp.ndarray  # (S, d) arrival positions (zeros until absorbed)
     plan_z: jnp.ndarray  # (n_colors, n_z) color-step gather plan for z
     plan_coef: jnp.ndarray  # (n_colors, n+1) color-step gather plan for coef
+    alive: jnp.ndarray  # (n+1,) bool row liveness, shared across fields; the
+    # sentinel row n is PERMANENTLY dead — retired lanes point at its slot,
+    # and its deadness keeps them retired when spare rows are recycled
+
+    layout: LifecycleLayout  # event-invariant lifecycle metadata (repro.core.plans)
     n_stream: int = dataclasses.field(default=0, metadata=dict(static=True))
 
     @property
@@ -163,6 +198,16 @@ class SNTrainProblem:
         """Length of the message vector including the sentinel."""
         return self.n + self.n_stream + 1
 
+    @property
+    def n_base(self) -> int:
+        """Build-time sensor count; rows [n_base, n) are join capacity."""
+        return self.layout.n_base
+
+    @property
+    def alive_z(self) -> jnp.ndarray:
+        """(n_z,) message-slot liveness (a slot lives with its owning row)."""
+        return plans.alive_slots(self.alive, self.layout.slot_owner)
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
@@ -172,47 +217,24 @@ class SNTrainState:
 
 
 def default_lambdas(topology: SensorTopology, kappa: float = 0.01) -> jnp.ndarray:
-    """Paper Sec. 4.1: lambda_i = kappa / |N_i|^2 with kappa = 0.01."""
-    deg = topology.degrees.astype(jnp.float32)
-    return kappa / (deg**2)
+    """Paper Sec. 4.1: lambda_i = kappa / |N_i|^2 with kappa = 0.01.
 
-
-def _build_color_plans(
-    topology: SensorTopology, idx_full: np.ndarray, n_stream: int
-) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Host-side static scatter plans, one per color class.
-
-    The distance-2 coloring guarantees that within a color every touched
-    message slot and every touched coefficient row has exactly one source, so
-    the color-step update is a permutation gather:
-
-      plan_z[c][j]    = j               keep z[j], or
-                      = n_z + m*D + k   slot j is owned by lane k of the
-                                        color's m-th member;
-      plan_coef[c][r] = r               keep coef row r, or
-                      = (n+1) + m       row r is the color's m-th member.
-
-    The sentinel slot and the sentinel coefficient row always KEEP (they are
-    invariantly zero; the one-hot reference engine writes zeros there, so
-    both realizations agree bit-for-bit).  Codes always reference flat
-    positions < n_z + M_max*D, so the same plan applies when a caller pads
-    the member list wider (sharded_sweep pads to a device multiple).
+    Spare rows (degree 0) get a placeholder of 1.0; ``streaming.add_sensor``
+    installs the joined sensor's regularizer.
     """
-    n, d_max = topology.nbr_idx.shape
-    n_z = n + n_stream + 1
-    members = np.asarray(topology.color_members)
-    cmask = np.asarray(topology.color_mask)
-    n_colors, m_max = members.shape
-    plan_z = np.tile(np.arange(n_z, dtype=np.int32), (n_colors, 1))
-    plan_coef = np.tile(np.arange(n + 1, dtype=np.int32), (n_colors, 1))
-    for c in range(n_colors):
-        m_pos = np.nonzero(cmask[c])[0]  # positions of real members
-        mem = members[c, m_pos]
-        plan_coef[c, mem] = (n + 1) + m_pos
-        slots = idx_full[mem]  # (m_real, D) unique ids (no sentinel)
-        flat = m_pos[:, None] * d_max + np.arange(d_max)[None, :]
-        plan_z[c, slots.reshape(-1)] = n_z + flat.reshape(-1)
-    return jnp.asarray(plan_z), jnp.asarray(plan_coef)
+    deg = topology.degrees.astype(jnp.float32)
+    return jnp.where(deg > 0, kappa / jnp.maximum(deg, 1) ** 2, 1.0)
+
+
+def _pad_per_sensor(arr: jax.Array, n: int, fill) -> jax.Array:
+    """Pad an (n_base,)-shaped per-sensor vector to capacity ``n``."""
+    short = n - arr.shape[-1]
+    if short == 0:
+        return arr
+    if short < 0:
+        raise ValueError(f"per-sensor array longer ({arr.shape[-1]}) than n={n}")
+    pad = jnp.full(arr.shape[:-1] + (short,), fill, arr.dtype)
+    return jnp.concatenate([arr, pad], axis=-1)
 
 
 def make_problem(
@@ -222,6 +244,7 @@ def make_problem(
     lambdas: jax.Array | None = None,
     *,
     dtype=jnp.float32,
+    n_max: int | None = None,
 ) -> SNTrainProblem:
     """Precompute the padded SN-Train problem.
 
@@ -236,26 +259,52 @@ def make_problem(
     neighborhood slot (build the topology with ``d_max`` headroom to get
     more) owns a reserved message slot that arrivals can occupy
     (repro.core.streaming).
+
+    n_max: lifecycle capacity — pads the topology with ``n_max - n`` spare
+    sensor rows (reserved singleton colors, see ``topology.pad_topology``)
+    so ``streaming.add_sensor`` / ``remove_sensor`` can churn membership at
+    fixed shapes, recompile-free.  ``y``/``lambdas`` may be given at the
+    base length and are padded (0 / 1.0) over the spare rows.
     """
+    if n_max is not None:
+        topology = pad_topology(topology, n_max)
     n, d_max = topology.nbr_idx.shape
     d = topology.positions.shape[1]
+    n_base = topology.n_base if topology.n_base >= 0 else n
     if lambdas is None:
         lambdas = default_lambdas(topology)
-    lambdas = jnp.asarray(lambdas, dtype)
+    lambdas = _pad_per_sensor(jnp.asarray(lambdas, dtype), n, 1.0)
+    y = _pad_per_sensor(jnp.asarray(y, dtype), n, 0.0)
 
     # Assign every free padded slot its fixed reserved message id, and give
     # the sentinel row n the sentinel id (duplicate writes there carry 0s).
-    deg = np.asarray(topology.degrees)
-    free = d_max - deg  # (n,) per-sensor streaming capacity
-    n_stream = int(free.sum())
-    sentinel = n + n_stream
-    offsets = n + np.concatenate([[0], np.cumsum(free)[:-1]])
-    idx_np = np.asarray(topology.nbr_idx).copy()
-    for i in range(n):
-        idx_np[i, deg[i]:] = offsets[i] + np.arange(free[i])
-    idx_full = np.concatenate([idx_np, np.full((1, d_max), sentinel)])
+    # Spare rows are dead at build: their color plans start at "keep" and
+    # their rows are fully reserved capacity.
+    idx_full, n_stream = plans.assign_stream_slots(
+        np.asarray(topology.nbr_idx), np.asarray(topology.degrees)
+    )
     nbr_idx = jnp.asarray(idx_full, jnp.int32)
-    plan_z, plan_coef = _build_color_plans(topology, idx_full, n_stream)
+    # Row liveness: base rows alive, spare rows dead until a join claims
+    # them.  The sentinel row n is DEAD: lanes retired by remove_sensor
+    # point at the sentinel slot, and its deadness is what keeps them
+    # retired when a spare row is recycled.  (Padded color members and
+    # sentinel lanes are already occupancy-masked, so this costs nothing.)
+    alive0 = np.arange(n + 1) < n_base
+    plan_z, plan_coef = plans.build_color_plans(
+        np.asarray(topology.color_members),
+        np.asarray(topology.color_mask),
+        idx_full,
+        n_stream,
+        alive0,
+    )
+    layout = plans.build_layout(
+        idx_full,
+        np.asarray(topology.colors),
+        np.asarray(topology.color_members),
+        np.asarray(topology.color_mask),
+        n_stream,
+        n_base,
+    )
     nbr_mask = jnp.concatenate(
         [topology.nbr_mask, jnp.zeros((1, d_max), bool)], axis=0
     )
@@ -284,7 +333,7 @@ def make_problem(
     return SNTrainProblem(
         topology=topology,
         kernel=kernel,
-        y=jnp.asarray(y, dtype),
+        y=y,
         lambdas=lambdas,
         nbr_pos=nbr_pos,
         nbr_idx=nbr_idx,
@@ -293,8 +342,10 @@ def make_problem(
         chol=chol,
         lam_pad=lam_pad,
         stream_pos=jnp.zeros((n_stream, d), dtype),
-        plan_z=plan_z,
-        plan_coef=plan_coef,
+        plan_z=jnp.asarray(plan_z),
+        plan_coef=jnp.asarray(plan_coef),
+        alive=jnp.asarray(alive0),
+        layout=layout,
         n_stream=n_stream,
     )
 
@@ -306,18 +357,21 @@ def make_batch_problem(
     lambdas: jax.Array | None = None,
     *,
     dtype=jnp.float32,
+    n_max: int | None = None,
 ) -> SNTrainProblem:
     """B independent fields over one network: ``ys`` is (B, n).
 
-    Geometry (topology, regularizers, message-slot ids) is shared; the
-    per-field ``nbr_pos``/``nbr_mask``/``gram``/``chol``/``stream_pos``
-    arrays start as B identical copies and diverge only under streaming
-    absorption.
+    Geometry (topology, regularizers, message-slot ids, liveness) is
+    shared; the per-field ``nbr_pos``/``nbr_mask``/``gram``/``chol``/
+    ``stream_pos`` arrays start as B identical copies and diverge only
+    under streaming absorption.  ``n_max`` reserves lifecycle capacity as
+    in ``make_problem``.
     """
     ys = jnp.asarray(ys, dtype)
     if ys.ndim != 2:
         raise ValueError(f"ys must be (B, n), got shape {ys.shape}")
-    base = make_problem(topology, kernel, ys[0], lambdas, dtype=dtype)
+    base = make_problem(topology, kernel, ys[0], lambdas, dtype=dtype, n_max=n_max)
+    ys = _pad_per_sensor(ys, base.n, 0.0)
     b = ys.shape[0]
 
     def tile(a):
@@ -402,16 +456,21 @@ def _sensor_update(z, coef_s, nbr_idx_s, nbr_mask_s, gram_s, chol_s, lam_s):
 
 
 def _serial_core(
-    nbr_idx, nbr_mask, gram, chol, lam_pad, sentinel, z, coef, order, n_sweeps
+    nbr_idx, nbr_mask, gram, chol, lam_pad, sentinel, z, coef, order, n_sweeps,
+    alive_row, alive_slot,
 ):
     def body(carry, s):
         z, coef = carry
+        # Effective neighborhood: padded occupancy & slot/row liveness (a
+        # dead sensor neither updates nor is heard from; identity when the
+        # network is fully alive).
+        mask_s = nbr_mask[s] & alive_slot[nbr_idx[s]] & alive_row[s]
         coef_new, z_new = _sensor_update(
-            z, coef[s], nbr_idx[s], nbr_mask[s], gram[s], chol[s], lam_pad[s]
+            z, coef[s], nbr_idx[s], mask_s, gram[s], chol[s], lam_pad[s]
         )
-        coef = coef.at[s].set(coef_new)
-        scatter_idx = jnp.where(nbr_mask[s], nbr_idx[s], sentinel)
-        z = z.at[scatter_idx].set(jnp.where(nbr_mask[s], z_new, z[sentinel]))
+        coef = coef.at[s].set(jnp.where(alive_row[s], coef_new, coef[s]))
+        scatter_idx = jnp.where(mask_s, nbr_idx[s], sentinel)
+        z = z.at[scatter_idx].set(jnp.where(mask_s, z_new, z[sentinel]))
         return (z, coef), None
 
     def sweep(carry, _):
@@ -438,6 +497,8 @@ def serial_sweep(
         sentinel=problem.sentinel,
         order=order,
         n_sweeps=n_sweeps,
+        alive_row=problem.alive,
+        alive_slot=problem.alive_z,
     )
     run = lambda nm, g, ch, z, c: core(
         nbr_mask=nm, gram=g, chol=ch, z=z, coef=c
@@ -497,17 +558,27 @@ def _tri_solve_spd(chol, rhs):
 
 
 def _color_solve(
-    nbr_idx, lam_pad, nbr_mask, gram, chol, z, coef, members, member_mask
+    nbr_idx, lam_pad, alive_row, alive_slot, nbr_mask, gram, chol, z, coef,
+    members, member_mask,
 ):
     """Simultaneous P_{C_s} local solves for one color, all B fields.
 
     Shapes: z (B, NZ); coef (B, n+1, D); nbr_idx (n+1, D) shared;
-    nbr_mask/gram/chol per-field; members (M,), member_mask (M,).
+    nbr_mask/gram/chol per-field; members (M,), member_mask (M,);
+    alive_row (n+1,) / alive_slot (n_z,) shared liveness.  Dead members
+    solve to exact zeros (masked rhs) and dead neighbors/slots drop out of
+    every rhs; at all-True liveness the masks are identities and the floats
+    are bit-for-bit those of the lifecycle-free engine.
     Returns (idx_m (M, D), coef_new (B, M, D), z_new (B, M, D)); the engines
     differ only in how they scatter these back.
     """
     idx_m = nbr_idx[members]  # (M, D) shared across fields
-    mask_m = nbr_mask[:, members] & member_mask[None, :, None]  # (B, M, D)
+    live_m = member_mask & alive_row[members]  # (M,) updating members
+    mask_m = (
+        nbr_mask[:, members]
+        & live_m[None, :, None]
+        & alive_slot[idx_m][None]
+    )  # (B, M, D)
     gram_m = gram[:, members]  # (B, M, D, D)
     chol_m = chol[:, members]  # (B, M, D, D)
     lam_m = lam_pad[members]  # (M,)
@@ -521,23 +592,48 @@ def _color_solve(
     return idx_m, coef_new, z_new
 
 
-def _apply_plan(z, coef, z_new, coef_new, plan_z_c, plan_coef_c):
-    """Static-gather realization of the color-step scatter: O(n_z + n*D)."""
-    b = z.shape[0]
-    z = jnp.concatenate([z, z_new.reshape(b, -1)], axis=-1)[:, plan_z_c]
-    coef = jnp.concatenate([coef, coef_new], axis=1)[:, plan_coef_c]
+def _apply_plan(z, coef, z_new, coef_new, plan_z_c, plan_coef_c, live_m, alive_slot):
+    """Static-gather realization of the color-step scatter: O(n_z + n*D).
+
+    Scatter codes whose source member OR target message slot is DEAD
+    degrade to "keep" at runtime (transient liveness — robust_sweep —
+    never patches the plans; lifecycle events patch them too, in which
+    case the gates agree).  Target gating matches the paper's physics: a
+    down mote's own message slot is unreachable, so its last value
+    persists (exactly what the serial engine's masked scatter does).
+    Coefficient rows need no target gate — a row's only writer is its own
+    sensor, so source and target liveness coincide.
+    """
+    b, n_z = z.shape
+    d = z_new.shape[-1]
+    zc = jnp.concatenate([z, z_new.reshape(b, -1)], axis=-1)[:, plan_z_c]
+    src_m = jnp.clip((plan_z_c - n_z) // d, 0, live_m.shape[0] - 1)
+    use = (plan_z_c < n_z) | (live_m[src_m] & alive_slot)
+    z = jnp.where(use[None, :], zc, z)
+    n_rows = coef.shape[1]
+    cc = jnp.concatenate([coef, coef_new], axis=1)[:, plan_coef_c]
+    srcc = jnp.clip(plan_coef_c - n_rows, 0, live_m.shape[0] - 1)
+    usec = (plan_coef_c < n_rows) | live_m[srcc]
+    coef = jnp.where(usec[None, :, None], cc, coef)
     return z, coef
 
 
-def _apply_onehot(z, coef, z_new, coef_new, idx_m, members, n_z, n_rows):
+def _apply_onehot(
+    z, coef, z_new, coef_new, idx_m, members, n_z, n_rows, live_m, alive_slot
+):
     """Dense one-hot reference realization: O(M*D*n_z) GEMMs per color.
 
     Exact because slot ids are unique within a color; the sentinel id may
-    repeat but only ever receives zeros, 0 * (1-hit) == 0.
+    repeat but only ever receives zeros, 0 * (1-hit) == 0.  Dead members'
+    one-hot ROWS and dead slots' one-hot COLUMNS are zeroed, realizing the
+    same source/target "keep" gates as the plan gather.
     """
     b = z.shape[0]
+    d = idx_m.shape[-1]
     flat_idx = idx_m.reshape(-1)  # (M*D,)
+    live_f = jnp.repeat(live_m, d).astype(z.dtype)  # (M*D,)
     oh = (flat_idx[:, None] == jnp.arange(n_z)[None, :]).astype(z.dtype)
+    oh = oh * live_f[:, None] * alive_slot.astype(z.dtype)[None, :]
     hit = oh.sum(axis=0)  # (NZ,)
     z = z * (1.0 - hit)[None, :] + jnp.einsum(
         "kz,bk->bz", oh, z_new.reshape(b, -1)
@@ -545,6 +641,7 @@ def _apply_onehot(z, coef, z_new, coef_new, idx_m, members, n_z, n_rows):
     # One-hot coefficient scatter over member rows (padded members are the
     # sentinel sensor row n whose update is exactly 0).
     ohm = (members[:, None] == jnp.arange(n_rows)[None, :]).astype(coef.dtype)
+    ohm = ohm * live_m.astype(coef.dtype)[:, None]
     hitm = ohm.sum(axis=0)  # (n+1,)
     coef = coef * (1.0 - hitm)[None, :, None] + jnp.einsum(
         "mn,bmd->bnd", ohm, coef_new
@@ -558,12 +655,23 @@ ENGINES = ("plan", "onehot", "pallas")
 def _colored_core(
     problem: SNTrainProblem, nbr_mask, gram, chol, z, coef, n_sweeps,
     engine: str = "plan",
+    alive=None,
 ):
-    """Batched colored sweep over explicitly-leading field axes."""
+    """Batched colored sweep over explicitly-leading field axes.
+
+    ``alive`` overrides the problem's persistent row liveness (used by
+    ``robust_sweep`` for per-sweep transient liveness); all engines gate
+    dead members' updates and dead slots' reads, reducing bit-for-bit to
+    the lifecycle-free sweep at all-True liveness.
+    """
     if engine not in ENGINES:
         raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
     topo = problem.topology
-    solve = partial(_color_solve, problem.nbr_idx, problem.lam_pad)
+    alive_row = problem.alive if alive is None else alive
+    alive_slot = plans.alive_slots(alive_row, problem.layout.slot_owner)
+    solve = partial(
+        _color_solve, problem.nbr_idx, problem.lam_pad, alive_row, alive_slot
+    )
     xs = (topo.color_members, topo.color_mask, problem.plan_z, problem.plan_coef)
 
     if engine == "pallas":
@@ -572,12 +680,17 @@ def _colored_core(
         def color_body(carry, cm):
             z, coef = carry
             members, member_mask, _, _ = cm
+            idx_m = problem.nbr_idx[members]
+            live_m = member_mask & alive_row[members]
             z, coef = color_step_fused(
-                z, coef, members,
-                problem.nbr_idx[members],
-                nbr_mask[:, members] & member_mask[None, :, None],
+                z, coef, members, idx_m,
+                nbr_mask[:, members]
+                & live_m[None, :, None]
+                & alive_slot[idx_m][None],
                 gram[:, members], chol[:, members],
                 problem.lam_pad[members],
+                alive_row[members],
+                alive_slot,
             )
             return (z, coef), None
     else:
@@ -585,17 +698,19 @@ def _colored_core(
         def color_body(carry, cm):
             z, coef = carry
             members, member_mask, plan_z_c, plan_coef_c = cm
+            live_m = member_mask & alive_row[members]
             idx_m, coef_new, z_new = solve(
                 nbr_mask, gram, chol, z, coef, members, member_mask
             )
             if engine == "plan":
                 z, coef = _apply_plan(
-                    z, coef, z_new, coef_new, plan_z_c, plan_coef_c
+                    z, coef, z_new, coef_new, plan_z_c, plan_coef_c,
+                    live_m, alive_slot,
                 )
             else:
                 z, coef = _apply_onehot(
                     z, coef, z_new, coef_new, idx_m, members,
-                    problem.n_z, problem.n + 1,
+                    problem.n_z, problem.n + 1, live_m, alive_slot,
                 )
             return (z, coef), None
 
@@ -658,15 +773,20 @@ def local_only(problem: SNTrainProblem) -> SNTrainState:
             "are not part of problem.y — run it before streaming.absorb"
         )
     pad = problem.n_stream + 1
+    alive_row = problem.alive
+    alive_slot = problem.alive_z
 
     def solve_field(y, nbr_mask, chol):
         y_pad = jnp.concatenate([y, jnp.zeros((pad,), y.dtype)])
 
-        def solve_s(nbr_idx_s, nbr_mask_s, chol_s):
-            rhs = jnp.where(nbr_mask_s, y_pad[nbr_idx_s], 0.0)
+        def solve_s(nbr_idx_s, nbr_mask_s, chol_s, alive_s):
+            mask_s = nbr_mask_s & alive_slot[nbr_idx_s] & alive_s
+            rhs = jnp.where(mask_s, y_pad[nbr_idx_s], 0.0)
             return jsl.cho_solve((chol_s, True), rhs)
 
-        return y_pad, jax.vmap(solve_s)(problem.nbr_idx, nbr_mask, chol)
+        return y_pad, jax.vmap(solve_s)(
+            problem.nbr_idx, nbr_mask, chol, alive_row
+        )
 
     if problem.batched:
         z, coef = jax.vmap(solve_field)(
@@ -730,12 +850,19 @@ def sharded_sweep(
     pad = m_pad - m_max
     members = jnp.pad(topo.color_members, ((0, 0), (0, pad)), constant_values=problem.n)
     mask = jnp.pad(topo.color_mask, ((0, 0), (0, pad)))
+    # Full flat member order per color — the coordinate system of the
+    # scatter plans AND of the runtime liveness gate on their codes.
+    members_full = members  # (n_colors, m_pad)
+    live_full = mask & problem.alive[members_full]  # (n_colors, m_pad)
     # (n_colors, n_dev, m_pad // n_dev): device axis second for sharding.
     # Padding is APPENDED, so a member's global flat position (m*D + k, the
     # coordinate system of the scatter plans) is dev*m_local*D + local.
     members = members.reshape(n_colors, n_dev, -1)
     mask = mask.reshape(n_colors, n_dev, -1)
-    solve = partial(_color_solve, problem.nbr_idx, problem.lam_pad)
+    solve = partial(
+        _color_solve, problem.nbr_idx, problem.lam_pad,
+        problem.alive, problem.alive_z,
+    )
 
     def device_fn(z, coef, members_l, mask_l):
         # members_l: (n_colors, 1, m_local) local shard.
@@ -744,7 +871,7 @@ def sharded_sweep(
 
         def color_body(carry, cm):
             z, coef = carry
-            mem, mmask, plan_z_c, plan_coef_c = cm
+            mem, mmask, plan_z_c, plan_coef_c, live_c = cm
             _, coef_new, z_new = solve(
                 problem.nbr_mask[None], problem.gram[None], problem.chol[None],
                 z[None], coef[None], mem, mmask,
@@ -761,14 +888,15 @@ def sharded_sweep(
             )  # (m_pad, D)
             z, coef = _apply_plan(
                 z[None], coef[None], z_full[None], c_full[None],
-                plan_z_c, plan_coef_c,
+                plan_z_c, plan_coef_c, live_c, problem.alive_z,
             )
             return (z[0], coef[0]), None
 
         def sweep(carry, _):
             carry, _ = jax.lax.scan(
                 color_body, carry,
-                (members_l, mask_l, problem.plan_z, problem.plan_coef),
+                (members_l, mask_l, problem.plan_z, problem.plan_coef,
+                 live_full),
             )
             return carry, None
 
@@ -843,6 +971,7 @@ def random_sweep(
         z, coef = _serial_core(
             problem.nbr_idx, problem.nbr_mask, problem.gram, problem.chol,
             problem.lam_pad, problem.sentinel, carry[0], carry[1], order, 1,
+            problem.alive, problem.alive_z,
         )
         return (z, coef), None
 
@@ -871,21 +1000,21 @@ def _dynamic_sensor_update(problem, z, coef_s, s, alive_s):
 
 
 @partial(jax.jit, static_argnames=("n_sweeps",))
-def robust_sweep(
+def robust_sweep_links(
     problem: SNTrainProblem,
     state: SNTrainState,
     link_alive: jax.Array,  # (n_sweeps, n, D) bool: per-sweep link liveness
     n_sweeps: int = 1,
 ) -> SNTrainState:
-    """SN-Train with a changing topology (paper Sec. 3.3 'Robustness').
+    """Legacy LINK-level robustness: the paper's Sec. 3.3 model verbatim.
 
     Each sweep t uses neighborhoods N_{s,t} = N_s intersected with the alive
-    links; per the paper, the iteration still makes progress every step and
-    converges to the solution implied by the largest neighborhood occurring
-    infinitely often.  With link_alive all-True this is exactly serial_sweep
-    (up to solver choice) — asserted in tests.
+    links, solved densely per sensor in the serial Table-1 ordering.  Kept
+    as the single-field reference for asymmetric link failures; SENSOR-level
+    churn (the common case) goes through the batched alive-masked colored
+    path of ``robust_sweep``.
     """
-    _require_single_field(problem, "robust_sweep")
+    _require_single_field(problem, "robust_sweep_links")
     n = problem.n
     sentinel = problem.sentinel
     assert link_alive.shape[0] == n_sweeps
@@ -906,6 +1035,116 @@ def robust_sweep(
 
     (z, coef), _ = jax.lax.scan(sweep, (state.z, state.coef), link_alive)
     return SNTrainState(z=z, coef=coef)
+
+
+def _masked_factors(problem: SNTrainProblem, nbr_mask, gram, alive_row):
+    """Refactor every local system under the CURRENT liveness mask.
+
+    Mirrors ``make_problem``'s build: mask the Gram to the effective
+    (occupancy & liveness) lanes, put lambda on live diagonal entries and 1
+    on dead/padded ones, and Cholesky-factor row-wise.  At all-True
+    liveness the masked Gram IS the stored Gram (same floats), so on an
+    ARRIVAL-FREE problem the recomputed factors equal ``problem.chol``
+    bit-for-bit — which is what makes ``robust_sweep`` at full liveness
+    bitwise-equal to ``colored_sweep`` there.  Rows that absorbed
+    streaming arrivals carry grow-one-updated cached factors whose float
+    history a fresh factorization cannot reproduce; for those the
+    recomputation matches to factorization noise (the same ~1e-7-level
+    bound ``streaming.rebuild_chol`` is tested to).  Shapes:
+    nbr_mask/gram carry an explicit leading field axis.
+    """
+    alive_slot = plans.alive_slots(alive_row, problem.layout.slot_owner)
+    lane_alive = alive_slot[problem.nbr_idx] & alive_row[:, None]  # (n+1, D)
+    mask_eff = nbr_mask & lane_alive[None]  # (B, n+1, D)
+    outer = mask_eff[..., :, None] & mask_eff[..., None, :]
+    gram_eff = jnp.where(outer, gram, 0.0)
+    d = gram.shape[-1]
+    diag = jnp.where(mask_eff, problem.lam_pad[None, :, None], 1.0)
+    a = gram_eff + diag[..., None] * jnp.eye(d, dtype=gram.dtype)
+    chol_eff = jax.vmap(jax.vmap(lambda m: jsl.cholesky(m, lower=True)))(a)
+    return gram_eff, chol_eff
+
+
+@partial(jax.jit, static_argnames=("n_sweeps", "engine"))
+def _robust_colored(problem, state, alive_tn, n_sweeps, engine):
+    batched = problem.batched
+    nbr_mask = problem.nbr_mask if batched else problem.nbr_mask[None]
+    gram = problem.gram if batched else problem.gram[None]
+    z = state.z if batched else state.z[None]
+    coef = state.coef if batched else state.coef[None]
+
+    def sweep_body(carry, alive_t):
+        z, coef = carry
+        alive_row = problem.alive & jnp.concatenate(
+            [alive_t, jnp.ones((1,), bool)]
+        )
+        gram_eff, chol_eff = _masked_factors(problem, nbr_mask, gram, alive_row)
+        z, coef = _colored_core(
+            problem, nbr_mask, gram_eff, chol_eff, z, coef, 1, engine,
+            alive=alive_row,
+        )
+        return (z, coef), None
+
+    (z, coef), _ = jax.lax.scan(sweep_body, (z, coef), alive_tn)
+    if batched:
+        return SNTrainState(z=z, coef=coef)
+    return SNTrainState(z=z[0], coef=coef[0])
+
+
+def robust_sweep(
+    problem: SNTrainProblem,
+    state: SNTrainState,
+    alive: jax.Array,
+    n_sweeps: int = 1,
+    *,
+    engine: str = "plan",
+) -> SNTrainState:
+    """SN-Train with a changing topology (paper Sec. 3.3 'Robustness').
+
+    SENSOR-level liveness, batched: ``alive`` is (n,) or (n_sweeps, n)
+    bool; sweep t runs the alive-masked colored engine under
+    ``alive[t] & problem.alive`` — dead sensors neither update nor are
+    heard from, and every engine's scatter is gated on BOTH the source
+    member's and the target slot's liveness, so a down mote's messages and
+    coefficients persist untouched and a healed sensor resumes from its
+    last state (the paper's 'solution implied by the neighborhood
+    occurring infinitely often').  Because liveness is TRANSIENT here (no
+    lifecycle event patches the cached factors), every sweep refactorizes
+    the masked local systems in one batched pass — O(n*D^3) per sweep, the
+    robustness price — then dispatches the normal engines, so the call
+    accepts a leading field axis and every
+    ``engine={"plan","onehot","pallas"}`` like ``colored_sweep``:
+    "plan" == "onehot" bit-for-bit at any liveness, and at all-True
+    liveness on an ARRIVAL-FREE problem the recomputed factors equal the
+    cached ones bit-for-bit, so ``robust_sweep == colored_sweep`` exactly,
+    engine by engine (tests/test_lifecycle.py; after streaming absorption
+    the cached factors carry grow-one float history, and the match is to
+    ~1e-7 factorization noise instead — see ``_masked_factors``).
+    ``alive`` is a traced operand: one compiled program serves every
+    failure trace of a given length.
+
+    PERSISTENT membership changes should use ``streaming.add_sensor`` /
+    ``remove_sensor`` instead, which patch the factors once per event so
+    ``colored_sweep`` keeps its cached-factor speed.
+
+    Legacy LINK-level traces — (n_sweeps, n, D) bool — route to the
+    original serial dense path (``robust_sweep_links``), single-field
+    only, unchanged.
+    """
+    alive = jnp.asarray(alive)
+    if alive.ndim == 3:
+        return robust_sweep_links(problem, state, alive, n_sweeps)
+    alive = alive.astype(bool)
+    if alive.ndim == 1:
+        alive = jnp.broadcast_to(alive[None], (n_sweeps,) + alive.shape)
+    if alive.shape != (n_sweeps, problem.n):
+        raise ValueError(
+            f"alive must be (n,), (n_sweeps={n_sweeps}, n={problem.n}) "
+            f"or legacy (n_sweeps, n, D); got {alive.shape}"
+        )
+    return _robust_colored(
+        problem, state, alive, n_sweeps=n_sweeps, engine=engine
+    )
 
 
 # ---------------------------------------------------------------------------

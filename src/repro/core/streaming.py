@@ -52,12 +52,27 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import jax.scipy.linalg as jsl
 
-from .sn_train import SNTrainProblem, SNTrainState
+from . import plans
+from .sn_train import SNTrainProblem, SNTrainState, _masked_factors
+
+
+class AbsorbReceipt(NamedTuple):
+    """Per-arrival outcome flags of ``absorb_many`` (both (A,) bool).
+
+    ``absorbed``: the arrival was written (possibly after an eviction);
+    ``evicted``: the ``on_full="evict"`` policy freed the sensor's oldest
+    arrival first.  ``~absorbed`` arrivals were dropped (sensor full under
+    the drop policy, zero-capacity window sensor, or dead sensor).
+    """
+
+    absorbed: jax.Array
+    evicted: jax.Array
 
 
 def capacity_left(problem: SNTrainProblem) -> jnp.ndarray:
@@ -83,13 +98,18 @@ def _absorb(
     y = jnp.asarray(y, state.z.dtype)
 
     mask_s = problem.nbr_mask[field, sensor]  # (D,)
-    ok = jnp.any(~mask_s)  # sensor has a free slot; else DROP the arrival
+    # A free slot must exist and the sensor must be ALIVE; else DROP.
+    ok = jnp.any(~mask_s) & problem.alive[sensor]
     k = jnp.argmin(mask_s)  # first free slot (arrivals fill left-to-right)
     zid = problem.nbr_idx[sensor, k]  # fixed reserved message slot
     pos_s = problem.nbr_pos[field, sensor]  # (D, d)
     lam_s = problem.lam_pad[sensor]
 
-    kvec = jnp.where(mask_s, problem.kernel(x[None, :], pos_s)[0], 0.0)  # (D,)
+    # The kernel vector is masked to the EFFECTIVE lanes (occupied & alive):
+    # a removed neighbor's lane keeps its occupancy but is factored out of
+    # the cached Cholesky, and must stay out of the grow-one update too.
+    mask_eff = mask_s & problem.alive_z[problem.nbr_idx[sensor]]
+    kvec = jnp.where(mask_eff, problem.kernel(x[None, :], pos_s)[0], 0.0)  # (D,)
     kself = problem.kernel(x[None, :], x[None, :])[0, 0]
 
     new_row = kvec.at[k].set(kself)
@@ -114,7 +134,11 @@ def _absorb(
         nbr_pos=problem.nbr_pos.at[field, sensor, k].set(
             jnp.where(ok, x, problem.nbr_pos[field, sensor, k])
         ),
-        nbr_mask=problem.nbr_mask.at[field, sensor, k].set(True),
+        # gated: at a full sensor the bit was already True, but a DEAD
+        # sensor's free slot must stay free when the arrival is dropped
+        nbr_mask=problem.nbr_mask.at[field, sensor, k].set(
+            jnp.where(ok, True, problem.nbr_mask[field, sensor, k])
+        ),
         gram=problem.gram.at[field, sensor].set(
             jnp.where(ok, gram_s, problem.gram[field, sensor])
         ),
@@ -141,10 +165,12 @@ _absorb_donate = jax.jit(_absorb, donate_argnums=(0, 1))
 
 def _absorb_evict(problem, state, field, sensor, x, y):
     """One fused program: evict the oldest arrival IF the sensor is full,
-    then absorb — a single dispatch/copy per arrival, not two."""
+    then absorb — a single dispatch/copy per arrival, not two.  Returns
+    ``(problem, state, absorbed, evicted)``."""
     full = jnp.all(problem.nbr_mask[field, sensor])
-    problem, state, _ = _evict_core(problem, state, field, sensor, full)
-    return _absorb(problem, state, field, sensor, x, y)
+    problem, state, ev = _evict_core(problem, state, field, sensor, full)
+    problem, state, ok = _absorb(problem, state, field, sensor, x, y)
+    return problem, state, ok, ev
 
 
 _absorb_evict_copy = jax.jit(_absorb_evict)
@@ -197,24 +223,27 @@ def absorb(
         raise ValueError(f"on_full must be 'drop' or 'evict', got {on_full!r}")
     if on_full == "evict":
         fn = _absorb_evict_donate if donate else _absorb_evict_copy
-    else:
-        fn = _absorb_donate if donate else _absorb_copy
+        problem, state, ok, _ = fn(problem, state, field, sensor, x, y)
+        return problem, state, ok
+    fn = _absorb_donate if donate else _absorb_copy
     return fn(problem, state, field, sensor, x, y)
 
 
 def _absorb_many_core(problem, state, fields, sensors, xs, ys, evict):
-    step = _absorb_evict if evict else _absorb
-
     def body(carry, arrival):
         p, s = carry
         f, sn, x, y = arrival
-        p, s, ok = step(p, s, f, sn, x, y)
-        return (p, s), ok
+        if evict:
+            p, s, ok, ev = _absorb_evict(p, s, f, sn, x, y)
+        else:
+            p, s, ok = _absorb(p, s, f, sn, x, y)
+            ev = jnp.zeros((), bool)
+        return (p, s), AbsorbReceipt(absorbed=ok, evicted=ev)
 
-    (problem, state), flags = jax.lax.scan(
+    (problem, state), receipt = jax.lax.scan(
         body, (problem, state), (fields, sensors, xs, ys)
     )
-    return problem, state, flags
+    return problem, state, receipt
 
 
 _absorb_many_drop_copy = jax.jit(
@@ -237,7 +266,7 @@ def absorb_many(
     *,
     donate: bool = False,
     on_full: str = "drop",
-) -> tuple[SNTrainProblem, SNTrainState, jax.Array]:
+) -> tuple[SNTrainProblem, SNTrainState, AbsorbReceipt]:
     """Absorb a BATCH of A arrivals in one dispatch (lax.scan over them).
 
     ``fields``/``sensors`` are (A,) ints, ``xs`` (A, d), ``ys`` (A,);
@@ -245,8 +274,10 @@ def absorb_many(
     (same grow-one Cholesky update, same over-capacity ``on_full``
     policy), so the result equals A sequential ``absorb`` calls — but as
     ONE compiled program instead of A host round-trips, which is what the
-    serving stream loop wants (see ``launch/serve.py``).  Returns the
-    per-arrival absorbed flags as an (A,) bool vector.
+    serving stream loop wants (see ``launch/serve.py``).  Returns an
+    ``AbsorbReceipt`` of per-arrival (A,) ``absorbed``/``evicted`` flag
+    vectors so callers can surface capacity pressure (drops, evictions)
+    instead of silently losing data.
 
     The compiled program is specialized on A; serving processes that batch
     arrivals into fixed-size windows reuse one program.  ``donate`` has
@@ -295,7 +326,7 @@ def _evict_core(
     mask_s = problem.nbr_mask[field, sensor]  # (D,)
     ar = jnp.arange(d_max)
     occ = mask_s & (ar >= deg)  # occupied stream slots (contiguous from deg)
-    ok = occ.any() & jnp.asarray(gate, bool)
+    ok = occ.any() & jnp.asarray(gate, bool) & problem.alive[sensor]
     last = deg + jnp.sum(occ) - 1  # last occupied stream slot (when ok)
 
     # Shift stream slots [deg+1, last] down one; slot `last` becomes free.
@@ -317,10 +348,12 @@ def _evict_core(
     g2 = jnp.where(keep[:, None] & keep[None, :], g[perm][:, perm], 0.0)
 
     # Downdate = masked rebuild of this ONE sensor's factor, O(D^3): padded
-    # rows get unit diagonal so the factor stays SPD and the grow-one update
-    # keeps working on the evicted problem.
+    # AND lifecycle-dead lanes get unit diagonal (matching the effective
+    # occupied & alive mask of the cached factors) so the factor stays SPD
+    # and the grow-one update keeps working on the evicted problem.
     lam_s = problem.lam_pad[sensor]
-    diag = jnp.where(new_mask, lam_s, jnp.ones((), lam_s.dtype))
+    lane_alive = problem.alive_z[problem.nbr_idx[sensor]]  # (D,)
+    diag = jnp.where(new_mask & lane_alive, lam_s, jnp.ones((), lam_s.dtype))
     new_chol = jsl.cholesky(g2 + jnp.diag(diag), lower=True)
 
     # Messages and coefficients ride along with their slots; the freed
@@ -402,8 +435,12 @@ def evict_oldest(
 
 def rebuild_chol(problem: SNTrainProblem) -> jnp.ndarray:
     """From-scratch Cholesky of every local system — the O(D^3) reference
-    the streaming update is tested against."""
+    the streaming and lifecycle updates are tested against.  Factors over
+    the EFFECTIVE lane mask (occupied & alive): lanes of removed neighbors
+    keep their occupancy but drop out of the system, exactly as the event
+    repairs patch the cached factors."""
     lam_pad = problem.lam_pad
+    lane_alive = problem.alive_z[problem.nbr_idx] & problem.alive[:, None]
 
     def per_sensor(gram_s, mask_s, lam_s):
         diag = jnp.where(mask_s, lam_s, 1.0)
@@ -412,6 +449,303 @@ def rebuild_chol(problem: SNTrainProblem) -> jnp.ndarray:
     per_field = jax.vmap(per_sensor, in_axes=(0, 0, 0))
     if problem.batched:
         return jax.vmap(lambda g, m: per_field(g, m, lam_pad))(
-            problem.gram, problem.nbr_mask
+            problem.gram, problem.nbr_mask & lane_alive[None]
         )
-    return per_field(problem.gram, problem.nbr_mask, lam_pad)
+    return per_field(problem.gram, problem.nbr_mask & lane_alive, lam_pad)
+
+
+# ---------------------------------------------------------------------------
+# Network lifecycle: sensor join / leave at fixed shapes (paper Sec. 3.3
+# "Robustness" made persistent).  Siblings of absorb/evict_oldest: one
+# jitted program each, every operand traced, so an arbitrary churn trace
+# compiles a constant number of programs (tests/test_lifecycle.py counts).
+# ---------------------------------------------------------------------------
+
+
+def _add_sensor_core(problem, state, x, ys, lam):
+    n = problem.n
+    n_rows, d_max = problem.nbr_idx.shape
+    dt = problem.nbr_pos.dtype
+    lay = problem.layout
+    n_base = lay.n_base
+    x = jnp.asarray(x, dt).reshape(-1)  # (d,)
+    ys = jnp.asarray(ys, state.z.dtype).reshape(-1)  # (B,)
+    lam = jnp.asarray(lam, problem.lam_pad.dtype)
+
+    # 1. Claim the first dead SPARE row (spares carry reserved singleton
+    # colors, so a join never invalidates the frozen distance-2 coloring;
+    # removed spare rows are recycled).  No free spare => DROP the join.
+    spare_alive = problem.alive[n_base:n]
+    ok = jnp.any(~spare_alive)
+    slot = jnp.int32(n_base) + jnp.argmin(spare_alive).astype(jnp.int32)
+
+    # 2. Adopt the nearest live in-radius sensors (up to D-1 of them plus
+    # self; a denser-than-capacity neighborhood truncates to the nearest).
+    pos = problem.topology.positions.astype(dt)  # (n, d)
+    d2 = jnp.sum((pos - x[None, :]) ** 2, axis=-1)  # (n,)
+    radius = jnp.asarray(problem.topology.radius, dt)
+    cand = problem.alive[:n] & (d2 < radius * radius)
+    neg = jnp.where(cand, -d2, -jnp.inf)
+    k_n = min(d_max - 1, n)  # static lane budget for adopted neighbors
+    vals, ids = jax.lax.top_k(neg, k_n)  # nearest live first
+    valid = jnp.isfinite(vals)  # (k_n,)
+    c = 1 + jnp.sum(valid)  # occupied lane count (self included)
+    lam = jnp.where(lam >= 0, lam, 0.01 / c.astype(lam.dtype) ** 2)
+
+    # 3. The row's new slot table: [self, adopted neighbor z-slots...],
+    # free lanes restored from the pristine reserved ids (row recycling).
+    pad_k = d_max - 1 - k_n
+    sel_ids = jnp.concatenate(
+        [slot[None], ids.astype(jnp.int32),
+         jnp.zeros((pad_k,), jnp.int32)]
+    )
+    sel_valid = jnp.concatenate(
+        [jnp.ones((1,), bool), valid, jnp.zeros((pad_k,), bool)]
+    )
+    new_idx = jnp.where(sel_valid, sel_ids, lay.nbr_idx0[slot])
+    pos2 = pos.at[slot].set(jnp.where(ok, x, pos[slot]))
+    pos_pad = jnp.concatenate([pos2, jnp.zeros((1, pos2.shape[1]), dt)])
+    gathered = pos_pad[jnp.where(sel_valid, sel_ids, n)]
+    new_pos = jnp.where(sel_valid[:, None], gathered, x[None, :])  # (D, d)
+
+    # 4. The joined sensor's local system + factor (shared by all fields —
+    # the row starts arrival-free).
+    kmat = problem.kernel(new_pos, new_pos)  # (D, D)
+    outer = sel_valid[:, None] & sel_valid[None, :]
+    gram_row = jnp.where(outer, kmat, 0.0).astype(problem.gram.dtype)
+    diag = jnp.where(sel_valid, lam, 1.0)
+    chol_row = jsl.cholesky(gram_row + jnp.diag(diag), lower=True)
+
+    b = problem.batch_size
+    gate = lambda new, old: jnp.where(ok, new, old)
+    topo = dataclasses.replace(
+        problem.topology,
+        positions=pos2.astype(problem.topology.positions.dtype),
+        degrees=problem.topology.degrees.at[slot].set(
+            gate(c.astype(problem.topology.degrees.dtype),
+                 problem.topology.degrees[slot])
+        ),
+    )
+    problem = dataclasses.replace(
+        problem,
+        topology=topo,
+        y=problem.y.at[:, slot].set(gate(ys, problem.y[:, slot])),
+        nbr_idx=problem.nbr_idx.at[slot].set(
+            gate(new_idx, problem.nbr_idx[slot])
+        ),
+        nbr_mask=problem.nbr_mask.at[:, slot].set(
+            gate(
+                jnp.broadcast_to(sel_valid, (b, d_max)),
+                problem.nbr_mask[:, slot],
+            )
+        ),
+        nbr_pos=problem.nbr_pos.at[:, slot].set(
+            gate(
+                jnp.broadcast_to(new_pos, (b,) + new_pos.shape),
+                problem.nbr_pos[:, slot],
+            )
+        ),
+        gram=problem.gram.at[:, slot].set(
+            gate(
+                jnp.broadcast_to(gram_row, (b,) + gram_row.shape),
+                problem.gram[:, slot],
+            )
+        ),
+        chol=problem.chol.at[:, slot].set(
+            gate(
+                jnp.broadcast_to(chol_row, (b,) + chol_row.shape),
+                problem.chol[:, slot],
+            )
+        ),
+        lam_pad=problem.lam_pad.at[slot].set(gate(lam, problem.lam_pad[slot])),
+        alive=problem.alive.at[slot].set(gate(True, problem.alive[slot])),
+    )
+    plan_z, plan_coef = plans.color_plans_add(
+        problem.plan_z, problem.plan_coef, lay.color_of, lay.member_pos,
+        slot, new_idx, ok,
+    )
+    problem = dataclasses.replace(problem, plan_z=plan_z, plan_coef=plan_coef)
+
+    # 5. State: the recycled row's owned slots reset, the new sensor seeds
+    # its own message slot with its measurements (Table-1 init z_0 = y).
+    owned = (lay.slot_owner == slot) & ok  # (n_z,)
+    z = jnp.where(owned[None, :], 0.0, state.z)
+    z = z.at[:, slot].set(jnp.where(ok, ys, z[:, slot]))
+    coef = state.coef.at[:, slot].set(
+        jnp.where(ok, 0.0, state.coef[:, slot])
+    )
+    return problem, SNTrainState(z=z, coef=coef), slot, ok
+
+
+_add_sensor_copy = jax.jit(_add_sensor_core)
+_add_sensor_donate = jax.jit(_add_sensor_core, donate_argnums=(0, 1))
+
+
+def add_sensor(
+    problem: SNTrainProblem,
+    state: SNTrainState,
+    x: jax.Array,
+    ys: jax.Array,
+    *,
+    lam: float | jax.Array = -1.0,
+    donate: bool = False,
+) -> tuple[SNTrainProblem, SNTrainState, jax.Array, jax.Array]:
+    """A sensor JOINS the network at position ``x`` with measurements ``ys``.
+
+    Occupies the first free spare row (``make_problem(..., n_max=...)``
+    reserves them) and, entirely on device at fixed shapes:
+
+      * adopts the nearest live in-radius sensors into its padded
+        neighborhood (their message slots become its lanes; free lanes keep
+        the row's reserved streaming ids, so the joined sensor absorbs
+        arrivals like any other);
+      * builds its masked local Gram and Cholesky factor (one (D, D)
+        factorization, shared across fields);
+      * patches its reserved singleton color's scatter plans
+        (``plans.color_plans_add``) so the colored engines sweep it with
+        zero recompilation;
+      * seeds its message slot with ``ys`` (the Table-1 init) and flips
+        ``alive``.
+
+    The join is ONE-DIRECTIONAL: the newcomer reads and writes its
+    neighbors' message slots (information flows both ways through the
+    shared slots — its singleton color makes the writes conflict-free),
+    but existing sensors' representers do not grow an anchor at ``x``.
+    Every constraint set stays a subspace containing 0, so Fejér
+    monotonicity of the weighted norm survives the event
+    (tests/test_lifecycle.py).
+
+    ``lam``: the newcomer's regularizer; negative (default) applies the
+    paper's 0.01/|N|^2 rule to its adopted degree.  Returns
+    ``(problem, state, slot, joined)``; ``joined`` is False (no-op) when no
+    spare row is free — size capacity with ``n_max``.  A serving process
+    also patches its query plan: ``serving.plan_add_sensor(plan, x, slot)``.
+
+    ``donate=True`` has the ``absorb`` contract (rebind, drop the old
+    buffers).
+    """
+    if not problem.batched:
+        raise ValueError("lifecycle ops require a batched problem (use B = 1)")
+    if problem.topology.n_spare == 0:
+        raise ValueError(
+            "problem has no spare rows — build with "
+            "make_problem(..., n_max=n + spares) (or build_topology n_max=)"
+        )
+    if float(problem.topology.radius) <= 0.0:
+        raise ValueError(
+            "add_sensor needs a geometric topology (radius > 0) to find "
+            "the joining sensor's neighborhood"
+        )
+    fn = _add_sensor_donate if donate else _add_sensor_copy
+    return fn(problem, state, x, ys, lam)
+
+
+def _remove_sensor_core(problem, state, slot):
+    n = problem.n
+    lay = problem.layout
+    slot = jnp.asarray(slot, jnp.int32)
+    ok = (slot >= 0) & (slot < n) & problem.alive[slot]
+
+    alive = problem.alive.at[slot].set(
+        jnp.where(ok, False, problem.alive[slot])
+    )
+    # Every lane that referenced the sensor (its neighbors' rows + its own
+    # row) drops out of the local systems: zero the Gram rows/cols and the
+    # stale coefficients there, keep the OCCUPANCY mask (the lane is not
+    # free streaming capacity — ``alive`` gates it everywhere).  Other
+    # rows' referencing lanes are RETIRED for good — rewritten to the
+    # sentinel slot, which belongs to the permanently dead sentinel row —
+    # so recycling this row for a future join cannot resurrect them.
+    rows = jnp.arange(n + 1, dtype=jnp.int32)
+    hit = (problem.nbr_idx == slot) & ok
+    lane_kill = (hit | (rows[:, None] == slot)) & ok
+    retire = hit & (rows[:, None] != slot)
+    sentinel_id = jnp.asarray(problem.sentinel, problem.nbr_idx.dtype)
+    nbr_idx = jnp.where(retire, sentinel_id, problem.nbr_idx)
+    keep = ~lane_kill  # (n+1, D)
+    outer_keep = keep[:, :, None] & keep[:, None, :]
+    gram = jnp.where(outer_keep[None], problem.gram, 0.0)
+    coef = jnp.where(lane_kill[None], 0.0, state.coef)
+
+    # Downdate the AFFECTED rows' factors by a masked rebuild against the
+    # effective (occupied & alive) mask — one fused batched factorization
+    # (the shared ``sn_train._masked_factors`` convention; the extra Gram
+    # masking it applies is idempotent on the pre-zeroed ``gram``), selected
+    # back onto the affected rows only (untouched rows keep their grow-one
+    # float history bit-for-bit).
+    affected = lane_kill.any(axis=-1)  # (n+1,)
+    patched = dataclasses.replace(problem, nbr_idx=nbr_idx, alive=alive)
+    _, chol_new = _masked_factors(patched, problem.nbr_mask, gram, alive)
+    chol = jnp.where(affected[None, :, None, None], chol_new, problem.chol)
+
+    # The departed sensor's messages (own slot + its absorbed arrivals) and
+    # stream positions reset to the unoccupied convention.
+    owned = (lay.slot_owner == slot) & ok  # (n_z,)
+    z = jnp.where(owned[None, :], 0.0, state.z)
+    sp_owned = owned[n:-1]  # (S,)
+    stream_pos = jnp.where(
+        sp_owned[None, :, None], 0.0, problem.stream_pos
+    )
+
+    plan_z, plan_coef = plans.color_plans_remove(
+        problem.plan_z, problem.plan_coef, lay.color_of, slot,
+        nbr_idx[slot], ok,
+    )
+    # The retired lanes' scatter codes live in OTHER colors and target the
+    # departed sensor's z slot; only it and its (now retired) neighbors
+    # ever write that slot, so reverting the whole plan column to "keep"
+    # retires those codes in one write — a recycled row's fresh messages
+    # can never be clobbered by a stale plan entry.
+    plan_z = plan_z.at[:, slot].set(
+        jnp.where(ok, slot.astype(plan_z.dtype), plan_z[:, slot])
+    )
+    problem = dataclasses.replace(
+        problem,
+        nbr_idx=nbr_idx,
+        gram=gram,
+        chol=chol,
+        stream_pos=stream_pos,
+        alive=alive,
+        plan_z=plan_z,
+        plan_coef=plan_coef,
+    )
+    return problem, SNTrainState(z=z, coef=coef), ok
+
+
+_remove_sensor_copy = jax.jit(_remove_sensor_core)
+_remove_sensor_donate = jax.jit(_remove_sensor_core, donate_argnums=(0, 1))
+
+
+def remove_sensor(
+    problem: SNTrainProblem,
+    state: SNTrainState,
+    slot: jax.Array,
+    *,
+    donate: bool = False,
+) -> tuple[SNTrainProblem, SNTrainState, jax.Array]:
+    """A sensor LEAVES the network (mote death, battery, redeployment).
+
+    Entirely on device at fixed shapes: flips ``alive`` (which also kills
+    the sensor's reserved streaming slots via the slot-owner map), zeroes
+    the Gram rows/columns and stale coefficients of every lane that
+    referenced it, downdates the affected neighbors' Cholesky factors by a
+    masked rebuild (one fused batched pass, selected onto the O(degree)
+    affected rows), reverts its color's scatter-plan codes to "keep"
+    (``plans.color_plans_remove``) and resets its messages.  Neighbor
+    OCCUPANCY is preserved — a dead lane is not streaming capacity — so
+    ``absorb``'s left-to-right fill invariant survives.
+
+    Works on any live row.  Removed SPARE rows are recycled by the next
+    ``add_sensor``; removed base rows stay reserved for their original
+    sensor (their static color/slot assignments are position-bound).
+    Returns ``(problem, state, removed)``; removing a dead/out-of-range
+    slot is a no-op with ``removed`` False.  A serving process also
+    patches its query plan: ``serving.plan_remove_sensor(plan, slot)``.
+
+    ``donate=True`` has the ``absorb`` contract (rebind, drop the old
+    buffers).
+    """
+    if not problem.batched:
+        raise ValueError("lifecycle ops require a batched problem (use B = 1)")
+    fn = _remove_sensor_donate if donate else _remove_sensor_copy
+    return fn(problem, state, slot)

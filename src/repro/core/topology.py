@@ -6,13 +6,22 @@ own neighbor (``i in N_i``).
 
 Topology is *static program data*: it is computed host-side with numpy and
 frozen into padded jnp arrays (fixed shapes) so the training sweeps are pure
-``lax`` control flow.
+``lax`` control flow.  The padded representations (neighbor tables, color
+classes, spare rows) come from the shared plan layer ``repro.core.plans``.
 
 Parallelism (paper Sec. 3.3): two sensors may update simultaneously iff they
 share no neighbor, i.e. iff they are non-adjacent in the *square* of the
 graph.  We greedily color G^2 and sweep color classes; this is the TPU
 adaptation of the serial mote sweep (same fixed points, per the generalized
 control orderings of Bauschke & Borwein cited by the paper).
+
+Lifecycle capacity (paper Sec. 3.3 "Robustness"): ``build_topology(...,
+n_max=...)`` (or ``pad_topology``) reserves ``n_max - n`` SPARE sensor rows
+— parked at ``plans.FAR``, isolated in the graph, each holding its own
+reserved singleton color — so sensors can join/leave at runtime via
+``streaming.add_sensor`` / ``remove_sensor`` without a host rebuild or an
+XLA recompile.  Spare rows carry degree 0, so every lane of theirs backs a
+reserved streaming slot until a join occupies it.
 """
 
 from __future__ import annotations
@@ -23,6 +32,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from . import plans
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -30,17 +41,27 @@ class SensorTopology:
     """Frozen, padded representation of a sensor network graph.
 
     Attributes:
-      positions: (n, d) float32 sensor coordinates.
-      adj: (n, n) bool adjacency WITH self loops (i in N_i).
+      positions: (n, d) float32 sensor coordinates (spare rows parked FAR;
+        patched in place by ``streaming.add_sensor``).
+      adj: (n, n) bool adjacency WITH self loops (i in N_i) of the
+        BUILD-TIME graph (spare rows isolated; not maintained under churn —
+        lifecycle consumers read nbr_idx/nbr_mask + the problem's alive).
       nbr_idx: (n, D) int32 neighbor indices, padded with the sensor's own
         index (padding entries are masked out everywhere they matter).
       nbr_mask: (n, D) bool validity of nbr_idx entries.
-      degrees: (n,) int32 |N_i| (self loop included, as in the paper).
-      colors: (n,) int32 distance-2 greedy coloring.
-      n_colors: static int.
+      degrees: (n,) int32 |N_i| (self loop included, as in the paper);
+        structural lane count — the boundary between neighbor lanes and
+        reserved streaming lanes (patched for joined spare rows).
+      colors: (n,) int32 distance-2 greedy coloring (spares: singletons).
+      n_colors: static int (includes the spare-color budget).
       color_members: (n_colors, M) int32 members per color, padded with n
         (one-past-the-end sentinel; callers scatter into an (n+1,) buffer).
       color_mask: (n_colors, M) bool.
+      n_base: static int — build-time sensor count; rows [n_base, n) are
+        spare join capacity.
+      radius: static float — the geometric connection radius (0.0 for
+        non-geometric builds such as ``ring_topology``, which then cannot
+        accept joins).
     """
 
     positions: jnp.ndarray
@@ -52,6 +73,8 @@ class SensorTopology:
     n_colors: int = dataclasses.field(metadata=dict(static=True))
     color_members: jnp.ndarray
     color_mask: jnp.ndarray
+    n_base: int = dataclasses.field(default=-1, metadata=dict(static=True))
+    radius: float = dataclasses.field(default=0.0, metadata=dict(static=True))
 
     @property
     def n(self) -> int:
@@ -60,6 +83,10 @@ class SensorTopology:
     @property
     def d_max(self) -> int:
         return int(self.nbr_idx.shape[1])
+
+    @property
+    def n_spare(self) -> int:
+        return self.n - (self.n_base if self.n_base >= 0 else self.n)
 
 
 def geometric_adjacency(positions: np.ndarray, radius: float) -> np.ndarray:
@@ -92,43 +119,34 @@ def greedy_coloring(conflict: np.ndarray) -> tuple[np.ndarray, int]:
     return colors.astype(np.int32), int(colors.max()) + 1
 
 
-def build_topology(
-    positions: np.ndarray, radius: float, *, d_max: int | None = None
+def _assemble(
+    pos: np.ndarray,
+    adj: np.ndarray,
+    d_max: int | None,
+    n_spare: int,
+    radius: float,
 ) -> SensorTopology:
-    """Build the frozen topology for a geometric sensor graph."""
-    pos = np.asarray(positions, dtype=np.float32)
-    if pos.ndim == 1:
-        pos = pos[:, None]
-    n = pos.shape[0]
-    adj = geometric_adjacency(pos, radius)
-    degrees = adj.sum(axis=1).astype(np.int32)
-    dm = int(degrees.max()) if d_max is None else int(d_max)
-    if dm < int(degrees.max()):
-        raise ValueError(f"d_max={dm} < max degree {int(degrees.max())}")
-
-    nbr_idx = np.zeros((n, dm), dtype=np.int32)
-    nbr_mask = np.zeros((n, dm), dtype=bool)
-    for i in range(n):
-        nbrs = np.nonzero(adj[i])[0]
-        nbr_idx[i, : len(nbrs)] = nbrs
-        nbr_idx[i, len(nbrs) :] = i  # pad with self (masked)
-        nbr_mask[i, : len(nbrs)] = True
-
-    # Sensors conflict iff they share a neighbor <=> adjacent in G^2.
-    g2 = (adj.astype(np.int64) @ adj.astype(np.int64)) > 0
-    colors, n_colors = greedy_coloring(g2)
-
-    max_members = int(np.bincount(colors, minlength=n_colors).max())
-    color_members = np.full((n_colors, max_members), n, dtype=np.int32)
-    color_mask = np.zeros((n_colors, max_members), dtype=bool)
-    for c in range(n_colors):
-        members = np.nonzero(colors == c)[0]
-        color_members[c, : len(members)] = members
-        color_mask[c, : len(members)] = True
-
+    """Shared constructor over the plan-layer padded representations."""
+    n_base = adj.shape[0]
+    n = n_base + n_spare
+    if n_spare:
+        # Spare rows: parked far away at distinct points, isolated in the
+        # graph (no self loop either — degree 0 means every lane of theirs
+        # is reserved streaming/join capacity).
+        spare_pos = np.full((n_spare, pos.shape[1]), plans.FAR, np.float32)
+        spare_pos[:, 0] += np.arange(n_spare, dtype=np.float32)
+        pos = np.concatenate([pos, spare_pos])
+        adj_full = np.zeros((n, n), dtype=bool)
+        adj_full[:n_base, :n_base] = adj
+    else:
+        adj_full = adj
+    nbr_idx, nbr_mask, degrees = plans.padded_neighborhoods(adj_full, d_max)
+    colors, n_colors, color_members, color_mask = plans.color_classes(
+        adj, greedy_coloring, n_spare=n_spare
+    )
     return SensorTopology(
         positions=jnp.asarray(pos),
-        adj=jnp.asarray(adj),
+        adj=jnp.asarray(adj_full),
         nbr_idx=jnp.asarray(nbr_idx),
         nbr_mask=jnp.asarray(nbr_mask),
         degrees=jnp.asarray(degrees),
@@ -136,7 +154,52 @@ def build_topology(
         n_colors=n_colors,
         color_members=jnp.asarray(color_members),
         color_mask=jnp.asarray(color_mask),
+        n_base=n_base,
+        radius=float(radius),
     )
+
+
+def build_topology(
+    positions: np.ndarray,
+    radius: float,
+    *,
+    d_max: int | None = None,
+    n_max: int | None = None,
+) -> SensorTopology:
+    """Build the frozen topology for a geometric sensor graph.
+
+    d_max: pad neighborhoods wider than the max degree — the headroom backs
+    both streaming-arrival capacity and the lanes a joined sensor adopts.
+    n_max: total row capacity; ``n_max - len(positions)`` spare rows (with
+    reserved singleton colors) accept runtime joins.
+    """
+    pos = np.asarray(positions, dtype=np.float32)
+    if pos.ndim == 1:
+        pos = pos[:, None]
+    n = pos.shape[0]
+    n_spare = 0 if n_max is None else int(n_max) - n
+    if n_spare < 0:
+        raise ValueError(f"n_max={n_max} < n={n}")
+    adj = geometric_adjacency(pos, radius)
+    return _assemble(pos, adj, d_max, n_spare, radius)
+
+
+def pad_topology(topology: SensorTopology, n_max: int) -> SensorTopology:
+    """Re-pad an existing topology to ``n_max`` rows of join capacity.
+
+    Host-side convenience used by ``make_problem(..., n_max=...)``; the
+    base graph, coloring inputs and d_max are reused.
+    """
+    if topology.n_spare:
+        raise ValueError("pad_topology expects an unpadded topology")
+    n_spare = int(n_max) - topology.n
+    if n_spare < 0:
+        raise ValueError(f"n_max={n_max} < n={topology.n}")
+    if n_spare == 0:
+        return topology
+    pos = np.asarray(topology.positions)
+    adj = np.asarray(topology.adj)
+    return _assemble(pos, adj, topology.d_max, n_spare, topology.radius)
 
 
 def uniform_sensors(
@@ -148,7 +211,10 @@ def uniform_sensors(
 
 
 def ring_topology(n: int, *, hops: int = 1) -> SensorTopology:
-    """A ring graph (ICI-like) — used by the SOP-consensus mapping and tests."""
+    """A ring graph (ICI-like) — used by the SOP-consensus mapping and tests.
+
+    Non-geometric (radius 0): carries no join capacity.
+    """
     pos = np.stack(
         [
             np.cos(2 * np.pi * np.arange(n) / n),
@@ -162,33 +228,4 @@ def ring_topology(n: int, *, hops: int = 1) -> SensorTopology:
             adj[i, (i + h) % n] = True
             adj[i, (i - h) % n] = True
     np.fill_diagonal(adj, True)
-    # reuse builder internals by faking a radius via direct construction
-    degrees = adj.sum(axis=1).astype(np.int32)
-    dm = int(degrees.max())
-    nbr_idx = np.zeros((n, dm), dtype=np.int32)
-    nbr_mask = np.zeros((n, dm), dtype=bool)
-    for i in range(n):
-        nbrs = np.nonzero(adj[i])[0]
-        nbr_idx[i, : len(nbrs)] = nbrs
-        nbr_idx[i, len(nbrs) :] = i
-        nbr_mask[i, : len(nbrs)] = True
-    g2 = (adj.astype(np.int64) @ adj.astype(np.int64)) > 0
-    colors, n_colors = greedy_coloring(g2)
-    max_members = int(np.bincount(colors, minlength=n_colors).max())
-    color_members = np.full((n_colors, max_members), n, dtype=np.int32)
-    color_mask = np.zeros((n_colors, max_members), dtype=bool)
-    for c in range(n_colors):
-        members = np.nonzero(colors == c)[0]
-        color_members[c, : len(members)] = members
-        color_mask[c, : len(members)] = True
-    return SensorTopology(
-        positions=jnp.asarray(pos),
-        adj=jnp.asarray(adj),
-        nbr_idx=jnp.asarray(nbr_idx),
-        nbr_mask=jnp.asarray(nbr_mask),
-        degrees=jnp.asarray(degrees),
-        colors=jnp.asarray(colors),
-        n_colors=n_colors,
-        color_members=jnp.asarray(color_members),
-        color_mask=jnp.asarray(color_mask),
-    )
+    return _assemble(pos, adj, None, 0, 0.0)

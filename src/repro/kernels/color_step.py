@@ -37,7 +37,7 @@ from jax.experimental import pallas as pl
 
 def _color_step_kernel(
     z_ref, coef_ref, mem_ref, idx_ref, mask_ref, gram_ref, chol_ref, lam_ref,
-    zout_ref, cout_ref,
+    alive_ref, alivez_ref, zout_ref, cout_ref,
 ):
     j = pl.program_id(1)
 
@@ -54,6 +54,8 @@ def _color_step_kernel(
     gram = gram_ref[0]  # (bm, D, D)
     chol = chol_ref[0]  # (bm, D, D)
     lam = lam_ref[...]  # (bm,)
+    alive = alive_ref[...] != 0  # (bm,) member liveness (network lifecycle)
+    alivez = alivez_ref[...] != 0  # (NZ,) message-slot liveness
     d = idx.shape[-1]
 
     # Gather: this block's messages and previous coefficients.
@@ -80,8 +82,16 @@ def _color_step_kernel(
     z_new = jnp.einsum("mij,mj->mi", gram, coef_new)
 
     # Scatter (unique owners; padded lanes write zeros to the sentinels).
-    zout_ref[0, :] = z.at[idx.reshape(-1)].set(z_new.reshape(-1))
-    cout_ref[0] = coefv.at[mem].set(coef_new)
+    # DEAD members (removed / transiently down sensors) redirect to the
+    # sentinels, and so do lanes whose TARGET slot is dead (a down mote's
+    # own message slot is unreachable): slots and coefficient rows KEEP
+    # their values, matching the source/target gates of the plan engine.
+    n_z = z.shape[0]
+    r = coefv.shape[0]
+    idx_eff = jnp.where(alive[:, None] & alivez[idx], idx, n_z - 1)
+    mem_eff = jnp.where(alive, mem, r - 1)
+    zout_ref[0, :] = z.at[idx_eff.reshape(-1)].set(z_new.reshape(-1))
+    cout_ref[0] = coefv.at[mem_eff].set(coef_new)
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
@@ -94,6 +104,8 @@ def color_step_pallas(
     gram_m: jax.Array,
     chol_m: jax.Array,
     lam_m: jax.Array,
+    alive_m: jax.Array,
+    alive_z: jax.Array,
     *,
     block_m: int = 8,
     interpret: bool = False,
@@ -105,6 +117,8 @@ def color_step_pallas(
     m = members.shape[0]
     assert idx_m.shape == (m, d), (idx_m.shape, m, d)
     assert gram_m.shape == (b, m, d, d) and chol_m.shape == (b, m, d, d)
+    assert alive_m.shape == (m,), (alive_m.shape, m)
+    assert alive_z.shape == (n_z,), (alive_z.shape, n_z)
     assert m % block_m == 0, (m, block_m)
     grid = (b, m // block_m)
     return pl.pallas_call(
@@ -119,6 +133,8 @@ def color_step_pallas(
             pl.BlockSpec((1, block_m, d, d), lambda b, j: (b, j, 0, 0)),
             pl.BlockSpec((1, block_m, d, d), lambda b, j: (b, j, 0, 0)),
             pl.BlockSpec((block_m,), lambda b, j: (j,)),
+            pl.BlockSpec((block_m,), lambda b, j: (j,)),
+            pl.BlockSpec((n_z,), lambda b, j: (0,)),
         ],
         out_specs=[
             pl.BlockSpec((1, n_z), lambda b, j: (b, 0)),
@@ -129,7 +145,7 @@ def color_step_pallas(
             jax.ShapeDtypeStruct(coef.shape, coef.dtype),
         ],
         interpret=interpret,
-    )(z, coef, members, idx_m, mask_m, gram_m, chol_m, lam_m)
+    )(z, coef, members, idx_m, mask_m, gram_m, chol_m, lam_m, alive_m, alive_z)
 
 
 def color_step_fused(
@@ -141,6 +157,8 @@ def color_step_fused(
     gram_m: jax.Array,
     chol_m: jax.Array,
     lam_m: jax.Array,
+    alive_m: jax.Array | None = None,
+    alive_z: jax.Array | None = None,
     *,
     block_m: int = 8,
     interpret: bool | None = None,
@@ -148,7 +166,11 @@ def color_step_fused(
     """General-shape wrapper: one fused color step for all B fields.
 
     z (B, NZ); coef (B, n+1, D); members (M,) int; idx_m (M, D) int;
-    mask_m (B, M, D) bool; gram_m/chol_m (B, M, D, D); lam_m (M,).
+    mask_m (B, M, D) bool; gram_m/chol_m (B, M, D, D); lam_m (M,);
+    alive_m (M,) bool member liveness and alive_z (NZ,) bool message-slot
+    liveness (None = fully alive) — the network lifecycle's mask operands:
+    scatters from dead members or onto dead slots redirect to the
+    sentinels so those slots and coefficient rows KEEP their values.
     Returns the updated (z, coef).
 
     The lane axis is padded to a block multiple with inert lanes (sentinel
@@ -160,6 +182,10 @@ def color_step_fused(
     b, n_z = z.shape
     _, r, d = coef.shape
     m = members.shape[0]
+    if alive_m is None:
+        alive_m = jnp.ones((m,), bool)
+    if alive_z is None:
+        alive_z = jnp.ones((n_z,), bool)
     block_m = min(block_m, max(1, m))
     pad = (-m) % block_m
     if pad:
@@ -178,9 +204,11 @@ def color_step_fused(
         eye = jnp.broadcast_to(jnp.eye(d, dtype=chol_m.dtype), (b, pad, d, d))
         chol_m = jnp.concatenate([chol_m, eye], axis=1)
         lam_m = jnp.concatenate([lam_m, jnp.ones((pad,), lam_m.dtype)])
+        alive_m = jnp.concatenate([alive_m, jnp.ones((pad,), alive_m.dtype)])
     return color_step_pallas(
         z, coef,
         members.astype(jnp.int32), idx_m.astype(jnp.int32),
         mask_m.astype(jnp.int8), gram_m, chol_m, lam_m,
+        alive_m.astype(jnp.int8), alive_z.astype(jnp.int8),
         block_m=block_m, interpret=interpret,
     )

@@ -40,14 +40,17 @@ from jax.experimental import pallas as pl
 
 
 def _knn_fuse_kernel(
-    xq_ref, cid_ref, cells_ref, cmask_ref, spos_ref,
+    xq_ref, cid_ref, cells_ref, cmask_ref, alive_ref, spos_ref,
     npos_ref, nmask_ref, coef_ref, out_ref,
     *, gamma: float, k: int,
 ):
     xq = xq_ref[...]  # (BQ, d)
     cid = cid_ref[...]  # (BQ,)
+    alive = alive_ref[...]  # (n+1,) row liveness (network lifecycle)
     cand = cells_ref[...][cid]  # (BQ, K) this tile's candidate rows
-    cmask = cmask_ref[...][cid] != 0  # (BQ, K)
+    # Candidate validity = plan mask & liveness: a removed sensor drops out
+    # even before the serving plan's candidate lists are repaired.
+    cmask = (cmask_ref[...][cid] != 0) & (alive[cand] != 0)  # (BQ, K)
     cpos = spos_ref[...][cand]  # (BQ, K, d)
     npos = npos_ref[0]  # (n+1, D, d) — this field's anchors
     nmask = nmask_ref[0]  # (n+1, D)
@@ -78,6 +81,7 @@ def knn_fuse_pallas(
     qcell: jax.Array,
     cells: jax.Array,
     cmask: jax.Array,
+    alive: jax.Array,
     spos: jax.Array,
     nbr_pos: jax.Array,
     nbr_mask: jax.Array,
@@ -92,15 +96,16 @@ def knn_fuse_pallas(
     for the general-shape wrapper.
 
     xq (Q, d); qcell (Q,) int32 flattened cell ids; cells (C, K) int32;
-    cmask (C, K) int8; spos (n+1, d) padded sensor positions;
-    nbr_pos (B, n+1, D, d); nbr_mask (B, n+1, D) int8; coef (B, n+1, D).
-    Returns (B, Q).
+    cmask (C, K) int8; alive (n+1,) int8 sensor-row liveness;
+    spos (n+1, d) padded sensor positions; nbr_pos (B, n+1, D, d);
+    nbr_mask (B, n+1, D) int8; coef (B, n+1, D).  Returns (B, Q).
     """
     q, d = xq.shape
     c, kmax = cells.shape
     b, r, d_max, _ = nbr_pos.shape
     assert q % block_q == 0, (q, block_q)
     assert nbr_mask.shape == (b, r, d_max) and coef.shape == (b, r, d_max)
+    assert alive.shape == (r,), (alive.shape, r)
     grid = (b, q // block_q)
     return pl.pallas_call(
         functools.partial(_knn_fuse_kernel, gamma=gamma, k=k),
@@ -110,6 +115,7 @@ def knn_fuse_pallas(
             pl.BlockSpec((block_q,), lambda b, i: (i,)),
             pl.BlockSpec((c, kmax), lambda b, i: (0, 0)),
             pl.BlockSpec((c, kmax), lambda b, i: (0, 0)),
+            pl.BlockSpec((r,), lambda b, i: (0,)),
             pl.BlockSpec(spos.shape, lambda b, i: (0, 0)),
             pl.BlockSpec((1, r, d_max, d), lambda b, i: (b, 0, 0, 0)),
             pl.BlockSpec((1, r, d_max), lambda b, i: (b, 0, 0)),
@@ -118,7 +124,7 @@ def knn_fuse_pallas(
         out_specs=pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
         out_shape=jax.ShapeDtypeStruct((b, q), xq.dtype),
         interpret=interpret,
-    )(xq, qcell, cells, cmask, spos, nbr_pos, nbr_mask, coef)
+    )(xq, qcell, cells, cmask, alive, spos, nbr_pos, nbr_mask, coef)
 
 
 def knn_fuse_fused(
@@ -131,6 +137,7 @@ def knn_fuse_fused(
     nbr_mask: jax.Array,
     coef: jax.Array,
     *,
+    alive: jax.Array | None = None,
     gamma: float = 1.0,
     k: int = 1,
     block_q: int = 128,
@@ -141,11 +148,16 @@ def knn_fuse_fused(
     Queries are padded to the power-of-two bucket of Q (see
     ``kernels.ops.bucket_rows``) so a serving process with varied request
     sizes compiles O(log Q) programs; padded rows point at cell 0 and are
-    sliced off.  Returns (B, Q) in the input dtype.
+    sliced off.  ``alive`` is the (n+1,) sensor-row liveness mask (None =
+    fully alive): dead candidates never get selected, independent of the
+    serving plan's repair state.  Returns (B, Q) in the input dtype.
     """
     from .ops import _auto_interpret, bucket_rows
 
     q = xq.shape[0]
+    r = nbr_pos.shape[1]
+    if alive is None:
+        alive = jnp.ones((r,), jnp.int8)
     q_pad = bucket_rows(q)
     block_q = min(block_q, q_pad)
     q_pad = -(-q_pad // block_q) * block_q
@@ -154,7 +166,8 @@ def knn_fuse_fused(
         qcell = jnp.pad(qcell, ((0, q_pad - q),))
     return knn_fuse_pallas(
         xq, qcell.astype(jnp.int32),
-        cells.astype(jnp.int32), cell_mask.astype(jnp.int8), spos,
+        cells.astype(jnp.int32), cell_mask.astype(jnp.int8),
+        alive.astype(jnp.int8), spos,
         nbr_pos, nbr_mask.astype(jnp.int8), coef,
         gamma=gamma, k=k, block_q=block_q,
         interpret=_auto_interpret(interpret),

@@ -15,12 +15,22 @@ Two workloads:
                        static cell-candidate query plan
                        (``core.serving.make_serving_plan``) with
                        ``--engine {plan,pallas,dense}``.
+                       ``--churn N`` additionally replays a membership churn
+                       trace (sensor joins/leaves via ``streaming.add_sensor``
+                       / ``remove_sensor``) interleaved with arrival windows,
+                       refresh sweeps and query rounds — all at the fixed
+                       ``n_max`` capacity, so the whole trace compiles a
+                       constant number of programs (the report prints the
+                       jit-cache growth after warmup; it should be 0).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m \
     --variant smoke --batch 4 --prompt_len 32 --gen 64
   PYTHONPATH=src python -m repro.launch.serve --mode field \
     --fields 64 --sensors 50 --sweeps 30 --stream 128 --queries 512 \
+    --fusion knn --k 3 --engine plan
+  PYTHONPATH=src python -m repro.launch.serve --mode field \
+    --fields 16 --sensors 100 --stream 64 --churn 12 --spares 8 \
     --fusion knn --k 3 --engine plan
 """
 
@@ -102,18 +112,21 @@ def serve_fields(args):
     ys = np.sin(np.pi * freq * pos[None, :, 0] + phase) + 0.3 * rng.normal(size=(b, n))
 
     topo = build_topology(pos, args.radius)
-    if args.stream:
-        # headroom: streaming arrivals occupy free neighborhood slots
-        per_sensor = -(-args.stream // n) + 4
+    if args.stream or args.churn:
+        # headroom: streaming arrivals occupy free neighborhood slots (and
+        # joining sensors adopt them)
+        per_sensor = -(-max(args.stream, 1) // n) + 4
         deg_max = int(np.asarray(topo.degrees).max()) + per_sensor
         topo = build_topology(pos, args.radius, d_max=deg_max)
+    n_max = n + args.spares if args.churn else None
     prob = make_batch_problem(
-        topo, Kernel("rbf", gamma=args.gamma), ys, jnp.full((n,), args.lam)
+        topo, Kernel("rbf", gamma=args.gamma), ys, jnp.full((n,), args.lam),
+        n_max=n_max,
     )
     state = init_state(prob)
     print(
-        f"fields={b} sensors={n} D={topo.d_max} colors={topo.n_colors} "
-        f"stream_capacity={prob.n_stream}"
+        f"fields={b} sensors={n} (capacity {prob.n}) D={prob.topology.d_max} "
+        f"colors={prob.topology.n_colors} stream_capacity={prob.n_stream}"
     )
 
     # -- train: batched colored sweeps -------------------------------------
@@ -143,38 +156,136 @@ def serve_fields(args):
             ).astype(np.float32)
             return fs, ss, xs, rng.normal(size=a).astype(np.float32)
 
-        flags = []
+        absorbed_flags, evicted_flags = [], []
         if args.stream % 2:
-            fs, ss, xs, vs = window(1)
-            prob, state, ok = streaming.absorb(
-                prob, state, int(fs[0]), int(ss[0]), xs[0], float(vs[0]),
-                donate=True,
+            # via absorb_many so the remainder's receipt (incl. a possible
+            # eviction) lands in the printed counts like everyone else's
+            prob, state, rec = streaming.absorb_many(
+                prob, state, *window(1), donate=True, on_full=args.on_full
             )
-            flags.append(jnp.reshape(ok, (1,)))
+            absorbed_flags.append(rec.absorbed)
+            evicted_flags.append(rec.evicted)
         dt = None
         if half:
-            prob, state, flags0 = streaming.absorb_many(
-                prob, state, *window(half), donate=True
+            prob, state, rec0 = streaming.absorb_many(
+                prob, state, *window(half), donate=True, on_full=args.on_full
             )
             timed_window = window(half)  # generated before the clock starts
             jax.block_until_ready(prob.chol)
             t0 = time.time()
-            prob, state, flags1 = streaming.absorb_many(
-                prob, state, *timed_window, donate=True
+            prob, state, rec1 = streaming.absorb_many(
+                prob, state, *timed_window, donate=True, on_full=args.on_full
             )
             jax.block_until_ready(prob.chol)
             dt = time.time() - t0
-            flags += [flags0, flags1]
-        # the flags vector keeps the reported count honest about drops
-        absorbed = int(jnp.sum(jnp.concatenate(flags)))
+            absorbed_flags += [rec0.absorbed, rec1.absorbed]
+            evicted_flags += [rec0.evicted, rec1.evicted]
+        # the receipt flags keep the reported counts honest about capacity
+        # pressure: every arrival is absorbed, absorbed-after-evict, or
+        # dropped — nothing disappears silently
+        absorbed = int(jnp.sum(jnp.concatenate(absorbed_flags)))
+        evicted = (
+            int(jnp.sum(jnp.concatenate(evicted_flags)))
+            if evicted_flags else 0
+        )
         dropped = args.stream - absorbed
-        drop_note = f" ({dropped} over-capacity arrivals dropped)" if dropped else ""
+        pressure = (
+            f" (capacity pressure: {dropped} dropped, {evicted} evicted)"
+            if dropped or evicted else ""
+        )
         timing = (
             f", timed window of {half} in one dispatch: {dt:.3f}s -> "
             f"{dt/half*1e3:.3f} ms/update" if dt is not None else ""
         )
-        print(f"stream: {absorbed} updates{timing}{drop_note}")
+        print(f"stream: {absorbed} absorbed{timing}{pressure}")
         state = colored_sweep(prob, state, n_sweeps=args.refresh_sweeps)
+
+    # -- churn: replay a join/leave lifecycle trace at fixed capacity ------
+    churn_plan = None
+    if args.churn:
+        from repro.core import add_sensor, remove_sensor
+        from repro.core.serving import (
+            knn_select, plan_add_sensor, plan_remove_sensor,
+        )
+
+        # Slack >= the worst-case removals keeps the repaired query plan's
+        # kNN exactness bound valid across the whole trace.
+        churn_plan = make_serving_plan(
+            prob, k=args.k, spare=args.spares + 4, slack=args.churn
+        )
+        xq_c = np.linspace(-0.9, 0.9, 64)[:, None].astype(np.float32)
+        if pos.shape[1] > 1:
+            xq_c = np.concatenate(
+                [xq_c] + [np.zeros_like(xq_c)] * (pos.shape[1] - 1), axis=1
+            )
+        stats = dict(joins=0, join_drops=0, leaves=0, cell_overflows=0,
+                     absorbed=0, dropped=0)
+        joined: list[int] = []
+
+        def churn_round(prob, state, plan, i):
+            x = rng.uniform(-0.9, 0.9, size=pos.shape[1]).astype(np.float32)
+            prob, state, slot, ok = add_sensor(
+                prob, state, x, rng.normal(size=b).astype(np.float32),
+                lam=args.lam, donate=True,
+            )
+            if bool(ok):  # a dropped join must not touch the query plan
+                plan, over = plan_add_sensor(plan, x, slot)
+                joined.append(int(slot))
+                stats["joins"] += 1
+                stats["cell_overflows"] += int(over)
+            else:
+                stats["join_drops"] += 1
+            a = 8
+            fs = rng.integers(0, b, size=a)
+            ss = rng.integers(0, n, size=a)
+            xs = (pos[ss] + 0.05 * rng.normal(size=(a, pos.shape[1]))).astype(np.float32)
+            prob, state, rec = streaming.absorb_many(
+                prob, state, fs, ss, xs, rng.normal(size=a).astype(np.float32),
+                donate=True, on_full=args.on_full,
+            )
+            stats["absorbed"] += int(np.asarray(rec.absorbed).sum())
+            stats["dropped"] += a - int(np.asarray(rec.absorbed).sum())
+            state = colored_sweep(prob, state, n_sweeps=args.refresh_sweeps)
+            if i % 2 == 1:  # every other round a sensor leaves
+                victim = joined.pop(0) if joined else int(rng.integers(0, n))
+                prob, state, rok = remove_sensor(prob, state, victim, donate=True)
+                plan = plan_remove_sensor(plan, victim)
+                stats["leaves"] += int(bool(rok))
+                state = colored_sweep(prob, state, n_sweeps=args.refresh_sweeps)
+            # query with the engine under test (dense ignores the plan)
+            fusion.fuse(
+                prob, state, xq_c, "knn", k=args.k, engine=args.engine,
+                plan=None if args.engine == "dense" else plan,
+            ).block_until_ready()
+            return prob, state, plan
+
+        # Warm with one even + one odd round so both the join-only and the
+        # join+leave program sets are compiled before counting.
+        prob, state, churn_plan = churn_round(prob, state, churn_plan, 0)
+        prob, state, churn_plan = churn_round(prob, state, churn_plan, 1)
+        tracked = [
+            streaming._add_sensor_donate, streaming._remove_sensor_donate,
+            streaming._absorb_many_evict_donate if args.on_full == "evict"
+            else streaming._absorb_many_drop_donate,
+            colored_sweep, knn_select, plan_add_sensor, plan_remove_sensor,
+        ]
+        warm_sizes = [f._cache_size() for f in tracked]
+        t0 = time.time()
+        for i in range(2, args.churn):
+            prob, state, churn_plan = churn_round(prob, state, churn_plan, i)
+        dt = time.time() - t0
+        recompiles = sum(
+            f._cache_size() - s for f, s in zip(tracked, warm_sizes)
+        )
+        per_round = dt / max(args.churn - 2, 1) * 1e3
+        print(
+            f"churn: {args.churn} rounds ({stats['joins']} joins, "
+            f"{stats['leaves']} leaves, {stats['join_drops']} join-drops, "
+            f"{stats['absorbed']} absorbed / {stats['dropped']} dropped "
+            f"arrivals, {stats['cell_overflows']} cell overflows) "
+            f"{per_round:.1f} ms/round warm; "
+            f"recompiles after warmup: {recompiles} (want 0)"
+        )
 
     # -- query: one dispatch per request grid ------------------------------
     xq = np.linspace(-1, 1, args.queries)[:, None].astype(np.float32)
@@ -183,10 +294,12 @@ def serve_fields(args):
     if args.fusion == "knn":
         # kNN fusion (paper Eq. 19); plan/pallas route through the static
         # query plan — per-cell candidate lists, O(Q*k*D) per field instead
-        # of O(Q*n*D) — while dense runs the all-sensors oracle.
+        # of O(Q*n*D) — while dense runs the all-sensors oracle.  A churn
+        # trace's plan was repaired in place and keeps serving as-is.
         plan = (
             None if args.engine == "dense"
-            else make_serving_plan(prob, k=args.k)
+            else (churn_plan if churn_plan is not None
+                  else make_serving_plan(prob, k=args.k))
         )
         run = lambda: fusion.fuse(
             prob, state, xq, "knn", k=args.k, engine=args.engine, plan=plan
@@ -231,6 +344,12 @@ def main():
     ap.add_argument("--sweeps", type=int, default=30)
     ap.add_argument("--refresh_sweeps", type=int, default=5)
     ap.add_argument("--stream", type=int, default=0, help="streaming arrivals to absorb")
+    ap.add_argument("--on_full", default="drop", choices=["drop", "evict"],
+                    help="over-capacity arrival policy (evict = sliding window)")
+    ap.add_argument("--churn", type=int, default=0,
+                    help="membership churn rounds to replay (joins/leaves)")
+    ap.add_argument("--spares", type=int, default=8,
+                    help="spare sensor rows reserved for --churn joins (n_max = sensors + spares)")
     ap.add_argument("--queries", type=int, default=256)
     ap.add_argument("--fusion", default="conn", choices=["conn", "knn"],
                     help="query fusion rule (knn routes through the query plan)")

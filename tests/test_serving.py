@@ -197,13 +197,21 @@ def test_absorb_many_equals_repeated_absorb(on_full):
             on_full=on_full,
         )
         flags_seq.append(bool(ok))
-    p2, s2, flags = streaming.absorb_many(
+    p2, s2, receipt = streaming.absorb_many(
         prob0, state0, fields, sensors, xs, ys, on_full=on_full
     )
-    assert flags.shape == (a,)
-    assert [bool(f) for f in np.asarray(flags)] == flags_seq
+    assert receipt.absorbed.shape == (a,) and receipt.evicted.shape == (a,)
+    assert [bool(f) for f in np.asarray(receipt.absorbed)] == flags_seq
+    evicted = np.asarray(receipt.evicted)
     if on_full == "drop":
         assert not all(flags_seq)  # capacity 2/sensor: some drops occurred
+        assert not evicted.any()  # the drop policy never evicts
+    else:
+        # the sliding window absorbed everything; over-capacity arrivals
+        # are flagged as evictions (observable capacity pressure)
+        assert all(flags_seq)
+        assert evicted.any()
+        assert (~evicted | np.asarray(receipt.absorbed)).all()
     for name in ("nbr_pos", "nbr_mask", "gram", "chol", "stream_pos"):
         np.testing.assert_array_equal(
             np.asarray(getattr(p1, name)), np.asarray(getattr(p2, name)),
