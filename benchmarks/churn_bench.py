@@ -18,7 +18,12 @@ rebuild-based server pays one rebuild per window while the incremental
 server pays E repairs, so the advantage is t_rebuild / (E * t_event).
 
 Acceptance (ISSUE 4): incremental repair >= 10x faster than the host
-rebuild per event at n=1000, B=16.  Results go to ``BENCH_churn.json``;
+rebuild per event at n=1000, B=16.  ISSUE 5 adds the ``--per-event``
+series: joins are now SYMMETRIC (adopters grow reciprocal anchor lanes)
+and both join and remove gather only the O(degree) affected rows for
+their factor repairs — so the separate join/remove latencies must beat
+the PR-4 masked-full-refactorization numbers (>= 2x at n=1000) and stay
+flat in n at constant degree.  Results go to ``BENCH_churn.json``;
 ``churn_fast`` is the trimmed variant ``benchmarks/run.py --fast`` runs so
 the numbers land in the CI ``bench-json`` artifact.
 
@@ -89,6 +94,34 @@ def _time_incremental(prob, state, plan, b, lam, reps):
     return best / 2.0  # two membership events per cycle
 
 
+def _time_per_event(prob, state, b, lam, reps):
+    """Separate warm JOIN and REMOVE latencies (seconds each).
+
+    The ISSUE-5 acceptance series: both events gather only the O(degree)
+    affected rows (adopter/neighbor lane repairs + one batched masked
+    refactorization of those rows), so at constant degree the curve must
+    be flat in n — the PR-4 path refactorized all n rows per removal.
+    """
+    x = np.asarray([0.11, -0.07], np.float32)
+    ys_new = np.zeros((b,), np.float32)
+    # warm both programs
+    p2, s2, slot, _ = add_sensor(prob, state, x, ys_new, lam=lam)
+    jax.block_until_ready(p2.chol)
+    p3, s3, _ = remove_sensor(p2, s2, slot)
+    jax.block_until_ready(p3.chol)
+    t_join = t_rem = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        p2, s2, slot, _ = add_sensor(prob, state, x, ys_new, lam=lam)
+        jax.block_until_ready(p2.chol)
+        t_join = min(t_join, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        p3, s3, _ = remove_sensor(p2, s2, slot)
+        jax.block_until_ready(p3.chol)
+        t_rem = min(t_rem, time.perf_counter() - t0)
+    return t_join, t_rem
+
+
 def _time_rebuild(pos, ys, radius, lam, spares, k, reps):
     """Full host-side rebuild after a membership change, seconds."""
     n = pos.shape[0]
@@ -107,10 +140,13 @@ def _time_rebuild(pos, ys, radius, lam, spares, k, reps):
     return best
 
 
-def sweep(ns, batch, rates, radius=0.3, lam=0.1, spares=8, k=3, reps=3):
+def sweep(
+    ns, batch, rates, radius=0.3, lam=0.1, spares=8, k=3, reps=3,
+    per_event=True,
+):
     entries = []
-    print(f"{'n':>6s} {'D':>4s} {'ms/event inc':>13s} {'ms rebuild':>11s} "
-          f"{'speedup':>8s}")
+    print(f"{'n':>6s} {'D':>4s} {'ms/event inc':>13s} {'ms join':>8s} "
+          f"{'ms remove':>10s} {'ms rebuild':>11s} {'speedup':>8s}")
     for n in ns:
         r = radius * math.sqrt(100.0 / n)
         pos, topo, ys, prob, state = _build(n, batch, r, lam, spares)
@@ -123,14 +159,20 @@ def sweep(ns, batch, rates, radius=0.3, lam=0.1, spares=8, k=3, reps=3):
             "s_per_rebuild": t_reb,
             "speedup_per_event": t_reb / t_inc,
         }
+        t_join = t_rem = None
+        if per_event:
+            t_join, t_rem = _time_per_event(prob, state, batch, lam, reps)
+            row["s_per_join"] = t_join
+            row["s_per_remove"] = t_rem
         # Amortized advantage when E events share one serving window: a
         # rebuild server pays one rebuild, the incremental server E repairs.
         for e in rates:
             row[f"speedup_rate_{e}"] = t_reb / (e * t_inc)
         entries.append(row)
         print(
-            f"{n:6d} {row['d_max']:4d} {t_inc*1e3:13.2f} {t_reb*1e3:11.1f} "
-            f"{row['speedup_per_event']:8.1f}"
+            f"{n:6d} {row['d_max']:4d} {t_inc*1e3:13.2f} "
+            f"{(t_join or 0)*1e3:8.2f} {(t_rem or 0)*1e3:10.2f} "
+            f"{t_reb*1e3:11.1f} {row['speedup_per_event']:8.1f}"
         )
     return entries
 
@@ -153,6 +195,14 @@ def churn_fast(rows):
                 f"amortized_at_rate8={e['speedup_rate_8']:.1f}x",
             )
         )
+        # the O(degree) per-event series (ISSUE-5): flat-in-n at constant
+        # degree, tracked per commit via the CI bench-json artifact
+        rows.append(
+            (f"churn.n{e['n']}.join", e["s_per_join"] * 1e6, "per-event")
+        )
+        rows.append(
+            (f"churn.n{e['n']}.remove", e["s_per_remove"] * 1e6, "per-event")
+        )
 
 
 def main():
@@ -166,6 +216,10 @@ def main():
     ap.add_argument("--spares", type=int, default=8)
     ap.add_argument("--k", type=int, default=3)
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--no-per-event", dest="per_event", action="store_false",
+                    default=True,
+                    help="skip the separate join/remove timings (the "
+                         "O(degree) per-event series is on by default)")
     ap.add_argument("--out", default="BENCH_churn.json")
     args = ap.parse_args()
     ns = [int(s) for s in args.ns.split(",")]
@@ -173,12 +227,15 @@ def main():
     entries = sweep(
         ns, args.batch, rates,
         radius=args.radius, lam=args.lam, spares=args.spares,
-        k=args.k, reps=args.reps,
+        k=args.k, reps=args.reps, per_event=args.per_event,
     )
     out = {"name": "churn", "batch": args.batch, "rates": rates,
            "entries": entries}
     ref = next((e for e in entries if e["n"] == 1000), entries[-1])
     out["speedup_at_n1000_per_event"] = ref["speedup_per_event"]
+    if args.per_event:
+        out[f"s_per_join_at_n{ref['n']}"] = ref.get("s_per_join")
+        out[f"s_per_remove_at_n{ref['n']}"] = ref.get("s_per_remove")
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
         f.write("\n")

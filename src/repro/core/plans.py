@@ -37,20 +37,34 @@ Host-side builders (numpy, build time — shared by ``topology.build_topology``
                             candidate columns and a removal-slack radius.
 
 Device-side repair ops (pure jnp, fixed shapes — jitted by their callers in
-``streaming`` / ``serving``; each event touches one color class and O(1)
-grid cells):
+``streaming`` / ``serving``; each event touches O(degree) rows, their color
+classes and O(1) grid cells):
 
-  ``color_plans_remove``  revert a row's scatter codes to "keep";
-  ``color_plans_add``     install scatter codes for a (re)joined row;
+  ``plan_rows_remove``    revert a batch of rows' scatter codes to "keep"
+                          (rows occupy distinct colors, so one scatter);
+  ``plan_rows_add``       install a batch of rows' scatter codes;
+  ``color_plans_remove``  single-row wrappers of the two above;
+  ``color_plans_add``
+  ``members_clear``       drop rows from their color-class member lists;
+  ``members_set``         insert rows into (empty slots of) member lists;
+  ``resolve_join_conflicts``  the symmetric-join recoloring rule: adopters
+                          of a joining sensor all gain its message slot as
+                          a shared neighbor, so any two same-color adopters
+                          now conflict under the distance-2 rule — keep the
+                          first of each color, move the rest into reserved
+                          EMPTY recolor classes (singletons never conflict);
   ``cells_remove``        drop a sensor from every cell candidate list;
   ``cells_add``           insert a joined sensor into the candidate lists
                           of every cell whose exactness radius covers it.
 
-``LifecycleLayout`` is the event-invariant metadata the repairs need
-(color / member position / slot ownership / the pristine slot table for
-row recycling); the mutable ``alive`` vector lives on ``SNTrainProblem``
-directly.  See ``sn_train`` for how the sweep engines consume ``alive``
-and ``streaming.add_sensor`` / ``remove_sensor`` for the event ops.
+Color assignment is MUTABLE state under symmetric joins (recoloring moves
+sensors between classes), so ``color_of`` / ``member_pos`` and the member
+tables live on ``SNTrainProblem`` and are patched by the event ops.
+``LifecycleLayout`` keeps only the truly event-invariant metadata (slot
+ownership, the pristine slot table for row recycling); the mutable
+``alive`` vector lives on ``SNTrainProblem`` directly.  See ``sn_train``
+for how the sweep engines consume ``alive`` and ``streaming.add_sensor`` /
+``remove_sensor`` for the event ops.
 """
 
 from __future__ import annotations
@@ -76,25 +90,22 @@ class LifecycleLayout:
     All arrays are device-side and fixed at build; repairs read them but
     never write them.  ``n`` below is the padded capacity (``n_max``), and
     row ids in ``[n_base, n)`` are the spare rows joins may occupy.
+    (Color assignment used to live here too; symmetric joins recolor
+    sensors at runtime, so ``color_of`` / ``member_pos`` and the member
+    tables are mutable ``SNTrainProblem`` state now.)
 
     Attributes:
-      color_of:   (n+1,) int32 color id per sensor row (spares hold their
-                  reserved singleton color; the sentinel row holds
-                  ``n_colors``, an out-of-range placeholder).
-      member_pos: (n+1,) int32 position of each row within its color's
-                  member list (the ``m`` of the scatter-plan codes).
       slot_owner: (n_z,) int32 owning sensor row per message slot: sensor
                   slots own themselves, reserved slots belong to the row
                   whose free lane they back, the sentinel owns itself via
                   the sentinel row ``n``.
       nbr_idx0:   (n+1, D) int32 pristine build-time slot table — the
                   reserved ids a recycled spare row restores its free
-                  lanes from.
+                  lanes from, and the per-row reserved-id pool a lane
+                  DELETION (neighbor removal) restores freed lanes from.
       n_base:     static int, number of real (build-time) sensors.
     """
 
-    color_of: jnp.ndarray
-    member_pos: jnp.ndarray
     slot_owner: jnp.ndarray
     nbr_idx0: jnp.ndarray
     n_base: int = dataclasses.field(metadata=dict(static=True))
@@ -102,7 +113,7 @@ class LifecycleLayout:
     @property
     def n_spare(self) -> int:
         """Capacity reserved for joins (rows [n_base, n))."""
-        return int(self.color_of.shape[0]) - 1 - self.n_base
+        return int(self.nbr_idx0.shape[0]) - 1 - self.n_base
 
 
 # ---------------------------------------------------------------------------
@@ -135,19 +146,27 @@ def padded_neighborhoods(
 
 
 def color_classes(
-    adj: np.ndarray, greedy_coloring, n_spare: int = 0
+    adj: np.ndarray, greedy_coloring, n_spare: int = 0, n_recolor: int = 0
 ) -> tuple[np.ndarray, int, np.ndarray, np.ndarray]:
-    """Distance-2 color classes of the base graph + the spare-color budget.
+    """Distance-2 color classes of the base graph + the spare-color budgets.
 
     The first ``n_base`` rows of ``adj`` are colored greedily on G^2 (two
     sensors conflict iff they share a neighbor).  Each of the ``n_spare``
     spare rows is then assigned its own reserved *singleton* color: a
     sensor joining at ANY position updates alone in its color step, so the
-    frozen coloring never needs revalidation under churn.
+    frozen coloring never needs revalidation under churn.  ``n_recolor``
+    appends that many EMPTY reserved classes — the recolor pool symmetric
+    joins move conflicting adopters into (see
+    ``resolve_join_conflicts``); a sensor parked alone in one can never
+    conflict again, and the class frees itself when that sensor leaves.
 
     Returns ``(colors (n,), n_colors, color_members (n_colors, M),
-    color_mask (n_colors, M))`` with ``n = n_base + n_spare`` and members
-    padded with ``n`` (the sentinel row id).
+    color_mask (n_colors, M))`` with ``n = n_base + n_spare``, members
+    padded with ``n`` (the sentinel row id).  Membership means "this row
+    participates in the class's color step", so spare singleton classes
+    and the recolor pool start EMPTY — ``streaming.add_sensor`` installs
+    a member on join / recolor, ``remove_sensor`` clears it — and a
+    join -> leave round trip restores the tables bitwise.
     """
     n_base = adj.shape[0]
     g2 = (adj.astype(np.int64) @ adj.astype(np.int64)) > 0
@@ -156,14 +175,14 @@ def color_classes(
     colors = np.concatenate(
         [base_colors, n_base_colors + np.arange(n_spare, dtype=np.int32)]
     ).astype(np.int32)
-    n_colors = n_base_colors + n_spare
+    n_colors = n_base_colors + n_spare + n_recolor
     max_members = max(
         int(np.bincount(base_colors, minlength=n_base_colors).max()),
-        1 if n_spare else 0,
+        1 if (n_spare or n_recolor) else 0,
     )
     color_members = np.full((n_colors, max_members), n, dtype=np.int32)
     color_mask = np.zeros((n_colors, max_members), dtype=bool)
-    for c in range(n_colors):
+    for c in range(n_base_colors):
         members = np.nonzero(colors == c)[0]
         color_members[c, : len(members)] = members
         color_mask[c, : len(members)] = True
@@ -263,36 +282,47 @@ def build_color_plans(
         slots = idx_full[mem]  # (m_live, D) unique ids (no sentinel)
         flat = m_pos[:, None] * d_max + np.arange(d_max)[None, :]
         plan_z[c, slots.reshape(-1)] = n_z + flat.reshape(-1)
+    # The sentinel slot / sentinel coefficient row ALWAYS keep, even when a
+    # row's lane was retired to the sentinel id (a base-neighbor removal
+    # with no reserved id left to restore): the lane is masked everywhere,
+    # its update is exactly 0, and forcing "keep" here (mirrored by
+    # ``plan_rows_add``) keeps the plan deterministic and host == device.
+    plan_z[:, n_z - 1] = n_z - 1
+    plan_coef[:, n] = n
     return plan_z, plan_coef
 
 
 def build_layout(
-    idx_full: np.ndarray,
-    colors: np.ndarray,
-    color_members: np.ndarray,
-    color_mask: np.ndarray,
-    n_stream: int,
-    n_base: int,
+    idx_full: np.ndarray, n_stream: int, n_base: int
 ) -> LifecycleLayout:
     """Assemble the device-side ``LifecycleLayout`` from the host builders."""
-    n = idx_full.shape[0] - 1
+    return LifecycleLayout(
+        slot_owner=jnp.asarray(slot_owner_map(idx_full, n_stream)),
+        nbr_idx0=jnp.asarray(idx_full, jnp.int32),
+        n_base=int(n_base),
+    )
+
+
+def color_assignments(
+    colors: np.ndarray, color_members: np.ndarray, color_mask: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side initial (color_of (n+1,), member_pos (n+1,)) assignment.
+
+    These become MUTABLE ``SNTrainProblem`` state: symmetric joins recolor
+    conflicting adopters into the reserved recolor classes.  The sentinel
+    row holds ``n_colors``, an out-of-range placeholder (device repairs
+    that read it are index-clipped and value-gated, so it is inert).
+    """
+    n = colors.shape[0]
     n_colors = color_members.shape[0]
-    color_of = np.concatenate(
-        [np.asarray(colors), [n_colors]]
-    ).astype(np.int32)
+    color_of = np.concatenate([np.asarray(colors), [n_colors]]).astype(np.int32)
     member_pos = np.zeros(n + 1, dtype=np.int32)
     members = np.asarray(color_members)
     cmask = np.asarray(color_mask)
     for c in range(n_colors):
         m_pos = np.nonzero(cmask[c])[0]
         member_pos[members[c, m_pos]] = m_pos
-    return LifecycleLayout(
-        color_of=jnp.asarray(color_of),
-        member_pos=jnp.asarray(member_pos),
-        slot_owner=jnp.asarray(slot_owner_map(idx_full, n_stream)),
-        nbr_idx0=jnp.asarray(idx_full, jnp.int32),
-        n_base=int(n_base),
-    )
+    return color_of, member_pos
 
 
 def build_cell_lists(
@@ -379,10 +409,85 @@ def build_cell_lists(
 
 
 # ---------------------------------------------------------------------------
-# Device-side repair ops (fixed shapes; each event touches one color class
-# and O(1) grid cells).  All are pure and gate on a traced bool so callers
-# can fuse them into one jitted event program.
+# Device-side repair ops (fixed shapes; each event touches O(degree) rows,
+# their color classes and O(1) grid cells).  All are pure and gate on traced
+# bools so callers can fuse them into one jitted event program.  Gated-off
+# entries (and index-clipped reads from the sentinel row's out-of-range
+# color) always write back the value just read, so they are exact no-ops
+# even under scatter-duplicate index collisions.
 # ---------------------------------------------------------------------------
+
+
+def plan_rows_remove(
+    plan_z: jax.Array,
+    plan_coef: jax.Array,
+    colors_r: jax.Array,
+    slots_r: jax.Array,
+    idx_rows: jax.Array,
+    gate_r: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Revert R rows' scatter codes to "keep" in their colors' plans.
+
+    ``colors_r`` / ``slots_r`` (R,), ``idx_rows`` (R, D) the rows' CURRENT
+    slot tables, ``gate_r`` (R,) bool.  Scatter-collision contract: any
+    two gated rows must either occupy DISTINCT colors or have DISJOINT
+    slot tables (the scatter targets are ``(color, slot-id)`` pairs).
+    Both callers satisfy it: a removal repairs the departed sensor's
+    neighbors, whose colors are pairwise distinct (two same-color rows
+    sharing a neighbor would already violate the distance-2 coloring); a
+    join repairs the newcomer's adopters with their PRE-join colors and
+    tables, where same-color adopters can coexist (the very conflict
+    ``resolve_join_conflicts`` is about to fix) but then their pre-join
+    tables are disjoint, because the pre-join coloring is still valid.
+    One (R*D)-sized scatter per plan table.
+    """
+    keep_z = jnp.where(gate_r[:, None], idx_rows, 0)
+    rows = jnp.broadcast_to(colors_r[:, None], idx_rows.shape)
+    cur = plan_z[rows, idx_rows]
+    plan_z = plan_z.at[rows, idx_rows].set(
+        jnp.where(gate_r[:, None], keep_z, cur).astype(plan_z.dtype)
+    )
+    curc = plan_coef[colors_r, slots_r]
+    plan_coef = plan_coef.at[colors_r, slots_r].set(
+        jnp.where(gate_r, slots_r, curc).astype(plan_coef.dtype)
+    )
+    return plan_z, plan_coef
+
+
+def plan_rows_add(
+    plan_z: jax.Array,
+    plan_coef: jax.Array,
+    colors_r: jax.Array,
+    m_pos_r: jax.Array,
+    slots_r: jax.Array,
+    idx_rows: jax.Array,
+    gate_r: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Install R rows' scatter codes (the inverse of ``plan_rows_remove``).
+
+    Codes follow ``build_color_plans``: slot ``idx_rows[r, k]`` takes
+    ``n_z + m*D + k`` with ``m = m_pos_r[r]``, and the coefficient row
+    takes ``(n+1) + m``.  Lanes retired to the sentinel slot id stay at
+    "keep" (their update is identically zero; see ``build_color_plans``).
+    Same scatter-collision contract as ``plan_rows_remove`` — and the
+    POST-repair state a join installs here is strictly distinct-colors
+    (recoloring has already separated same-color adopters).
+    """
+    n_z = plan_z.shape[1]
+    r, d = idx_rows.shape
+    codes = n_z + m_pos_r[:, None] * d + jnp.arange(d, dtype=jnp.int32)[None]
+    codes = jnp.where(idx_rows == n_z - 1, idx_rows, codes)  # sentinel keeps
+    rows = jnp.broadcast_to(colors_r[:, None], idx_rows.shape)
+    cur = plan_z[rows, idx_rows]
+    plan_z = plan_z.at[rows, idx_rows].set(
+        jnp.where(gate_r[:, None], codes, cur).astype(plan_z.dtype)
+    )
+    n_rows = plan_coef.shape[1]
+    curc = plan_coef[colors_r, slots_r]
+    plan_coef = plan_coef.at[colors_r, slots_r].set(
+        jnp.where(gate_r, n_rows + m_pos_r, curc).astype(plan_coef.dtype)
+    )
+    return plan_z, plan_coef
 
 
 def color_plans_remove(
@@ -393,18 +498,12 @@ def color_plans_remove(
     idx_row: jax.Array,
     gate: jax.Array,
 ) -> tuple[jax.Array, jax.Array]:
-    """Revert row ``slot``'s scatter codes to "keep" in its color's plans.
-
-    ``idx_row`` is the row's CURRENT (D,) slot table — exactly the entries
-    the row owns within its color (disjoint from every other member's by
-    the distance-2 coloring), so the patch is a (D,)-sized scatter.
-    """
-    c = color_of[slot]
-    keep_z = jnp.where(gate, idx_row, plan_z[c, idx_row])
-    plan_z = plan_z.at[c, idx_row].set(keep_z.astype(plan_z.dtype))
-    keep_c = jnp.where(gate, slot, plan_coef[c, slot])
-    plan_coef = plan_coef.at[c, slot].set(keep_c.astype(plan_coef.dtype))
-    return plan_z, plan_coef
+    """Single-row wrapper of ``plan_rows_remove`` (reads the row's color)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    return plan_rows_remove(
+        plan_z, plan_coef, color_of[slot][None], slot[None], idx_row[None],
+        jnp.asarray(gate, bool)[None],
+    )
 
 
 def color_plans_add(
@@ -416,23 +515,104 @@ def color_plans_add(
     idx_row: jax.Array,
     gate: jax.Array,
 ) -> tuple[jax.Array, jax.Array]:
-    """Install row ``slot``'s scatter codes (the inverse of ``_remove``).
+    """Single-row wrapper of ``plan_rows_add`` (reads color + position)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    return plan_rows_add(
+        plan_z, plan_coef, color_of[slot][None], member_pos[slot][None],
+        slot[None], idx_row[None], jnp.asarray(gate, bool)[None],
+    )
 
-    Codes follow ``build_color_plans``: slot ``idx_row[k]`` takes
-    ``n_z + m*D + k`` with ``m = member_pos[slot]``, and the coefficient
-    row takes ``(n+1) + m``.
+
+def _member_hits(
+    shape: tuple, colors_r: jax.Array, m_pos_r: jax.Array, gate_r: jax.Array
+) -> jax.Array:
+    """(n_colors, M, R) bool: entry (c, m) addressed by gated row r."""
+    c_ax = jnp.arange(shape[0])[:, None, None]
+    m_ax = jnp.arange(shape[1])[None, :, None]
+    return (
+        (c_ax == colors_r[None, None, :])
+        & (m_ax == m_pos_r[None, None, :])
+        & gate_r[None, None, :]
+    )
+
+
+def members_clear(
+    color_members: jax.Array,
+    color_mask: jax.Array,
+    colors_r: jax.Array,
+    m_pos_r: jax.Array,
+    gate_r: jax.Array,
+    sentinel: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Clear R member-table entries ((colors_r[r], m_pos_r[r]) each).
+
+    Realized as a full-table masked update (deterministic under any index
+    collision of the gated-off rows); tables are (n_colors, M_max), so this
+    is the same O(n_colors * M) budget class as one color plan row.
     """
-    n_z = plan_z.shape[1]
-    d = idx_row.shape[0]
-    c = color_of[slot]
-    m = member_pos[slot]
-    codes = n_z + m * d + jnp.arange(d, dtype=plan_z.dtype)
-    vals = jnp.where(gate, codes, plan_z[c, idx_row])
-    plan_z = plan_z.at[c, idx_row].set(vals.astype(plan_z.dtype))
-    n_rows = plan_coef.shape[1]
-    cval = jnp.where(gate, n_rows + m, plan_coef[c, slot])
-    plan_coef = plan_coef.at[c, slot].set(cval.astype(plan_coef.dtype))
-    return plan_z, plan_coef
+    hit = _member_hits(color_members.shape, colors_r, m_pos_r, gate_r).any(-1)
+    return (
+        jnp.where(hit, jnp.asarray(sentinel, color_members.dtype), color_members),
+        color_mask & ~hit,
+    )
+
+
+def members_set(
+    color_members: jax.Array,
+    color_mask: jax.Array,
+    colors_r: jax.Array,
+    m_pos_r: jax.Array,
+    slots_r: jax.Array,
+    gate_r: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Install R member-table entries (entry (colors_r[r], m_pos_r[r]) takes
+    row id ``slots_r[r]``).  Gated target positions must be distinct and
+    currently empty (the recolor pool / singleton-class contract)."""
+    hit = _member_hits(color_members.shape, colors_r, m_pos_r, gate_r)
+    val = jnp.sum(hit * slots_r[None, None, :], axis=-1)
+    any_hit = hit.any(-1)
+    return (
+        jnp.where(any_hit, val.astype(color_members.dtype), color_members),
+        color_mask | any_hit,
+    )
+
+
+def resolve_join_conflicts(
+    color_of: jax.Array,
+    color_mask: jax.Array,
+    adopters: jax.Array,
+    valid: jax.Array,
+    recolor_start: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Conflict-aware recoloring of a symmetric join's adopters.
+
+    Post-join, every adopter's neighborhood contains the newcomer's message
+    slot, so any two same-color adopters violate the distance-2 rule (their
+    color-step scatters would both write that slot).  No other pair is
+    affected: non-adopters' neighborhoods are unchanged and the newcomer
+    updates alone in its reserved singleton color.  The repair keeps the
+    FIRST adopter of each color in place and moves the rest into empty
+    reserved recolor classes (``recolor_start`` onward — build the topology
+    with ``n_recolor`` budget): a sensor alone in a class can never
+    conflict again, so each sensor moves at most once, and a class frees
+    itself when its occupant leaves.
+
+    Returns ``(new_colors (A,), moved (A,) bool, feasible () bool)`` —
+    ``feasible`` is False when the pool has fewer empty classes than
+    conflicts (the caller must then DROP the join).
+    """
+    a = adopters.shape[0]
+    c = color_of[adopters]  # (A,)
+    same = (c[:, None] == c[None, :]) & valid[:, None] & valid[None, :]
+    earlier = jnp.tril(jnp.ones((a, a), bool), k=-1)
+    moved = (same & earlier).any(axis=1)  # not the first of its color
+    free = ~color_mask[recolor_start:].any(axis=1)  # (R,) empty pool classes
+    rank = jnp.cumsum(moved.astype(jnp.int32))  # 1-based rank among moves
+    csum = jnp.cumsum(free.astype(jnp.int32))
+    pick = jnp.searchsorted(csum, rank)  # rank-th empty class (when feasible)
+    new_c = jnp.where(moved, recolor_start + pick, c)
+    feasible = jnp.sum(moved) <= jnp.sum(free)
+    return new_c.astype(color_of.dtype), moved, feasible
 
 
 def cells_remove(

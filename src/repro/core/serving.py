@@ -44,7 +44,14 @@ sensor joins/leaves repair them in place (``plan_add_sensor`` /
 ``plan_remove_sensor``, built on ``repro.core.plans``) with zero host work
 and zero recompiles; build with ``spare=`` candidate columns and a
 ``slack=`` radius so exactness survives churn, and every select path also
-gates candidates on the problem's ``alive`` mask.
+gates candidates on the problem's ``alive`` mask.  Symmetric joins mean a
+join changes MORE than the candidate lists: every adopting neighbor's
+representer grows an anchor at the new position, so the repaired plan's
+predictions track the dense oracle through the adopters' changed
+functions too (tests/test_lifecycle.py).  When fewer than k candidates
+are live, every engine averages the valid selections only — dense, plan
+and pallas agree at all liveness fractions, all-dead included
+(tests/test_serving.py).
 
 Exactness contract: plans are exact for queries inside the plan's domain
 [lo, hi] (default: the LIVE-sensor bounding box, which the paper's query
@@ -216,16 +223,17 @@ def query_cells(plan: ServingPlan, xq: jax.Array) -> jax.Array:
 
 
 @partial(jax.jit, static_argnames=("k",))
-def knn_select(
+def knn_select_valid(
     plan: ServingPlan, positions: jax.Array, xq: jax.Array, k: int,
     alive: jax.Array | None = None,
-) -> jax.Array:
-    """(Q, k) ids of each query's k nearest sensors via the cell plan.
+) -> tuple[jax.Array, jax.Array]:
+    """((Q, k) selected ids, (Q, k) validity) via the cell plan.
 
-    positions: the (n, d) sensor positions the plan was built from.  Ties
-    break toward the lower sensor id, matching ``fusion.knn_fusion``.
-    alive: optional (n+1,) row liveness — dead candidates are never
-    selected, independent of the plan's repair state.
+    When fewer than k live candidates exist, ``top_k`` must still return k
+    indices; the overflow picks +inf-distance (dead / padded) entries and
+    ``valid`` marks them False so callers average the live selections only
+    — matching the dense oracle ``fusion.knn_fusion`` at every liveness
+    fraction (all-dead included: zero predictions).
     """
     cid = query_cells(plan, xq)  # (Q,)
     cand = plan.cells[cid]  # (Q, K_max)
@@ -238,25 +246,43 @@ def knn_select(
     cpos = pos_pad[cand]  # (Q, K_max, d)
     d2 = jnp.sum((xq[:, None, :] - cpos) ** 2, axis=-1)
     d2 = jnp.where(cmask, d2, jnp.inf)
-    _, top = jax.lax.top_k(-d2, k)  # (Q, k) candidate positions
-    return jnp.take_along_axis(cand, top, axis=1)
+    neg, top = jax.lax.top_k(-d2, k)  # (Q, k) candidate positions
+    return jnp.take_along_axis(cand, top, axis=1), jnp.isfinite(neg)
+
+
+def knn_select(
+    plan: ServingPlan, positions: jax.Array, xq: jax.Array, k: int,
+    alive: jax.Array | None = None,
+) -> jax.Array:
+    """(Q, k) ids of each query's k nearest sensors via the cell plan.
+
+    positions: the (n, d) sensor positions the plan was built from.  Ties
+    break toward the lower sensor id, matching ``fusion.knn_fusion``.
+    alive: optional (n+1,) row liveness — dead candidates are never
+    selected, independent of the plan's repair state.  (When fewer than k
+    live candidates exist the tail ids are dead/padded rows; use the
+    validity mask of ``knn_select_valid`` to exclude them.)
+    """
+    return knn_select_valid(plan, positions, xq, k, alive)[0]
 
 
 @partial(jax.jit, static_argnames=("kernel", "k"))
-def _eval_selected(kernel, nbr_pos, nbr_mask, coef, sel, xq, k: int):
-    """mean_j f_{sel[q,j]}(xq[q]) for one field: O(Q*k*D)."""
+def _eval_selected(kernel, nbr_pos, nbr_mask, coef, sel, valid, xq, k: int):
+    """mean over VALID selections of f_{sel[q,j]}(xq[q]): O(Q*k*D)."""
     d = xq.shape[-1]
     d_max = nbr_pos.shape[-2]
 
-    def per_query(x, sel_q):
+    def per_query(x, sel_q, valid_q):
         npos = nbr_pos[sel_q]  # (k, D, d)
         cf = jnp.where(nbr_mask[sel_q], coef[sel_q], 0.0)  # (k, D)
         kv = kernel(x[None, :], npos.reshape(k * d_max, d))[0].reshape(
             k, d_max
         )
-        return jnp.mean(jnp.sum(kv * cf, axis=-1))
+        f = jnp.sum(kv * cf, axis=-1)  # (k,)
+        cnt = jnp.sum(valid_q)
+        return jnp.sum(jnp.where(valid_q, f, 0.0)) / jnp.maximum(cnt, 1)
 
-    return jax.vmap(per_query)(xq, sel)
+    return jax.vmap(per_query)(xq, sel, valid)
 
 
 def knn_fuse(
@@ -317,14 +343,14 @@ def knn_fuse(
         return out if problem.batched else out[0]
 
     # (Q, k) shared across fields (liveness is network-level, not per-field)
-    sel = knn_select(plan, positions, xq, k, problem.alive)
+    sel, valid = knn_select_valid(plan, positions, xq, k, problem.alive)
     if problem.batched:
         return jax.vmap(
             lambda np_, nm, cf: _eval_selected(
-                problem.kernel, np_, nm, cf, sel, xq, k
+                problem.kernel, np_, nm, cf, sel, valid, xq, k
             )
         )(problem.nbr_pos, problem.nbr_mask, state.coef)
     return _eval_selected(
         problem.kernel, problem.nbr_pos, problem.nbr_mask, state.coef,
-        sel, xq, k,
+        sel, valid, xq, k,
     )

@@ -108,17 +108,32 @@ assignments, pristine slot tables); every sweep engine gates on it:
   * at all-True liveness the gates are identities BIT-FOR-BIT.
 
 PERSISTENT membership changes go through ``streaming.add_sensor`` /
-``remove_sensor``: they flip ``alive``, grow/downdate the affected
-Cholesky factors, and patch the color scatter plans (and, via
-``serving.plan_add_sensor`` / ``plan_remove_sensor``, the query-plan
-candidate lists) on device — each event touches one color class and O(1)
-grid cells, and an arbitrary join/leave/absorb/sweep/query trace compiles
-a constant number of programs (jit-cache-counted in
-tests/test_lifecycle.py).  TRANSIENT failures go through ``robust_sweep``,
-which refactorizes the masked systems per sweep (no event, no patched
-factors) but dispatches the same alive-masked colored engines — batched,
-engine-selectable, and bitwise-equal to ``colored_sweep`` at full
-liveness on arrival-free problems.
+``remove_sensor``.  Joins are SYMMETRIC (the paper's Eq. 10-12 coupling):
+the newcomer adopts its live in-radius neighbors AND each adopter grows a
+reciprocal anchor lane at the new position, so the post-join problem
+encodes exactly the constraint sets a from-scratch ``make_problem`` on
+the post-join topology would (tests pin the repaired scatter plans
+bitwise against the host builder, and the training iterates to <= 1e-5
+against a fresh build).  Reciprocal lanes can put two same-color adopters
+in conflict under the distance-2 rule; the event resolves that on device
+(``plans.resolve_join_conflicts``) by moving all but one adopter per
+color into reserved empty recolor classes — which is why the color
+member tables / row->color maps are mutable problem state (seeded from
+the topology, patched by events, scanned by every colored engine).  Both
+events repair O(degree) rows only: lane insertions/deletions plus ONE
+batched masked refactorization of the affected factors — never all n
+(benchmarks/churn_bench.py ``--per-event`` tracks the flat-in-n curve).
+Each event also patches the query-plan candidate lists
+(``serving.plan_add_sensor`` / ``plan_remove_sensor``), and an arbitrary
+join/leave/absorb/sweep/query trace compiles a constant number of
+programs (jit-cache-counted in tests/test_lifecycle.py).  TRANSIENT
+failures go through ``robust_sweep``, which refactorizes the masked
+systems per sweep (no event, no patched factors) but dispatches the same
+alive-masked colored engines — batched, engine-selectable, and
+bitwise-equal to ``colored_sweep`` at full liveness on arrival-free
+problems.  The single-field extensions (``weighted_sweep``,
+``robust_sweep_links``) thread the same liveness masks: dead sensors
+neither update nor are read anywhere.
 """
 
 from __future__ import annotations
@@ -168,6 +183,15 @@ class SNTrainProblem:
     stream_pos: jnp.ndarray  # (S, d) arrival positions (zeros until absorbed)
     plan_z: jnp.ndarray  # (n_colors, n_z) color-step gather plan for z
     plan_coef: jnp.ndarray  # (n_colors, n+1) color-step gather plan for coef
+    # Mutable color assignment (shared across fields): symmetric joins can
+    # recolor adopters into the reserved recolor classes, so the member
+    # tables the colored engines scan — and the row -> (color, position)
+    # maps the event repairs read — are problem state, seeded from the
+    # topology's build-time tables.
+    color_members: jnp.ndarray  # (n_colors, M) member rows per color class
+    color_mask: jnp.ndarray  # (n_colors, M) validity of color_members
+    color_of: jnp.ndarray  # (n+1,) color id per row (sentinel: n_colors)
+    member_pos: jnp.ndarray  # (n+1,) position of each row in its color
     alive: jnp.ndarray  # (n+1,) bool row liveness, shared across fields; the
     # sentinel row n is PERMANENTLY dead — retired lanes point at its slot,
     # and its deadness keeps them retired when spare rows are recycled
@@ -207,6 +231,11 @@ class SNTrainProblem:
     def alive_z(self) -> jnp.ndarray:
         """(n_z,) message-slot liveness (a slot lives with its owning row)."""
         return plans.alive_slots(self.alive, self.layout.slot_owner)
+
+    @property
+    def recolor_start(self) -> int:
+        """First reserved recolor class (the pool symmetric joins use)."""
+        return int(self.color_members.shape[0]) - self.topology.n_recolor
 
 
 @jax.tree_util.register_dataclass
@@ -297,13 +326,11 @@ def make_problem(
         n_stream,
         alive0,
     )
-    layout = plans.build_layout(
-        idx_full,
+    layout = plans.build_layout(idx_full, n_stream, n_base)
+    color_of, member_pos = plans.color_assignments(
         np.asarray(topology.colors),
         np.asarray(topology.color_members),
         np.asarray(topology.color_mask),
-        n_stream,
-        n_base,
     )
     nbr_mask = jnp.concatenate(
         [topology.nbr_mask, jnp.zeros((1, d_max), bool)], axis=0
@@ -344,6 +371,14 @@ def make_problem(
         stream_pos=jnp.zeros((n_stream, d), dtype),
         plan_z=jnp.asarray(plan_z),
         plan_coef=jnp.asarray(plan_coef),
+        # distinct buffers from the topology's tables (the problem pytree
+        # carries both; aliased buffers would break donate=True dispatch)
+        color_members=jnp.asarray(
+            np.asarray(topology.color_members), jnp.int32
+        ),
+        color_mask=jnp.asarray(np.asarray(topology.color_mask), bool),
+        color_of=jnp.asarray(color_of),
+        member_pos=jnp.asarray(member_pos),
         alive=jnp.asarray(alive0),
         layout=layout,
         n_stream=n_stream,
@@ -666,13 +701,17 @@ def _colored_core(
     """
     if engine not in ENGINES:
         raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
-    topo = problem.topology
     alive_row = problem.alive if alive is None else alive
     alive_slot = plans.alive_slots(alive_row, problem.layout.slot_owner)
     solve = partial(
         _color_solve, problem.nbr_idx, problem.lam_pad, alive_row, alive_slot
     )
-    xs = (topo.color_members, topo.color_mask, problem.plan_z, problem.plan_coef)
+    # The member tables are problem state (symmetric joins recolor), so a
+    # churned problem sweeps its CURRENT classes with zero recompilation.
+    xs = (
+        problem.color_members, problem.color_mask,
+        problem.plan_z, problem.plan_coef,
+    )
 
     if engine == "pallas":
         from repro.kernels.color_step import color_step_fused
@@ -843,13 +882,14 @@ def sharded_sweep(
             "(the psum payload IS the plan's touched-slot buffer); engine "
             "selection applies to batched, field-sharded problems"
         )
-    topo = problem.topology
     n_dev = mesh.shape[axis]
-    n_colors, m_max = topo.color_members.shape
+    n_colors, m_max = problem.color_members.shape
     m_pad = -(-m_max // n_dev) * n_dev  # round up to device multiple
     pad = m_pad - m_max
-    members = jnp.pad(topo.color_members, ((0, 0), (0, pad)), constant_values=problem.n)
-    mask = jnp.pad(topo.color_mask, ((0, 0), (0, pad)))
+    members = jnp.pad(
+        problem.color_members, ((0, 0), (0, pad)), constant_values=problem.n
+    )
+    mask = jnp.pad(problem.color_mask, ((0, 0), (0, pad)))
     # Full flat member order per color — the coordinate system of the
     # scatter plans AND of the runtime liveness gate on their codes.
     members_full = members  # (n_colors, m_pad)
@@ -980,13 +1020,19 @@ def random_sweep(
     return SNTrainState(z=z, coef=coef)
 
 
-def _dynamic_sensor_update(problem, z, coef_s, s, alive_s):
+def _dynamic_sensor_update(problem, z, coef_s, s, alive_s, alive_row, alive_slot):
     """P_{C_s} with the CURRENT neighborhood N_{s,t} = N_s & alive_s.
 
     Solves the masked system directly (no cached Cholesky — the active set
-    changes per step).  Padded/dead entries keep coefficient 0.
+    changes per step).  Padded/dead entries keep coefficient 0; the
+    PERSISTENT liveness of the problem (``alive_row``/``alive_slot``,
+    lifecycle removals) intersects the transient per-sweep link mask, so
+    dead sensors neither update nor are read as neighbors here either.
     """
-    mask = problem.nbr_mask[s] & alive_s
+    mask = (
+        problem.nbr_mask[s] & alive_s
+        & alive_slot[problem.nbr_idx[s]] & alive_row[s]
+    )
     gram = jnp.where(mask[:, None] & mask[None, :], problem.gram[s], 0.0)
     lam = problem.lam_pad[s]
     diag = jnp.where(mask, lam, 1.0)
@@ -1009,21 +1055,27 @@ def robust_sweep_links(
     """Legacy LINK-level robustness: the paper's Sec. 3.3 model verbatim.
 
     Each sweep t uses neighborhoods N_{s,t} = N_s intersected with the alive
-    links, solved densely per sensor in the serial Table-1 ordering.  Kept
-    as the single-field reference for asymmetric link failures; SENSOR-level
-    churn (the common case) goes through the batched alive-masked colored
-    path of ``robust_sweep``.
+    links AND the problem's persistent ``alive`` row/slot liveness (a
+    lifecycle-removed sensor neither updates nor is read, exactly as in the
+    masked serial engine), solved densely per sensor in the serial Table-1
+    ordering.  Kept as the single-field reference for asymmetric link
+    failures; SENSOR-level churn (the common case) goes through the batched
+    alive-masked colored path of ``robust_sweep``.
     """
     _require_single_field(problem, "robust_sweep_links")
     n = problem.n
     sentinel = problem.sentinel
     assert link_alive.shape[0] == n_sweeps
+    alive_row = problem.alive
+    alive_slot = problem.alive_z
 
     def body(carry, inp):
         s, alive_s = inp
         z, coef = carry
-        coef_new, z_new, mask = _dynamic_sensor_update(problem, z, coef[s], s, alive_s)
-        coef = coef.at[s].set(coef_new)
+        coef_new, z_new, mask = _dynamic_sensor_update(
+            problem, z, coef[s], s, alive_s, alive_row, alive_slot
+        )
+        coef = coef.at[s].set(jnp.where(alive_row[s], coef_new, coef[s]))
         scatter_idx = jnp.where(mask, problem.nbr_idx[s], sentinel)
         z = z.at[scatter_idx].set(jnp.where(mask, z_new, z[sentinel]))
         return (z, coef), None
@@ -1159,9 +1211,11 @@ def robust_sweep(
 # ---------------------------------------------------------------------------
 
 
-def _weighted_sensor_update(problem, z, coef_s, s, w_pad):
-    mask = problem.nbr_mask[s]
-    gram = problem.gram[s]
+def _weighted_sensor_update(problem, z, coef_s, s, w_pad, alive_row, alive_slot):
+    mask = (
+        problem.nbr_mask[s] & alive_slot[problem.nbr_idx[s]] & alive_row[s]
+    )
+    gram = jnp.where(mask[:, None] & mask[None, :], problem.gram[s], 0.0)
     lam = problem.lam_pad[s]
     w_nbr = jnp.where(mask, w_pad[problem.nbr_idx[s]], 0.0)
     diag = jnp.where(mask, lam, 1.0)
@@ -1170,7 +1224,7 @@ def _weighted_sensor_update(problem, z, coef_s, s, w_pad):
     rhs = jnp.where(mask, w_nbr * z_nbr + lam * coef_s, 0.0)
     coef_new = jnp.linalg.solve(a, rhs)
     z_new = gram @ coef_new
-    return coef_new, z_new
+    return coef_new, z_new, mask
 
 
 @partial(jax.jit, static_argnames=("n_sweeps",))
@@ -1183,7 +1237,10 @@ def weighted_sweep(
     """SN-Train under the reweighted norm (heteroscedastic measurements).
 
     weights == 1 reduces exactly to serial_sweep.  Fejér monotonicity holds
-    in the reweighted norm (see weighted_norm_sq_hetero)."""
+    in the reweighted norm (see weighted_norm_sq_hetero).  Liveness is
+    threaded exactly as in the serial engine: dead (removed) sensors
+    neither update nor are read as neighbors, and their messages persist
+    (tests/test_sn_train.py pins this to the masked serial engine)."""
     _require_single_field(problem, "weighted_sweep")
     n = problem.n
     sentinel = problem.sentinel
@@ -1194,13 +1251,17 @@ def weighted_sweep(
         ]
     )
     idxs = jnp.arange(n, dtype=jnp.int32)
+    alive_row = problem.alive
+    alive_slot = problem.alive_z
 
     def body(carry, s):
         z, coef = carry
-        coef_new, z_new = _weighted_sensor_update(problem, z, coef[s], s, w_pad)
-        coef = coef.at[s].set(coef_new)
-        scatter_idx = jnp.where(problem.nbr_mask[s], problem.nbr_idx[s], sentinel)
-        z = z.at[scatter_idx].set(jnp.where(problem.nbr_mask[s], z_new, z[sentinel]))
+        coef_new, z_new, mask = _weighted_sensor_update(
+            problem, z, coef[s], s, w_pad, alive_row, alive_slot
+        )
+        coef = coef.at[s].set(jnp.where(alive_row[s], coef_new, coef[s]))
+        scatter_idx = jnp.where(mask, problem.nbr_idx[s], sentinel)
+        z = z.at[scatter_idx].set(jnp.where(mask, z_new, z[sentinel]))
         return (z, coef), None
 
     def sweep(carry, _):

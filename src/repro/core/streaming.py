@@ -59,7 +59,7 @@ import jax.numpy as jnp
 import jax.scipy.linalg as jsl
 
 from . import plans
-from .sn_train import SNTrainProblem, SNTrainState, _masked_factors
+from .sn_train import SNTrainProblem, SNTrainState
 
 
 class AbsorbReceipt(NamedTuple):
@@ -76,10 +76,15 @@ class AbsorbReceipt(NamedTuple):
 
 
 def capacity_left(problem: SNTrainProblem) -> jnp.ndarray:
-    """(B, n) free neighborhood slots per (field, sensor)."""
+    """(B, n) free ABSORBABLE neighborhood slots per (field, sensor).
+
+    Free lanes retired to the sentinel id (a base-neighbor removal that had
+    no reserved id left to restore) back no message slot and do not count.
+    """
     if not problem.batched:
         raise ValueError("streaming requires a batched problem (use B = 1)")
-    return jnp.sum(~problem.nbr_mask[:, :-1, :], axis=-1)
+    absorbable = problem.nbr_idx[:-1] != problem.sentinel  # (n, D)
+    return jnp.sum(~problem.nbr_mask[:, :-1, :] & absorbable[None], axis=-1)
 
 
 def _absorb(
@@ -98,9 +103,11 @@ def _absorb(
     y = jnp.asarray(y, state.z.dtype)
 
     mask_s = problem.nbr_mask[field, sensor]  # (D,)
-    # A free slot must exist and the sensor must be ALIVE; else DROP.
-    ok = jnp.any(~mask_s) & problem.alive[sensor]
-    k = jnp.argmin(mask_s)  # first free slot (arrivals fill left-to-right)
+    # A free RESERVED slot must exist (sentinel-retired lanes back no
+    # message slot) and the sensor must be ALIVE; else DROP.
+    free = ~mask_s & (problem.nbr_idx[sensor] != problem.sentinel)
+    ok = jnp.any(free) & problem.alive[sensor]
+    k = jnp.argmax(free)  # first free slot (arrivals fill left-to-right)
     zid = problem.nbr_idx[sensor, k]  # fixed reserved message slot
     pos_s = problem.nbr_pos[field, sensor]  # (D, d)
     lam_s = problem.lam_pad[sensor]
@@ -167,7 +174,10 @@ def _absorb_evict(problem, state, field, sensor, x, y):
     """One fused program: evict the oldest arrival IF the sensor is full,
     then absorb — a single dispatch/copy per arrival, not two.  Returns
     ``(problem, state, absorbed, evicted)``."""
-    full = jnp.all(problem.nbr_mask[field, sensor])
+    full = jnp.all(
+        problem.nbr_mask[field, sensor]
+        | (problem.nbr_idx[sensor] == problem.sentinel)
+    )
     problem, state, ev = _evict_core(problem, state, field, sensor, full)
     problem, state, ok = _absorb(problem, state, field, sensor, x, y)
     return problem, state, ok, ev
@@ -459,7 +469,38 @@ def rebuild_chol(problem: SNTrainProblem) -> jnp.ndarray:
 # "Robustness" made persistent).  Siblings of absorb/evict_oldest: one
 # jitted program each, every operand traced, so an arbitrary churn trace
 # compiles a constant number of programs (tests/test_lifecycle.py counts).
+#
+# Joins are SYMMETRIC: the newcomer adopts its neighbors AND each adopter
+# grows a reciprocal anchor lane at the new position (with on-device
+# conflict-aware recoloring when two same-color adopters would now share
+# the newcomer's slot), so the post-join problem is the problem a fresh
+# make_problem on the post-join topology would build.  Removal is the
+# exact inverse (lane deletion + reserved-id restore).  Both events
+# gather, repair and refactorize only the O(degree) affected rows.
 # ---------------------------------------------------------------------------
+
+
+def _refactor_rows(problem, alive_new, rows, idx_rows, mask_rows, gram_rows):
+    """Masked Cholesky refactorization of O(degree) gathered rows.
+
+    THE shared effective-lane convention of both event repairs (the
+    row-gathered form of ``sn_train._masked_factors``): a lane is active
+    iff occupied AND its slot and row are alive; live diagonal entries get
+    lambda, everything else 1, so padded/dead blocks factor to identity.
+    ``rows`` (R,) sensor ids (sentinel-padded), ``idx_rows`` (R, D) their
+    post-event slot tables, ``mask_rows`` (B, R, D) occupancy,
+    ``gram_rows`` (B, R, D, D).  Returns the (B, R, D, D) lower factors.
+    """
+    lane_alive = (
+        plans.alive_slots(alive_new, problem.layout.slot_owner)[idx_rows]
+        & alive_new[rows][:, None]
+    )  # (R, D)
+    mask_eff = mask_rows & lane_alive[None]  # (B, R, D)
+    diag = jnp.where(mask_eff, problem.lam_pad[rows][None, :, None], 1.0)
+    outer = mask_eff[..., :, None] & mask_eff[..., None, :]
+    eye = jnp.eye(idx_rows.shape[-1], dtype=gram_rows.dtype)
+    a = jnp.where(outer, gram_rows, 0.0) + diag[..., None] * eye
+    return jax.vmap(jax.vmap(lambda m: jsl.cholesky(m, lower=True)))(a)
 
 
 def _add_sensor_core(problem, state, x, ys, lam):
@@ -467,32 +508,54 @@ def _add_sensor_core(problem, state, x, ys, lam):
     n_rows, d_max = problem.nbr_idx.shape
     dt = problem.nbr_pos.dtype
     lay = problem.layout
+    topo = problem.topology
     n_base = lay.n_base
+    b = problem.batch_size
     x = jnp.asarray(x, dt).reshape(-1)  # (d,)
     ys = jnp.asarray(ys, state.z.dtype).reshape(-1)  # (B,)
     lam = jnp.asarray(lam, problem.lam_pad.dtype)
 
     # 1. Claim the first dead SPARE row (spares carry reserved singleton
-    # colors, so a join never invalidates the frozen distance-2 coloring;
-    # removed spare rows are recycled).  No free spare => DROP the join.
+    # colors, so the NEWCOMER never invalidates the frozen distance-2
+    # coloring; removed spare rows are recycled).  No free spare => DROP.
     spare_alive = problem.alive[n_base:n]
-    ok = jnp.any(~spare_alive)
+    have_spare = jnp.any(~spare_alive)
     slot = jnp.int32(n_base) + jnp.argmin(spare_alive).astype(jnp.int32)
 
     # 2. Adopt the nearest live in-radius sensors (up to D-1 of them plus
     # self; a denser-than-capacity neighborhood truncates to the nearest).
-    pos = problem.topology.positions.astype(dt)  # (n, d)
+    # The join is SYMMETRIC: every adopted neighbor grows a reciprocal
+    # anchor lane at x, so candidates must have a lane to spare —
+    # capacity-exhausted rows are not adopted in either direction, keeping
+    # the realized edge set symmetric.
+    pos = topo.positions.astype(dt)  # (n, d)
     d2 = jnp.sum((pos - x[None, :]) ** 2, axis=-1)  # (n,)
-    radius = jnp.asarray(problem.topology.radius, dt)
-    cand = problem.alive[:n] & (d2 < radius * radius)
+    radius = jnp.asarray(topo.radius, dt)
+    cand = (
+        problem.alive[:n]
+        & (d2 < radius * radius)
+        & (topo.degrees < d_max)
+    )
     neg = jnp.where(cand, -d2, -jnp.inf)
     k_n = min(d_max - 1, n)  # static lane budget for adopted neighbors
     vals, ids = jax.lax.top_k(neg, k_n)  # nearest live first
-    valid = jnp.isfinite(vals)  # (k_n,)
-    c = 1 + jnp.sum(valid)  # occupied lane count (self included)
+    valid0 = jnp.isfinite(vals)  # (k_n,)
+    c = 1 + jnp.sum(valid0)  # occupied lane count (self included)
     lam = jnp.where(lam >= 0, lam, 0.01 / c.astype(lam.dtype) ** 2)
 
-    # 3. The row's new slot table: [self, adopted neighbor z-slots...],
+    # 3. Conflict-aware recoloring: adopters all gain the newcomer's slot
+    # as a shared neighbor, so same-color adopter pairs now violate the
+    # distance-2 rule — move all but the first of each color into empty
+    # reserved recolor classes.  Pool exhausted => DROP the join whole.
+    new_colors, moved, feasible = plans.resolve_join_conflicts(
+        problem.color_of, problem.color_mask, ids, valid0,
+        problem.recolor_start,
+    )
+    ok = have_spare & feasible
+    valid = valid0 & ok  # adopters actually repaired
+    mv = moved & valid  # adopters actually recolored
+
+    # 4. The newcomer's slot table: [self, adopted neighbor z-slots...],
     # free lanes restored from the pristine reserved ids (row recycling).
     pad_k = d_max - 1 - k_n
     sel_ids = jnp.concatenate(
@@ -500,7 +563,7 @@ def _add_sensor_core(problem, state, x, ys, lam):
          jnp.zeros((pad_k,), jnp.int32)]
     )
     sel_valid = jnp.concatenate(
-        [jnp.ones((1,), bool), valid, jnp.zeros((pad_k,), bool)]
+        [jnp.ones((1,), bool), valid0, jnp.zeros((pad_k,), bool)]
     )
     new_idx = jnp.where(sel_valid, sel_ids, lay.nbr_idx0[slot])
     pos2 = pos.at[slot].set(jnp.where(ok, x, pos[slot]))
@@ -508,7 +571,7 @@ def _add_sensor_core(problem, state, x, ys, lam):
     gathered = pos_pad[jnp.where(sel_valid, sel_ids, n)]
     new_pos = jnp.where(sel_valid[:, None], gathered, x[None, :])  # (D, d)
 
-    # 4. The joined sensor's local system + factor (shared by all fields —
+    # 5. The joined sensor's local system + factor (shared by all fields —
     # the row starts arrival-free).
     kmat = problem.kernel(new_pos, new_pos)  # (D, D)
     outer = sel_valid[:, None] & sel_valid[None, :]
@@ -516,64 +579,183 @@ def _add_sensor_core(problem, state, x, ys, lam):
     diag = jnp.where(sel_valid, lam, 1.0)
     chol_row = jsl.cholesky(gram_row + jnp.diag(diag), lower=True)
 
-    b = problem.batch_size
-    gate = lambda new, old: jnp.where(ok, new, old)
+    # 6. Reciprocal anchor lanes: each adopter's row grows a lane for the
+    # newcomer at its stream boundary ``deg`` (so structural/anchor lanes
+    # stay a contiguous prefix and absorb's left-to-right fill invariant
+    # survives); absorbed arrivals shift up one lane, the LAST reserved id
+    # falls out of the table (orphaned until a later lane deletion restores
+    # it), and a field whose row was completely full drops its NEWEST
+    # arrival.  O(degree) rows are gathered, repaired and refactored —
+    # never all n.
+    rows = jnp.where(valid, ids, n).astype(jnp.int32)  # (A,) pad: sentinel
+    deg_r = topo.degrees[jnp.clip(rows, 0, n - 1)]  # (A,) pre-join degrees
+    old_idx_r = problem.nbr_idx[rows]  # (A, D)
+    ar = jnp.arange(d_max)
+    at_new = ar[None, :] == deg_r[:, None]  # (A, D) the inserted lane
+    src = jnp.where(
+        ar[None, :] > deg_r[:, None], ar[None, :] - 1, ar[None, :]
+    )
+    shifted_idx = jnp.take_along_axis(old_idx_r, src, axis=1)
+    new_idx_r = jnp.where(at_new, slot, shifted_idx).astype(
+        problem.nbr_idx.dtype
+    )
+    orphan = old_idx_r[:, d_max - 1]  # (A,) reserved ids dropped
+
+    old_pos_r = problem.nbr_pos[:, rows]  # (B, A, D, d)
+    old_mask_r = problem.nbr_mask[:, rows]  # (B, A, D)
+    old_gram_r = problem.gram[:, rows]  # (B, A, D, D)
+    old_chol_r = problem.chol[:, rows]
+    old_coef_r = state.coef[:, rows]
+    pos_sh = jnp.take_along_axis(old_pos_r, src[None, :, :, None], axis=2)
+    new_pos_r = jnp.where(
+        at_new[None, :, :, None], x[None, None, None, :], pos_sh
+    )
+    mask_sh = jnp.take_along_axis(old_mask_r, src[None], axis=2)
+    new_mask_r = jnp.where(at_new[None], True, mask_sh)
+    coef_sh = jnp.take_along_axis(old_coef_r, src[None], axis=2)
+    new_coef_r = jnp.where(at_new[None], 0.0, coef_sh)
+    g1 = jnp.take_along_axis(old_gram_r, src[None, :, :, None], axis=2)
+    g2 = jnp.take_along_axis(g1, src[None, :, None, :], axis=3)
+    # the anchor's kernel row vs the row's occupied lanes (K(x,x) at deg)
+    kv = problem.kernel(x[None, :], new_pos_r.reshape(-1, x.shape[0]))[0]
+    kv = kv.reshape(new_pos_r.shape[:-1])  # (B, A, D)
+    krow = jnp.where(new_mask_r, kv, 0.0).astype(problem.gram.dtype)
+    g3 = jnp.where(at_new[None, :, None, :], krow[..., None], g2)
+    g3 = jnp.where(at_new[None, :, :, None], krow[..., None, :], g3)
+
+    # Affected-row refactorization (the adopters' factors gain a middle
+    # row, so the rank-1 grow-one update does not apply): one batched
+    # (B, A) masked Cholesky over the post-join effective lanes.
+    alive2 = problem.alive.at[slot].set(
+        jnp.where(ok, True, problem.alive[slot])
+    )
+    chol_r = _refactor_rows(problem, alive2, rows, new_idx_r, new_mask_r, g3)
+
+    vB = valid[None, :, None]
     topo = dataclasses.replace(
-        problem.topology,
-        positions=pos2.astype(problem.topology.positions.dtype),
-        degrees=problem.topology.degrees.at[slot].set(
-            gate(c.astype(problem.topology.degrees.dtype),
-                 problem.topology.degrees[slot])
+        topo,
+        positions=pos2.astype(topo.positions.dtype),
+        degrees=topo.degrees.at[rows].add(
+            jnp.where(valid, 1, 0).astype(topo.degrees.dtype)
+        ).at[slot].set(
+            jnp.where(
+                ok,
+                c.astype(topo.degrees.dtype),
+                topo.degrees[slot],
+            )
         ),
     )
+    gate = lambda new, old: jnp.where(ok, new, old)
+    nbr_idx2 = problem.nbr_idx.at[rows].set(
+        jnp.where(valid[:, None], new_idx_r, old_idx_r)
+    ).at[slot].set(gate(new_idx, problem.nbr_idx[slot]))
+    nbr_mask2 = problem.nbr_mask.at[:, rows].set(
+        jnp.where(vB, new_mask_r, old_mask_r)
+    ).at[:, slot].set(
+        gate(
+            jnp.broadcast_to(sel_valid, (b, d_max)),
+            problem.nbr_mask[:, slot],
+        )
+    )
+    nbr_pos2 = problem.nbr_pos.at[:, rows].set(
+        jnp.where(vB[..., None], new_pos_r, old_pos_r)
+    ).at[:, slot].set(
+        gate(
+            jnp.broadcast_to(new_pos, (b,) + new_pos.shape),
+            problem.nbr_pos[:, slot],
+        )
+    )
+    gram2 = problem.gram.at[:, rows].set(
+        jnp.where(vB[..., None], g3, old_gram_r)
+    ).at[:, slot].set(
+        gate(
+            jnp.broadcast_to(gram_row, (b,) + gram_row.shape),
+            problem.gram[:, slot],
+        )
+    )
+    chol2 = problem.chol.at[:, rows].set(
+        jnp.where(vB[..., None], chol_r, old_chol_r)
+    ).at[:, slot].set(
+        gate(
+            jnp.broadcast_to(chol_row, (b,) + chol_row.shape),
+            problem.chol[:, slot],
+        )
+    )
+
+    # 7. Color bookkeeping: recolored adopters change classes, the
+    # newcomer (re)enters its reserved singleton class, and every repaired
+    # row's scatter codes are rewritten for its post-join slot table.
+    old_c = problem.color_of[rows]
+    old_m = problem.member_pos[rows]
+    cm, cmk = plans.members_clear(
+        problem.color_members, problem.color_mask, old_c, old_m, mv, n
+    )
+    cm, cmk = plans.members_set(
+        cm, cmk, new_colors, jnp.zeros_like(new_colors), rows, mv
+    )
+    cm, cmk = plans.members_set(
+        cm, cmk, problem.color_of[slot][None],
+        jnp.zeros((1,), jnp.int32), slot[None], jnp.asarray(ok)[None],
+    )
+    color_of2 = problem.color_of.at[rows].set(jnp.where(mv, new_colors, old_c))
+    member_pos2 = problem.member_pos.at[rows].set(
+        jnp.where(mv, 0, old_m).astype(problem.member_pos.dtype)
+    )
+    new_c_eff = jnp.where(mv, new_colors, old_c)
+    new_m_eff = jnp.where(mv, 0, old_m).astype(old_m.dtype)
+    plan_z, plan_coef = plans.plan_rows_remove(
+        problem.plan_z, problem.plan_coef, old_c, rows, old_idx_r, valid
+    )
+    plan_z, plan_coef = plans.plan_rows_add(
+        plan_z, plan_coef, new_c_eff, new_m_eff, rows, new_idx_r, valid
+    )
+    plan_z, plan_coef = plans.color_plans_add(
+        plan_z, plan_coef, color_of2, member_pos2, slot, new_idx, ok
+    )
+
+    # 8. Orphaned reserved slots: their messages / arrival positions reset
+    # (a full field's dropped newest arrival dies with its slot).
+    s_cap = problem.n_stream
+    z = state.z.at[:, orphan].set(
+        jnp.where(valid[None, :], 0.0, state.z[:, orphan])
+    )
+    spv = jnp.pad(problem.stream_pos, ((0, 0), (0, 1), (0, 0)))
+    sp_idx = jnp.where(valid, jnp.clip(orphan - n, 0, s_cap), s_cap)
+    spv = spv.at[:, sp_idx].set(
+        jnp.where(valid[None, :, None], 0.0, spv[:, sp_idx])
+    )
+    stream_pos2 = spv[:, :s_cap]
+
     problem = dataclasses.replace(
         problem,
         topology=topo,
         y=problem.y.at[:, slot].set(gate(ys, problem.y[:, slot])),
-        nbr_idx=problem.nbr_idx.at[slot].set(
-            gate(new_idx, problem.nbr_idx[slot])
-        ),
-        nbr_mask=problem.nbr_mask.at[:, slot].set(
-            gate(
-                jnp.broadcast_to(sel_valid, (b, d_max)),
-                problem.nbr_mask[:, slot],
-            )
-        ),
-        nbr_pos=problem.nbr_pos.at[:, slot].set(
-            gate(
-                jnp.broadcast_to(new_pos, (b,) + new_pos.shape),
-                problem.nbr_pos[:, slot],
-            )
-        ),
-        gram=problem.gram.at[:, slot].set(
-            gate(
-                jnp.broadcast_to(gram_row, (b,) + gram_row.shape),
-                problem.gram[:, slot],
-            )
-        ),
-        chol=problem.chol.at[:, slot].set(
-            gate(
-                jnp.broadcast_to(chol_row, (b,) + chol_row.shape),
-                problem.chol[:, slot],
-            )
-        ),
+        nbr_idx=nbr_idx2,
+        nbr_mask=nbr_mask2,
+        nbr_pos=nbr_pos2,
+        gram=gram2,
+        chol=chol2,
         lam_pad=problem.lam_pad.at[slot].set(gate(lam, problem.lam_pad[slot])),
-        alive=problem.alive.at[slot].set(gate(True, problem.alive[slot])),
+        stream_pos=stream_pos2,
+        plan_z=plan_z,
+        plan_coef=plan_coef,
+        color_members=cm,
+        color_mask=cmk,
+        color_of=color_of2,
+        member_pos=member_pos2,
+        alive=alive2,
     )
-    plan_z, plan_coef = plans.color_plans_add(
-        problem.plan_z, problem.plan_coef, lay.color_of, lay.member_pos,
-        slot, new_idx, ok,
-    )
-    problem = dataclasses.replace(problem, plan_z=plan_z, plan_coef=plan_coef)
 
-    # 5. State: the recycled row's owned slots reset, the new sensor seeds
-    # its own message slot with its measurements (Table-1 init z_0 = y).
+    # 9. State: the recycled row's owned slots reset, the new sensor seeds
+    # its own message slot with its measurements (Table-1 init z_0 = y);
+    # the adopters' shifted coefficient rows (0 at the new anchor lane)
+    # were computed above.
     owned = (lay.slot_owner == slot) & ok  # (n_z,)
-    z = jnp.where(owned[None, :], 0.0, state.z)
+    z = jnp.where(owned[None, :], 0.0, z)
     z = z.at[:, slot].set(jnp.where(ok, ys, z[:, slot]))
-    coef = state.coef.at[:, slot].set(
-        jnp.where(ok, 0.0, state.coef[:, slot])
-    )
+    coef = state.coef.at[:, rows].set(
+        jnp.where(vB, new_coef_r, old_coef_r)
+    ).at[:, slot].set(jnp.where(ok, 0.0, state.coef[:, slot]))
     return problem, SNTrainState(z=z, coef=coef), slot, ok
 
 
@@ -599,27 +781,45 @@ def add_sensor(
         neighborhood (their message slots become its lanes; free lanes keep
         the row's reserved streaming ids, so the joined sensor absorbs
         arrivals like any other);
-      * builds its masked local Gram and Cholesky factor (one (D, D)
-        factorization, shared across fields);
-      * patches its reserved singleton color's scatter plans
-        (``plans.color_plans_add``) so the colored engines sweep it with
-        zero recompilation;
+      * SYMMETRICALLY, every adopted neighbor grows a reciprocal anchor
+        lane at ``x`` (inserted at its stream boundary; absorbed arrivals
+        shift up one lane and its last reserved slot is orphaned until a
+        later removal restores it) — exactly the bidirectional
+        neighborhood coupling a from-scratch ``make_problem`` on the
+        post-join topology would build, so post-join fits match a fresh
+        build (tests/test_lifecycle.py pins the repaired scatter plans
+        BITWISE against the host builder and the fit to <= 1e-5);
+      * resolves the distance-2 conflicts the reciprocal lanes create
+        (same-color adopters now share the newcomer's slot) by moving all
+        but one adopter per color into reserved empty recolor classes
+        (``plans.resolve_join_conflicts``; budget: ``build_topology(...,
+        n_recolor=)``, default 2x the spare rows) — an exhausted pool
+        DROPS the join rather than corrupting the coloring;
+      * builds the newcomer's masked local Gram/Cholesky (one (D, D)
+        factorization, shared across fields) and refactorizes the O(degree)
+        ADOPTER rows only — one batched (B, degree) masked Cholesky, never
+        all n rows;
+      * patches the scatter plans of the newcomer AND every repaired
+        adopter row so the colored engines sweep the post-join network
+        with zero recompilation;
       * seeds its message slot with ``ys`` (the Table-1 init) and flips
         ``alive``.
 
-    The join is ONE-DIRECTIONAL: the newcomer reads and writes its
-    neighbors' message slots (information flows both ways through the
-    shared slots — its singleton color makes the writes conflict-free),
-    but existing sensors' representers do not grow an anchor at ``x``.
     Every constraint set stays a subspace containing 0, so Fejér
     monotonicity of the weighted norm survives the event
-    (tests/test_lifecycle.py).
+    (tests/test_lifecycle.py).  Capacity caveats: candidates whose rows
+    have no free lane (``degrees == d_max``) are not adopted in either
+    direction (build with d_max headroom), and a field whose adopter row
+    is completely full drops its NEWEST absorbed arrival to make room for
+    the anchor lane.
 
     ``lam``: the newcomer's regularizer; negative (default) applies the
-    paper's 0.01/|N|^2 rule to its adopted degree.  Returns
-    ``(problem, state, slot, joined)``; ``joined`` is False (no-op) when no
-    spare row is free — size capacity with ``n_max``.  A serving process
-    also patches its query plan: ``serving.plan_add_sensor(plan, x, slot)``.
+    paper's 0.01/|N|^2 rule to its adopted degree (adopters keep their
+    build-time regularizers).  Returns ``(problem, state, slot, joined)``;
+    ``joined`` is False (bitwise no-op) when no spare row is free or the
+    recolor pool is exhausted — size capacity with ``n_max``/``n_recolor``.
+    A serving process also patches its query plan:
+    ``serving.plan_add_sensor(plan, x, slot)``.
 
     ``donate=True`` has the ``absorb`` contract (rebind, drop the old
     buffers).
@@ -642,74 +842,161 @@ def add_sensor(
 
 def _remove_sensor_core(problem, state, slot):
     n = problem.n
+    n_rows, d_max = problem.nbr_idx.shape
+    dt = problem.nbr_pos.dtype
     lay = problem.layout
+    topo = problem.topology
     slot = jnp.asarray(slot, jnp.int32)
     ok = (slot >= 0) & (slot < n) & problem.alive[slot]
+    sl = jnp.clip(slot, 0, n - 1)  # safe READ index; writes are ok-gated
 
-    alive = problem.alive.at[slot].set(
-        jnp.where(ok, False, problem.alive[slot])
+    alive = problem.alive.at[sl].set(
+        jnp.where(ok, False, problem.alive[sl])
     )
-    # Every lane that referenced the sensor (its neighbors' rows + its own
-    # row) drops out of the local systems: zero the Gram rows/cols and the
-    # stale coefficients there, keep the OCCUPANCY mask (the lane is not
-    # free streaming capacity — ``alive`` gates it everywhere).  Other
-    # rows' referencing lanes are RETIRED for good — rewritten to the
-    # sentinel slot, which belongs to the permanently dead sentinel row —
-    # so recycling this row for a future join cannot resurrect them.
-    rows = jnp.arange(n + 1, dtype=jnp.int32)
-    hit = (problem.nbr_idx == slot) & ok
-    lane_kill = (hit | (rows[:, None] == slot)) & ok
-    retire = hit & (rows[:, None] != slot)
-    sentinel_id = jnp.asarray(problem.sentinel, problem.nbr_idx.dtype)
-    nbr_idx = jnp.where(retire, sentinel_id, problem.nbr_idx)
-    keep = ~lane_kill  # (n+1, D)
-    outer_keep = keep[:, :, None] & keep[:, None, :]
-    gram = jnp.where(outer_keep[None], problem.gram, 0.0)
-    coef = jnp.where(lane_kill[None], 0.0, state.coef)
 
-    # Downdate the AFFECTED rows' factors by a masked rebuild against the
-    # effective (occupied & alive) mask — one fused batched factorization
-    # (the shared ``sn_train._masked_factors`` convention; the extra Gram
-    # masking it applies is idempotent on the pre-zeroed ``gram``), selected
-    # back onto the affected rows only (untouched rows keep their grow-one
-    # float history bit-for-bit).
-    affected = lane_kill.any(axis=-1)  # (n+1,)
-    patched = dataclasses.replace(problem, nbr_idx=nbr_idx, alive=alive)
-    _, chol_new = _masked_factors(patched, problem.nbr_mask, gram, alive)
-    chol = jnp.where(affected[None, :, None, None], chol_new, problem.chol)
+    # Affected rows: joins are SYMMETRIC, so the rows referencing the
+    # victim are exactly the live sensors its own slot table lists — a
+    # static (D,)-padded gather, O(degree) rows repaired, never all n.
+    victim_idx = problem.nbr_idx[sl]  # (D,)
+    nb = (
+        (victim_idx < n) & (victim_idx != sl)
+        & problem.alive[jnp.clip(victim_idx, 0, n)] & ok
+    )
+    rows = jnp.where(nb, victim_idx, n).astype(jnp.int32)  # pad: sentinel
+
+    # Each affected row DELETES its lane for the victim (the inverse of the
+    # join's insertion): lanes above it shift down one — preserving the
+    # [structural | arrivals | free] layout and absorb's fill invariant —
+    # and the freed last lane restores the row's first orphaned reserved
+    # id (none left => the lane is retired to the sentinel id and backs no
+    # message slot; ``absorb`` skips such lanes).
+    old_idx_r = problem.nbr_idx[rows]  # (R, D)
+    lane = jnp.argmax(old_idx_r == sl, axis=1)  # (R,) the victim's lane
+    ar = jnp.arange(d_max)
+    src = jnp.where(
+        ar[None, :] >= lane[:, None],
+        jnp.minimum(ar[None, :] + 1, d_max - 1),
+        ar[None, :],
+    )
+    shifted = jnp.take_along_axis(old_idx_r, src, axis=1)
+    ids0 = lay.nbr_idx0[rows]  # (R, D) pristine table: the reserved pool
+    owned0 = ids0 >= n
+    present = (
+        ids0[:, :, None] == shifted[:, None, : d_max - 1]
+    ).any(-1)  # (R, D)
+    cand_rest = owned0 & ~present
+    pick = jnp.argmax(cand_rest, axis=1)
+    restored = jnp.take_along_axis(ids0, pick[:, None], axis=1)[:, 0]
+    sentinel_id = jnp.asarray(problem.sentinel, problem.nbr_idx.dtype)
+    restored = jnp.where(cand_rest.any(axis=1), restored, sentinel_id)
+    new_idx_r = shifted.at[:, d_max - 1].set(
+        restored.astype(shifted.dtype)
+    )
+    freed = ar[None, :] == d_max - 1  # (1, D) uniform freed lane
+
+    old_pos_r = problem.nbr_pos[:, rows]  # (B, R, D, d)
+    old_mask_r = problem.nbr_mask[:, rows]
+    old_gram_r = problem.gram[:, rows]
+    old_chol_r = problem.chol[:, rows]
+    old_coef_r = state.coef[:, rows]
+    pos_sh = jnp.take_along_axis(old_pos_r, src[None, :, :, None], axis=2)
+    own_pos = topo.positions[jnp.clip(rows, 0, n - 1)].astype(dt)  # (R, d)
+    new_pos_r = jnp.where(
+        freed[None, :, :, None], own_pos[None, :, None, :], pos_sh
+    )
+    mask_sh = jnp.take_along_axis(old_mask_r, src[None], axis=2)
+    new_mask_r = jnp.where(freed[None], False, mask_sh)
+    coef_sh = jnp.take_along_axis(old_coef_r, src[None], axis=2)
+    new_coef_r = jnp.where(freed[None], 0.0, coef_sh)
+    g1 = jnp.take_along_axis(old_gram_r, src[None, :, :, None], axis=2)
+    g2 = jnp.take_along_axis(g1, src[None, :, None, :], axis=3)
+    g3 = jnp.where(
+        freed[None, :, :, None] | freed[None, :, None, :], 0.0, g2
+    )
+
+    # O(degree) masked refactorization of the affected rows only (the
+    # deleted lane sits mid-factor, so no rank-1 downdate applies); the
+    # victim's own factor resets to the identity a masked rebuild of a
+    # fully-dead row produces.
+    chol_r = _refactor_rows(problem, alive, rows, new_idx_r, new_mask_r, g3)
+    eye = jnp.eye(d_max, dtype=g3.dtype)
+
+    nbB = nb[None, :, None]
+    # The victim's own row resets to the pristine slot table with cleared
+    # occupancy: a dead row references nothing (its mask gates every
+    # consumer), and a recycled spare restores bitwise to its build state.
+    nbr_idx2 = problem.nbr_idx.at[rows].set(
+        jnp.where(nb[:, None], new_idx_r, old_idx_r)
+    ).at[sl].set(jnp.where(ok, lay.nbr_idx0[sl], problem.nbr_idx[sl]))
+    nbr_pos2 = problem.nbr_pos.at[:, rows].set(
+        jnp.where(nbB[..., None], new_pos_r, old_pos_r)
+    )
+    nbr_mask2 = problem.nbr_mask.at[:, rows].set(
+        jnp.where(nbB, new_mask_r, old_mask_r)
+    ).at[:, sl].set(jnp.where(ok, False, problem.nbr_mask[:, sl]))
+    gram2 = problem.gram.at[:, rows].set(
+        jnp.where(nbB[..., None], g3, old_gram_r)
+    ).at[:, sl].set(jnp.where(ok, 0.0, problem.gram[:, sl]))
+    chol2 = problem.chol.at[:, rows].set(
+        jnp.where(nbB[..., None], chol_r, old_chol_r)
+    ).at[:, sl].set(jnp.where(ok, eye, problem.chol[:, sl]))
+    coef2 = state.coef.at[:, rows].set(
+        jnp.where(nbB, new_coef_r, old_coef_r)
+    ).at[:, sl].set(jnp.where(ok, 0.0, state.coef[:, sl]))
+    deg2 = topo.degrees.at[rows].add(
+        jnp.where(nb, -1, 0).astype(topo.degrees.dtype)
+    ).at[sl].set(
+        jnp.where(ok, 0, topo.degrees[sl]).astype(topo.degrees.dtype)
+    )
 
     # The departed sensor's messages (own slot + its absorbed arrivals) and
     # stream positions reset to the unoccupied convention.
-    owned = (lay.slot_owner == slot) & ok  # (n_z,)
+    owned = (lay.slot_owner == sl) & ok  # (n_z,)
     z = jnp.where(owned[None, :], 0.0, state.z)
     sp_owned = owned[n:-1]  # (S,)
     stream_pos = jnp.where(
         sp_owned[None, :, None], 0.0, problem.stream_pos
     )
 
+    # Scatter-plan + color bookkeeping: every affected row's codes are
+    # rewritten for its post-removal slot table (distinct colors — two
+    # same-color rows sharing the victim would violate the distance-2
+    # coloring), the victim's own codes revert to "keep", and its class
+    # membership clears (freeing its recolor class, if it sat in one, for
+    # a later join's conflict repair).
+    c_r = problem.color_of[rows]
+    m_r = problem.member_pos[rows]
+    plan_z, plan_coef = plans.plan_rows_remove(
+        problem.plan_z, problem.plan_coef, c_r, rows, old_idx_r, nb
+    )
+    plan_z, plan_coef = plans.plan_rows_add(
+        plan_z, plan_coef, c_r, m_r, rows, new_idx_r, nb
+    )
     plan_z, plan_coef = plans.color_plans_remove(
-        problem.plan_z, problem.plan_coef, lay.color_of, slot,
-        nbr_idx[slot], ok,
+        plan_z, plan_coef, problem.color_of, sl, victim_idx, ok
     )
-    # The retired lanes' scatter codes live in OTHER colors and target the
-    # departed sensor's z slot; only it and its (now retired) neighbors
-    # ever write that slot, so reverting the whole plan column to "keep"
-    # retires those codes in one write — a recycled row's fresh messages
-    # can never be clobbered by a stale plan entry.
-    plan_z = plan_z.at[:, slot].set(
-        jnp.where(ok, slot.astype(plan_z.dtype), plan_z[:, slot])
+    cm, cmk = plans.members_clear(
+        problem.color_members, problem.color_mask,
+        problem.color_of[sl][None], problem.member_pos[sl][None],
+        jnp.asarray(ok)[None], n,
     )
+
     problem = dataclasses.replace(
         problem,
-        nbr_idx=nbr_idx,
-        gram=gram,
-        chol=chol,
+        topology=dataclasses.replace(topo, degrees=deg2),
+        nbr_idx=nbr_idx2,
+        nbr_pos=nbr_pos2,
+        nbr_mask=nbr_mask2,
+        gram=gram2,
+        chol=chol2,
         stream_pos=stream_pos,
         alive=alive,
         plan_z=plan_z,
         plan_coef=plan_coef,
+        color_members=cm,
+        color_mask=cmk,
     )
-    return problem, SNTrainState(z=z, coef=coef), ok
+    return problem, SNTrainState(z=z, coef=coef2), ok
 
 
 _remove_sensor_copy = jax.jit(_remove_sensor_core)
@@ -725,22 +1012,28 @@ def remove_sensor(
 ) -> tuple[SNTrainProblem, SNTrainState, jax.Array]:
     """A sensor LEAVES the network (mote death, battery, redeployment).
 
-    Entirely on device at fixed shapes: flips ``alive`` (which also kills
-    the sensor's reserved streaming slots via the slot-owner map), zeroes
-    the Gram rows/columns and stale coefficients of every lane that
-    referenced it, downdates the affected neighbors' Cholesky factors by a
-    masked rebuild (one fused batched pass, selected onto the O(degree)
-    affected rows), reverts its color's scatter-plan codes to "keep"
-    (``plans.color_plans_remove``) and resets its messages.  Neighbor
-    OCCUPANCY is preserved — a dead lane is not streaming capacity — so
-    ``absorb``'s left-to-right fill invariant survives.
+    The exact inverse of the symmetric join, entirely on device at fixed
+    shapes and O(degree) work: flips ``alive`` (which also kills the
+    sensor's reserved streaming slots via the slot-owner map), then — for
+    exactly the rows the victim's own slot table lists (symmetry makes
+    that the complete set of referencing rows, a static (D,)-padded
+    gather) — DELETES each row's lane for the victim: lanes above it shift
+    down one (arrivals stay contiguous, so ``absorb``'s fill invariant
+    survives), the freed last lane restores the row's first orphaned
+    reserved id (or retires to the inert sentinel id when none is left),
+    and the O(degree) affected factors are refactorized in one batched
+    masked Cholesky — never all n rows.  Scatter-plan codes of every
+    repaired row are rewritten, the victim's own codes revert to "keep",
+    its class membership clears (freeing its recolor class for later
+    joins) and its messages reset.
 
     Works on any live row.  Removed SPARE rows are recycled by the next
     ``add_sensor``; removed base rows stay reserved for their original
-    sensor (their static color/slot assignments are position-bound).
-    Returns ``(problem, state, removed)``; removing a dead/out-of-range
-    slot is a no-op with ``removed`` False.  A serving process also
-    patches its query plan: ``serving.plan_remove_sensor(plan, slot)``.
+    sensor (their reserved slot ids are position-bound).  Returns
+    ``(problem, state, removed)``; removing a dead/out-of-range slot is a
+    BITWISE no-op with ``removed`` False (state, plans and serving
+    candidates untouched — tests/test_lifecycle.py).  A serving process
+    also patches its query plan: ``serving.plan_remove_sensor(plan, slot)``.
 
     ``donate=True`` has the ``absorb`` contract (rebind, drop the old
     buffers).

@@ -53,15 +53,21 @@ class SensorTopology:
         structural lane count — the boundary between neighbor lanes and
         reserved streaming lanes (patched for joined spare rows).
       colors: (n,) int32 distance-2 greedy coloring (spares: singletons).
-      n_colors: static int (includes the spare-color budget).
-      color_members: (n_colors, M) int32 members per color, padded with n
-        (one-past-the-end sentinel; callers scatter into an (n+1,) buffer).
+      n_colors: static int (includes the spare- and recolor-class budgets).
+      color_members: (n_colors, M) int32 BUILD-TIME members per color,
+        padded with n (one-past-the-end sentinel; callers scatter into an
+        (n+1,) buffer).  The runtime assignment is mutable
+        ``SNTrainProblem`` state (symmetric joins recolor adopters); this
+        table seeds it.
       color_mask: (n_colors, M) bool.
       n_base: static int — build-time sensor count; rows [n_base, n) are
         spare join capacity.
       radius: static float — the geometric connection radius (0.0 for
         non-geometric builds such as ``ring_topology``, which then cannot
         accept joins).
+      n_recolor: static int — reserved EMPTY recolor classes (the last
+        ``n_recolor`` rows of the member tables) symmetric joins move
+        conflicting adopters into.
     """
 
     positions: jnp.ndarray
@@ -75,6 +81,7 @@ class SensorTopology:
     color_mask: jnp.ndarray
     n_base: int = dataclasses.field(default=-1, metadata=dict(static=True))
     radius: float = dataclasses.field(default=0.0, metadata=dict(static=True))
+    n_recolor: int = dataclasses.field(default=0, metadata=dict(static=True))
 
     @property
     def n(self) -> int:
@@ -125,10 +132,17 @@ def _assemble(
     d_max: int | None,
     n_spare: int,
     radius: float,
+    n_recolor: int | None = None,
 ) -> SensorTopology:
     """Shared constructor over the plan-layer padded representations."""
     n_base = adj.shape[0]
     n = n_base + n_spare
+    if n_recolor is None:
+        # Default recolor budget: each join can displace at most a handful
+        # of same-color adopters, classes recycle on removal, and any
+        # sensor moves at most once — 2 classes per spare row covers the
+        # traces the benches and tests replay (size explicitly for more).
+        n_recolor = 2 * n_spare
     if n_spare:
         # Spare rows: parked far away at distinct points, isolated in the
         # graph (no self loop either — degree 0 means every lane of theirs
@@ -142,7 +156,7 @@ def _assemble(
         adj_full = adj
     nbr_idx, nbr_mask, degrees = plans.padded_neighborhoods(adj_full, d_max)
     colors, n_colors, color_members, color_mask = plans.color_classes(
-        adj, greedy_coloring, n_spare=n_spare
+        adj, greedy_coloring, n_spare=n_spare, n_recolor=n_recolor
     )
     return SensorTopology(
         positions=jnp.asarray(pos),
@@ -156,6 +170,7 @@ def _assemble(
         color_mask=jnp.asarray(color_mask),
         n_base=n_base,
         radius=float(radius),
+        n_recolor=int(n_recolor),
     )
 
 
@@ -165,13 +180,18 @@ def build_topology(
     *,
     d_max: int | None = None,
     n_max: int | None = None,
+    n_recolor: int | None = None,
 ) -> SensorTopology:
     """Build the frozen topology for a geometric sensor graph.
 
     d_max: pad neighborhoods wider than the max degree — the headroom backs
-    both streaming-arrival capacity and the lanes a joined sensor adopts.
+    streaming-arrival capacity, the lanes a joined sensor adopts AND the
+    anchor lane each adopting neighbor grows back (symmetric joins).
     n_max: total row capacity; ``n_max - len(positions)`` spare rows (with
     reserved singleton colors) accept runtime joins.
+    n_recolor: reserved empty recolor classes for the symmetric-join
+    conflict repair (default ``2 * n_spare``; see
+    ``plans.resolve_join_conflicts``).
     """
     pos = np.asarray(positions, dtype=np.float32)
     if pos.ndim == 1:
@@ -181,10 +201,12 @@ def build_topology(
     if n_spare < 0:
         raise ValueError(f"n_max={n_max} < n={n}")
     adj = geometric_adjacency(pos, radius)
-    return _assemble(pos, adj, d_max, n_spare, radius)
+    return _assemble(pos, adj, d_max, n_spare, radius, n_recolor)
 
 
-def pad_topology(topology: SensorTopology, n_max: int) -> SensorTopology:
+def pad_topology(
+    topology: SensorTopology, n_max: int, n_recolor: int | None = None
+) -> SensorTopology:
     """Re-pad an existing topology to ``n_max`` rows of join capacity.
 
     Host-side convenience used by ``make_problem(..., n_max=...)``; the
@@ -195,11 +217,13 @@ def pad_topology(topology: SensorTopology, n_max: int) -> SensorTopology:
     n_spare = int(n_max) - topology.n
     if n_spare < 0:
         raise ValueError(f"n_max={n_max} < n={topology.n}")
-    if n_spare == 0:
+    if n_spare == 0 and not n_recolor:
         return topology
     pos = np.asarray(topology.positions)
     adj = np.asarray(topology.adj)
-    return _assemble(pos, adj, topology.d_max, n_spare, topology.radius)
+    return _assemble(
+        pos, adj, topology.d_max, n_spare, topology.radius, n_recolor
+    )
 
 
 def uniform_sensors(

@@ -63,14 +63,23 @@ def _knn_fuse_kernel(
     cols = jax.lax.broadcasted_iota(jnp.int32, (bq, kmax), 1)
 
     acc = jnp.zeros((bq,), xq.dtype)
+    cnt = jnp.zeros((bq,), jnp.int32)
     for _ in range(k):  # masked selection network, k unrolled steps
         best = jnp.argmin(d2, axis=1)  # (BQ,) first-min == lowest id
+        # Fewer than k live candidates: the overflow picks +inf entries —
+        # count only VALID selections so the average matches the dense
+        # oracle's live-only mean (all-dead cells predict exactly 0).
+        ok = jnp.isfinite(
+            jnp.take_along_axis(d2, best[:, None], axis=1)[:, 0]
+        )
         sel = jnp.take_along_axis(cand, best[:, None], axis=1)[:, 0]
         d2 = jnp.where(cols == best[:, None], inf, d2)  # disable selected
         cf = jnp.where(nmask[sel] != 0, coef[sel], 0.0)  # (BQ, D)
         dd = jnp.sum((xq[:, None, :] - npos[sel]) ** 2, axis=-1)  # (BQ, D)
-        acc += jnp.sum(jnp.exp(-gamma * dd) * cf, axis=-1)
-    out_ref[0, :] = acc / k
+        f = jnp.sum(jnp.exp(-gamma * dd) * cf, axis=-1)
+        acc += jnp.where(ok, f, 0.0)
+        cnt += ok.astype(jnp.int32)
+    out_ref[0, :] = acc / jnp.maximum(cnt, 1).astype(xq.dtype)
 
 
 @functools.partial(

@@ -16,11 +16,14 @@ Two workloads:
                        (``core.serving.make_serving_plan``) with
                        ``--engine {plan,pallas,dense}``.
                        ``--churn N`` additionally replays a membership churn
-                       trace (sensor joins/leaves via ``streaming.add_sensor``
-                       / ``remove_sensor``) interleaved with arrival windows,
-                       refresh sweeps and query rounds — all at the fixed
-                       ``n_max`` capacity, so the whole trace compiles a
-                       constant number of programs (the report prints the
+                       trace (SYMMETRIC sensor joins/leaves via
+                       ``streaming.add_sensor`` / ``remove_sensor``: adopters
+                       grow reciprocal anchor lanes, conflicting adopters are
+                       recolored on device, and every event repairs only the
+                       O(degree) affected rows) interleaved with arrival
+                       windows, refresh sweeps and query rounds — all at the
+                       fixed ``n_max`` capacity, so the whole trace compiles
+                       a constant number of programs (the report prints the
                        jit-cache growth after warmup; it should be 0).
 
 Examples:
@@ -113,9 +116,10 @@ def serve_fields(args):
 
     topo = build_topology(pos, args.radius)
     if args.stream or args.churn:
-        # headroom: streaming arrivals occupy free neighborhood slots (and
-        # joining sensors adopt them)
-        per_sensor = -(-max(args.stream, 1) // n) + 4
+        # headroom: streaming arrivals occupy free neighborhood slots,
+        # joining sensors adopt them, and (symmetric joins) every adopting
+        # neighbor spends one lane on its reciprocal anchor
+        per_sensor = -(-max(args.stream, 1) // n) + 4 + (2 if args.churn else 0)
         deg_max = int(np.asarray(topo.degrees).max()) + per_sensor
         topo = build_topology(pos, args.radius, d_max=deg_max)
     n_max = n + args.spares if args.churn else None
@@ -205,7 +209,7 @@ def serve_fields(args):
     if args.churn:
         from repro.core import add_sensor, remove_sensor
         from repro.core.serving import (
-            knn_select, plan_add_sensor, plan_remove_sensor,
+            knn_select_valid, plan_add_sensor, plan_remove_sensor,
         )
 
         # Slack >= the worst-case removals keeps the repaired query plan's
@@ -267,7 +271,8 @@ def serve_fields(args):
             streaming._add_sensor_donate, streaming._remove_sensor_donate,
             streaming._absorb_many_evict_donate if args.on_full == "evict"
             else streaming._absorb_many_drop_donate,
-            colored_sweep, knn_select, plan_add_sensor, plan_remove_sensor,
+            colored_sweep, knn_select_valid, plan_add_sensor,
+            plan_remove_sensor,
         ]
         warm_sizes = [f._cache_size() for f in tracked]
         t0 = time.time()
@@ -347,9 +352,12 @@ def main():
     ap.add_argument("--on_full", default="drop", choices=["drop", "evict"],
                     help="over-capacity arrival policy (evict = sliding window)")
     ap.add_argument("--churn", type=int, default=0,
-                    help="membership churn rounds to replay (joins/leaves)")
+                    help="membership churn rounds to replay (symmetric "
+                         "joins/leaves with O(degree) event repairs)")
     ap.add_argument("--spares", type=int, default=8,
-                    help="spare sensor rows reserved for --churn joins (n_max = sensors + spares)")
+                    help="spare sensor rows reserved for --churn joins "
+                         "(n_max = sensors + spares; the recolor pool "
+                         "defaults to 2x this)")
     ap.add_argument("--queries", type=int, default=256)
     ap.add_argument("--fusion", default="conn", choices=["conn", "knn"],
                     help="query fusion rule (knn routes through the query plan)")

@@ -1,0 +1,146 @@
+"""Churn soak (ISSUE-5 satellite): random interleavings of symmetric
+joins, removals, streaming absorptions and sweeps must
+
+  (a) preserve the Fejér monotonicity invariant after every event (each
+      constraint set stays a subspace containing 0), and
+  (b) leave a problem EQUIVALENT to a from-scratch ``make_batch_problem``
+      at the trace's terminal membership: replaying the surviving
+      measurements into a fresh build and running the serial engine from
+      the same canonical init produces the same iterates to float noise
+      (the incremental problem encodes the same constraint sets — the
+      symmetric-join guarantee, extended across whole traces).
+
+The mapping between the two builds: live incremental rows in ascending
+row order become the fresh problem's sensors 0..n_live-1 (the serial
+visit order is preserved), and surviving arrivals replay in absorption
+order (per-sensor chronology — the slot-assignment invariant — is
+preserved).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core import (
+    Kernel,
+    add_sensor,
+    build_topology,
+    colored_sweep,
+    init_state,
+    make_batch_problem,
+    remove_sensor,
+    serial_sweep,
+    streaming,
+    uniform_sensors,
+    weighted_norm_sq,
+)
+
+KERN = Kernel("rbf", gamma=1.0)
+LAM = 0.3
+RADIUS = 0.55
+N, B, SPARES = 12, 2, 3
+
+
+def _build(seed):
+    pos = uniform_sensors(N, d=1, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    ys = np.sin(np.pi * pos[None, :, 0]) + 0.2 * rng.normal(size=(B, N))
+    topo = build_topology(pos, RADIUS)
+    d_max = int(np.asarray(topo.degrees).max()) + 6
+    topo = build_topology(pos, RADIUS, d_max=d_max, n_max=N + SPARES)
+    prob = make_batch_problem(topo, KERN, ys, jnp.full((N,), LAM))
+    return prob, colored_sweep(prob, init_state(prob), n_sweeps=3), d_max
+
+
+def _assert_fejer_sweeps(prob, state, slack=1.06):
+    prev = np.asarray(weighted_norm_sq(prob, state))
+    for _ in range(2):
+        state = colored_sweep(prob, state, n_sweeps=1)
+        cur = np.asarray(weighted_norm_sq(prob, state))
+        assert np.isfinite(cur).all()
+        assert (cur <= prev * slack + 1e-5).all(), (cur, prev)
+        prev = cur
+    return state
+
+
+@settings(deadline=None, max_examples=4)
+@given(seed=st.integers(0, 1000))
+def test_churn_soak_fejer_and_terminal_rebuild_equivalence(seed):
+    prob, state, d_max = _build(seed % 5)
+    ev = np.random.default_rng(seed)
+    arrivals = []  # (order, field, row, x, y) of absorbed arrivals
+
+    for step in range(8):
+        kind = int(ev.integers(0, 4))
+        n_live = int(np.asarray(prob.alive[: prob.n]).sum())
+        if kind == 0:  # symmetric join
+            x = ev.uniform(-0.8, 0.8, size=1).astype(np.float32)
+            ys_new = ev.normal(size=B).astype(np.float32)
+            prob, state, slot, ok = add_sensor(prob, state, x, ys_new, lam=LAM)
+        elif kind == 1 and n_live > 6:  # removal of a random live sensor
+            live = np.nonzero(np.asarray(prob.alive[: prob.n]))[0]
+            victim = int(ev.choice(live))
+            prob2, state2, ok = remove_sensor(prob, state, victim)
+            if bool(ok):
+                prob, state = prob2, state2
+                arrivals = [a for a in arrivals if a[2] != victim]
+        else:  # streaming absorption at a live sensor with headroom
+            live = np.nonzero(np.asarray(prob.alive[: prob.n]))[0]
+            s = int(ev.choice(live))
+            f = int(ev.integers(0, B))
+            cap = int(streaming.capacity_left(prob)[f, s])
+            if cap >= 2:  # never run a row full: keeps the replay exact
+                xa = (
+                    np.asarray(prob.topology.positions[s])
+                    + 0.05 * ev.normal(size=1)
+                ).astype(np.float32)
+                ya = float(ev.normal())
+                prob, state, ok = streaming.absorb(prob, state, f, s, xa, ya)
+                if bool(ok):
+                    arrivals.append((len(arrivals), f, s, xa, ya))
+        state = _assert_fejer_sweeps(prob, state)
+
+    # ---- terminal membership: from-scratch rebuild + measurement replay
+    alive = np.asarray(prob.alive[: prob.n])
+    live = np.nonzero(alive)[0]
+    row_to_fresh = {int(r): i for i, r in enumerate(live)}
+    pos_f = np.asarray(prob.topology.positions)[live]
+    ys_f = np.asarray(prob.y)[:, live]
+    topo_f = build_topology(pos_f, RADIUS, d_max=d_max)
+    prob_f = make_batch_problem(
+        topo_f, KERN, ys_f, jnp.full((len(live),), LAM)
+    )
+    state_f = init_state(prob_f)
+    # canonical init of the INCREMENTAL problem: Table-1 z0 = y plus the
+    # surviving arrivals seeded at their reserved slots
+    state_i = init_state(prob)
+    zi = state_i.z
+    for _, f, s, xa, ya in sorted(arrivals):
+        prob_f, state_f, ok = streaming.absorb(
+            prob_f, state_f, f, row_to_fresh[s], xa, ya
+        )
+        assert bool(ok)
+        # the incremental problem already holds this arrival's system rows;
+        # seed its message slot (what absorb's z-init did at event time)
+        mask_s = np.asarray(prob.nbr_mask[f, s])
+        idx_s = np.asarray(prob.nbr_idx[s])
+        lanes = np.nonzero(
+            mask_s & (idx_s >= prob.n)
+            & np.isclose(
+                np.asarray(prob.nbr_pos[f, s, :, 0]), xa[0], atol=1e-6
+            )
+        )[0]
+        assert len(lanes) >= 1
+        zi = zi.at[f, idx_s[lanes[0]]].set(ya)
+    state_i = type(state_i)(z=zi, coef=state_i.coef)
+
+    # same constraint sets, same init, same visit order => the serial
+    # iterates themselves agree to float noise
+    si = serial_sweep(prob, state_i, n_sweeps=3)
+    sf = serial_sweep(prob_f, state_f, n_sweeps=3)
+    z_i = np.asarray(si.z)
+    z_f = np.asarray(sf.z)
+    np.testing.assert_allclose(
+        z_f[:, : len(live)], z_i[:, live], atol=2e-4,
+        err_msg=f"terminal membership {live}",
+    )

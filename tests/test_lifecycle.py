@@ -1,10 +1,18 @@
-"""Network-lifecycle plan layer guarantees (ISSUE-4 tentpole).
+"""Network-lifecycle plan layer guarantees (ISSUE-4 tentpole, extended by
+the ISSUE-5 symmetric-join tentpole).
 
 Covers:
   (a) join/leave events (``streaming.add_sensor`` / ``remove_sensor``)
       keep every cached factor consistent with the masked-rebuild reference
       and keep the engine equalities (plan == onehot BIT-FOR-BIT, pallas
       close) on the churned problem — including spare-row recycling;
+  (a') SYMMETRIC joins: adopters grow reciprocal anchor lanes, the
+      patched scatter plans equal the host builder BITWISE on the
+      post-join tables, the training iterates equal a from-scratch
+      ``make_problem`` build to <= 1e-5, same-color adopter conflicts
+      recolor on device (and an exhausted pool drops the join bitwise),
+      and leave is the exact inverse (join -> leave restores every
+      table bitwise);
   (b) the refactored ``robust_sweep``: batched (B > 1), engine-dispatched,
       bitwise-equal to ``colored_sweep`` at all-True liveness and
       plan == onehot bitwise under arbitrary liveness traces; the legacy
@@ -62,14 +70,14 @@ def _lifecycle_problem(
     return prob, state, pos, rng
 
 
-def _assert_engines_agree(prob, state, n_sweeps=3):
+def _assert_engines_agree(prob, state, n_sweeps=3, pallas_atol=1e-5):
     a = colored_sweep(prob, state, n_sweeps=n_sweeps, engine="plan")
     b = colored_sweep(prob, state, n_sweeps=n_sweeps, engine="onehot")
     np.testing.assert_array_equal(np.asarray(a.z), np.asarray(b.z))
     np.testing.assert_array_equal(np.asarray(a.coef), np.asarray(b.coef))
     c = colored_sweep(prob, state, n_sweeps=n_sweeps, engine="pallas")
     np.testing.assert_allclose(
-        np.asarray(a.z), np.asarray(c.z), atol=1e-5, err_msg="pallas"
+        np.asarray(a.z), np.asarray(c.z), atol=pallas_atol, err_msg="pallas"
     )
     return a
 
@@ -97,6 +105,20 @@ def test_add_sensor_structural():
     adopted = idx[1:deg]
     d = np.abs(pos[adopted, 0] - x[0])
     assert (d < 0.7).all()
+    # SYMMETRIC: every adopter grew a reciprocal anchor lane at x, at its
+    # pre-join stream boundary, and its degree bumped by one
+    deg0 = np.asarray(prob.topology.degrees)
+    deg2 = np.asarray(prob2.topology.degrees)
+    idx_all = np.asarray(prob2.nbr_idx)
+    for a in adopted:
+        assert deg2[a] == deg0[a] + 1
+        la = idx_all[a].tolist().index(s)
+        assert la == deg0[a]
+        np.testing.assert_allclose(
+            np.asarray(prob2.nbr_pos[:, a, la]),
+            np.broadcast_to(x, (2, 1)), atol=1e-7,
+        )
+        assert np.asarray(prob2.nbr_mask)[:, a, la].all()
     # its position is live program data now
     np.testing.assert_allclose(
         np.asarray(prob2.topology.positions[s]), x, atol=1e-7
@@ -108,11 +130,191 @@ def test_add_sensor_structural():
         np.asarray(prob2.chol), np.asarray(streaming.rebuild_chol(prob2)),
         atol=1e-5,
     )
-    # untouched arrays: other fields/rows identical
+    # untouched arrays: NON-adopter rows identical (adopters grew an anchor)
+    others = [i for i in range(n_base) if i not in adopted.tolist()]
     np.testing.assert_array_equal(
-        np.asarray(prob2.gram[:, :n_base]), np.asarray(prob.gram[:, :n_base])
+        np.asarray(prob2.gram[:, others]), np.asarray(prob.gram[:, others])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(prob2.chol[:, others]), np.asarray(prob.chol[:, others])
     )
     _assert_engines_agree(prob2, state2)
+
+
+def test_symmetric_join_matches_from_scratch():
+    """ISSUE-5 acceptance: the post-join problem IS the problem a fresh
+    ``make_problem`` on the post-join topology would build — the patched
+    scatter plans match the host builder BITWISE on the post-join tables,
+    and the training iterates match a genuinely from-scratch build to
+    <= 1e-5 (same constraint sets, same canonical Table-1 init)."""
+    from repro.core import plans
+
+    prob, state, pos, rng = _lifecycle_problem()
+    n = prob.n_base
+    x = np.array([0.15], np.float32)
+    ys_new = np.array([0.4, -0.2], np.float32)
+    prob2, state2, slot, ok = add_sensor(prob, state, x, ys_new, lam=0.1)
+    assert bool(ok)
+    s = int(slot)
+
+    # (a) device-patched plans == host build_color_plans on current tables
+    pz, pc = plans.build_color_plans(
+        np.asarray(prob2.color_members), np.asarray(prob2.color_mask),
+        np.asarray(prob2.nbr_idx), prob2.n_stream, np.asarray(prob2.alive),
+    )
+    np.testing.assert_array_equal(pz, np.asarray(prob2.plan_z))
+    np.testing.assert_array_equal(pc, np.asarray(prob2.plan_coef))
+
+    # (b) fit equivalence vs a true from-scratch build on the post-join
+    # topology: the serial engine visits identical local systems in
+    # identical order, so the iterates themselves match to float noise
+    from repro.core import make_batch_problem as mbp
+
+    pos2 = np.concatenate([pos, x[None]], axis=0)
+    ys2 = np.concatenate([np.asarray(prob.y[:, :n]), ys_new[:, None]], axis=1)
+    topoF = build_topology(pos2, 0.7, d_max=prob.topology.d_max)
+    probF = mbp(topoF, KERN, ys2, jnp.full((n + 1,), 0.1))
+    for sweeps in (1, 5):
+        sF = serial_sweep(probF, init_state(probF), n_sweeps=sweeps)
+        sI = serial_sweep(prob2, init_state(prob2), n_sweeps=sweeps)
+        zF, zI = np.asarray(sF.z), np.asarray(sI.z)
+        np.testing.assert_allclose(zF[:, :n], zI[:, :n], atol=1e-5)
+        np.testing.assert_allclose(zF[:, n], zI[:, s], atol=1e-5)
+
+    # (c) leave is the exact inverse: every plan/color/neighbor table
+    # restores BITWISE (the adopters' deleted anchor lanes restore their
+    # orphaned reserved ids, the recycled spare row its pristine table)
+    prob3, state3, rok = remove_sensor(prob2, state2, s)
+    assert bool(rok)
+    for f in (
+        "nbr_idx", "nbr_mask", "plan_z", "plan_coef", "color_members",
+        "color_mask", "color_of", "member_pos", "alive",
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(prob3, f)), np.asarray(getattr(prob, f)),
+            err_msg=f,
+        )
+    np.testing.assert_array_equal(
+        np.asarray(prob3.topology.degrees), np.asarray(prob.topology.degrees)
+    )
+    np.testing.assert_allclose(
+        np.asarray(prob3.chol), np.asarray(streaming.rebuild_chol(prob3)),
+        atol=1e-5,
+    )
+
+
+def test_symmetric_join_recolors_conflicting_adopters():
+    """Two far-apart adjacent pairs reuse colors across components; a
+    newcomer adopting all four creates two same-color conflicts, resolved
+    on device by moving one adopter of each pair into a reserved recolor
+    class.  plan == onehot bitwise is the conflict detector (an unresolved
+    conflict double-writes the newcomer's slot and the engines diverge)."""
+    from repro.core import plans
+
+    pos = np.array([[-0.45], [-0.35], [0.35], [0.45]], np.float32)
+    topo = build_topology(pos, 0.46, d_max=6, n_max=6)
+    ys = np.array([[0.5, 0.2, -0.1, 0.3], [0.1, -0.3, 0.2, 0.0]], np.float32)
+    prob = make_batch_problem(topo, KERN, ys, jnp.full((4,), 0.2))
+    state = colored_sweep(prob, init_state(prob), n_sweeps=4)
+    rs = prob.recolor_start
+    assert topo.n_recolor == 4  # default 2x spares
+    prob2, state2, slot, ok = add_sensor(
+        prob, state, np.zeros(1, np.float32),
+        np.array([0.1, -0.1], np.float32), lam=0.2,
+    )
+    assert bool(ok)
+    co = np.asarray(prob2.color_of)
+    moved = [i for i in range(4) if co[i] >= rs]
+    assert len(moved) == 2, (moved, co[:5])
+    _assert_engines_agree(prob2, state2)
+    # host rebuild of the plans from the recolored tables is bitwise equal
+    pz, pc = plans.build_color_plans(
+        np.asarray(prob2.color_members), np.asarray(prob2.color_mask),
+        np.asarray(prob2.nbr_idx), prob2.n_stream, np.asarray(prob2.alive),
+    )
+    np.testing.assert_array_equal(pz, np.asarray(prob2.plan_z))
+    np.testing.assert_array_equal(pc, np.asarray(prob2.plan_coef))
+    # removing a recolored adopter frees its class for later joins
+    prob3, state3, rok = remove_sensor(prob2, state2, moved[0])
+    assert bool(rok)
+    free = int((~np.asarray(prob3.color_mask)[rs:].any(1)).sum())
+    assert free == topo.n_recolor - 1
+    _assert_engines_agree(prob3, state3)
+    # an exhausted recolor pool DROPS the join bitwise instead of
+    # corrupting the coloring
+    topoZ = build_topology(pos, 0.46, d_max=6, n_max=6, n_recolor=0)
+    probZ = make_batch_problem(topoZ, KERN, ys, jnp.full((4,), 0.2))
+    stateZ = colored_sweep(probZ, init_state(probZ), n_sweeps=2)
+    probZ2, stateZ2, _, okZ = add_sensor(
+        probZ, stateZ, np.zeros(1, np.float32),
+        np.array([0.1, -0.1], np.float32), lam=0.2,
+    )
+    assert not bool(okZ)
+    for f in ("nbr_idx", "nbr_mask", "gram", "chol", "plan_z", "plan_coef",
+              "alive", "color_members", "color_of"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(probZ2, f)), np.asarray(getattr(probZ, f)),
+            err_msg=f,
+        )
+
+
+def test_symmetric_join_shifts_adopter_arrivals():
+    """An adopter with absorbed arrivals keeps them: the anchor lane is
+    inserted at its stream boundary and the arrivals shift up one lane (a
+    completely FULL field drops its newest arrival); the factor repair is
+    an O(degree) batched refactorization that matches the rebuild."""
+    prob, state, pos, rng = _lifecycle_problem(headroom=3)
+    target = 5
+    d_max = prob.topology.d_max
+    deg0 = int(np.asarray(prob.topology.degrees)[target])
+    # fill field 0 of the target COMPLETELY, field 1 partially
+    for k in range(d_max - deg0):
+        x = (pos[target] + 0.02 * (k + 1)).astype(np.float32)
+        prob, state, aok = streaming.absorb(prob, state, 0, target, x, 0.5 + k)
+        assert bool(aok)
+    prob, state, aok = streaming.absorb(
+        prob, state, 1, target, (pos[target] + 0.01).astype(np.float32), -0.3
+    )
+    assert bool(aok)
+    zid_first = int(np.asarray(prob.nbr_idx)[target, deg0])
+    zid_last = int(np.asarray(prob.nbr_idx)[target, d_max - 1])
+    z_first0 = float(state.z[0, zid_first])
+    z_last0 = float(state.z[0, zid_last])
+    assert z_last0 != 0.0
+    x_new = (pos[target] + 0.005).astype(np.float32)  # adopts `target` first
+    prob2, state2, slot, ok = add_sensor(
+        prob, state, x_new, np.zeros(2, np.float32), lam=0.1
+    )
+    assert bool(ok)
+    s = int(slot)
+    idx2 = np.asarray(prob2.nbr_idx)
+    assert idx2[target, deg0] == s  # anchor at the old stream boundary
+    assert idx2[target, deg0 + 1] == zid_first  # arrivals shifted up
+    # the arrival VALUES ride with their fixed slot ids
+    assert float(state2.z[0, zid_first]) == z_first0
+    # field 0 was full: its newest arrival (the orphaned last slot) dropped,
+    # and the row stays full (anchor + one-fewer arrivals fill all lanes)
+    assert float(state2.z[0, zid_last]) == 0.0
+    assert bool(prob2.nbr_mask[0, target].all())
+    assert zid_last not in np.asarray(prob2.nbr_idx)[target].tolist()
+    # field 1 had room: nothing lost, its arrival rides at lane deg0 + 1
+    assert bool(prob2.nbr_mask[1, target, deg0 + 1])
+    np.testing.assert_allclose(
+        np.asarray(prob2.chol), np.asarray(streaming.rebuild_chol(prob2)),
+        atol=1e-4,
+    )
+    # near-duplicate anchors (stacked arrivals + the new anchor) make this
+    # row deliberately ill-conditioned; give the f32 Pallas solve slack
+    _assert_engines_agree(prob2, state2, pallas_atol=5e-5)
+    # absorb still lands at the adopter post-join (field 1 has room)
+    prob3, state3, aok = streaming.absorb(
+        prob2, state2, 1, target, (pos[target] - 0.01).astype(np.float32), 0.7
+    )
+    assert bool(aok)
+    np.testing.assert_allclose(
+        np.asarray(prob3.chol), np.asarray(streaming.rebuild_chol(prob3)),
+        atol=1e-4,
+    )
 
 
 def test_remove_sensor_structural():
@@ -336,7 +538,7 @@ def test_robust_legacy_link_trace_still_routes():
 def test_churn_trace_compiles_zero_programs_after_warmup():
     """Acceptance: a join -> leave -> absorb -> sweep -> query trace at
     fixed n_max triggers zero recompilations after warmup."""
-    from repro.core.serving import knn_select
+    from repro.core.serving import knn_select_valid
     from repro.core.streaming import (
         _absorb_many_drop_copy,
         _add_sensor_copy,
@@ -371,7 +573,8 @@ def test_churn_trace_compiles_zero_programs_after_warmup():
     prob, state, plan = trace_round(prob, state, plan, 0)  # warmup
     tracked = [
         _add_sensor_copy, _remove_sensor_copy, _absorb_many_drop_copy,
-        colored_sweep, knn_select, plan_add_sensor, plan_remove_sensor,
+        colored_sweep, knn_select_valid, plan_add_sensor,
+        plan_remove_sensor,
     ]
     sizes = [f._cache_size() for f in tracked]
     for i in range(1, 4):

@@ -326,3 +326,49 @@ def test_knn_fuse_buckets_query_sizes():
     assert knn_fuse_pallas._cache_size() - base <= len(
         {bucket_rows(q) for q in sizes}
     )
+
+
+# ---------------------------------------------------------------------------
+# ISSUE-5 satellite: dense / plan / pallas agree at EVERY liveness fraction
+# (all-dead, one-alive, exactly-k-alive, fully-alive) — when fewer than k
+# live sensors exist, every engine averages the live selections only.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("live_count", [0, 1, 3, None])
+def test_knn_engines_agree_at_liveness_fractions(live_count):
+    from repro.core import remove_sensor
+
+    n, b, k = 8, 2, 3
+    pos = np.linspace(-0.8, 0.8, n)[:, None].astype(np.float32)
+    topo = build_topology(pos, 2.0, d_max=n + 2, n_max=n + 1)
+    rng = np.random.default_rng(0)
+    ys = np.sin(np.pi * pos[None, :, 0]) + 0.1 * rng.normal(size=(b, n))
+    prob = make_batch_problem(topo, KERN, ys, jnp.full((n,), 0.2))
+    state = colored_sweep(prob, init_state(prob), n_sweeps=15)
+    # plan built at full liveness, then repaired through the removals
+    plan = make_serving_plan(prob, k=k, spare=2, slack=n)
+    if live_count is not None:
+        for s in range(live_count, n):
+            prob, state, ok = remove_sensor(prob, state, s)
+            assert bool(ok)
+            plan = serving.plan_remove_sensor(plan, s)
+    xq = rng.uniform(-0.9, 0.9, size=(13, 1)).astype(np.float32)
+    dense = np.asarray(fusion.fuse(prob, state, xq, "knn", k=k))
+    out_plan = np.asarray(
+        fusion.fuse(prob, state, xq, "knn", k=k, engine="plan", plan=plan)
+    )
+    out_pal = np.asarray(
+        fusion.fuse(prob, state, xq, "knn", k=k, engine="pallas", plan=plan)
+    )
+    np.testing.assert_allclose(out_plan, dense, atol=1e-5, err_msg="plan")
+    np.testing.assert_allclose(out_pal, dense, atol=1e-5, err_msg="pallas")
+    if live_count == 0:
+        # all dead: the kNN average is exactly zero in every engine
+        assert np.abs(dense).max() == 0.0
+        assert np.abs(out_plan).max() == 0.0
+        assert np.abs(out_pal).max() == 0.0
+    elif live_count is not None and live_count < k:
+        # k exceeds the live count: predictions average the live sensors
+        # only (no zero-dilution), so they are NOT scaled by live/k
+        assert np.abs(dense).max() > 0.0

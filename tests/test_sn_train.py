@@ -328,3 +328,73 @@ def test_weighted_sweep_high_confidence_fits_tighter():
     res_hi = abs(float(hi.z[5]) - float(prob.y[5]))
     res_lo = abs(float(lo.z[5]) - float(prob.y[5]))
     assert res_hi < res_lo
+
+
+# ---------------------------------------------------------------------------
+# ISSUE-5 satellite: the single-field extensions thread the alive mask
+# (ROADMAP follow-up (c)) — pinned to the masked serial engine.
+# ---------------------------------------------------------------------------
+
+
+def _partially_alive_single_field(n=20, radius=0.6, seed=3, dead=(4, 11)):
+    """A single-field view of a lifecycle problem with removed sensors."""
+    from repro.core import (
+        field_view, make_batch_problem, remove_sensor, uniform_sensors,
+    )
+    from repro.core.topology import build_topology as bt
+
+    pos = uniform_sensors(n, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    y = np.sin(np.pi * pos[:, 0]) + 0.2 * rng.normal(size=n)
+    topo = bt(pos, radius, n_max=n + 2)
+    kern = Kernel("rbf", gamma=1.0)
+    prob = make_batch_problem(
+        topo, kern, y[None, :], jnp.full((n,), 0.1)
+    )
+    state = serial_sweep(prob, init_state(prob), n_sweeps=3)
+    for s in dead:
+        prob, state, ok = remove_sensor(prob, state, s)
+        assert bool(ok)
+    return field_view(prob, state, 0)
+
+
+def test_weighted_sweep_threads_alive_mask():
+    """Unit weights on a partially-alive problem == the masked serial
+    engine: dead sensors neither update nor are read as neighbors, and
+    their (zeroed) messages persist."""
+    dead = (4, 11)
+    prob1, state1 = _partially_alive_single_field(dead=dead)
+    a = serial_sweep(prob1, state1, n_sweeps=30)
+    b = weighted_sweep(prob1, state1, jnp.ones((prob1.n,)), n_sweeps=30)
+    np.testing.assert_allclose(np.asarray(a.z), np.asarray(b.z), atol=1e-4)
+    for s in dead:
+        assert float(jnp.abs(b.z[s])) == 0.0
+        assert float(jnp.abs(b.coef[s]).max()) == 0.0
+    # finite + Fejér-sane under non-trivial weights too
+    w = jnp.asarray(
+        np.random.default_rng(0).uniform(0.5, 2.0, prob1.n).astype(np.float32)
+    )
+    c = weighted_sweep(prob1, state1, w, n_sweeps=5)
+    assert bool(jnp.isfinite(c.z).all()) and bool(jnp.isfinite(c.coef).all())
+    for s in dead:
+        assert float(jnp.abs(c.coef[s]).max()) == 0.0
+
+
+def test_robust_sweep_links_threads_alive_mask():
+    """An all-True link trace on a partially-alive problem == the masked
+    serial engine (the legacy link path no longer resurrects removed
+    sensors)."""
+    dead = (4, 11)
+    prob1, state1 = _partially_alive_single_field(dead=dead)
+    link_alive = jnp.ones((3, prob1.n, prob1.topology.d_max), bool)
+    from repro.core import robust_sweep_links
+
+    a = serial_sweep(prob1, state1, n_sweeps=3)
+    b = robust_sweep_links(prob1, state1, link_alive, n_sweeps=3)
+    np.testing.assert_allclose(np.asarray(a.z), np.asarray(b.z), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(a.coef), np.asarray(b.coef), atol=1e-4
+    )
+    for s in dead:
+        assert float(jnp.abs(b.z[s])) == 0.0
+        assert float(jnp.abs(b.coef[s]).max()) == 0.0
