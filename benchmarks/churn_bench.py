@@ -77,7 +77,8 @@ def _time_incremental(prob, state, plan, b, lam, reps):
     ys_new = np.zeros((b,), np.float32)
 
     def cycle(prob, state, plan):
-        prob, state, slot, _ = add_sensor(prob, state, x, ys_new, lam=lam)
+        prob, state, _rec = add_sensor(prob, state, x, ys_new, lam=lam)
+        slot, _ = _rec.slot, _rec.joined
         plan, _ = plan_add_sensor(plan, x, slot)
         prob, state, _ = remove_sensor(prob, state, slot)
         plan = plan_remove_sensor(plan, slot)
@@ -105,14 +106,16 @@ def _time_per_event(prob, state, b, lam, reps):
     x = np.asarray([0.11, -0.07], np.float32)
     ys_new = np.zeros((b,), np.float32)
     # warm both programs
-    p2, s2, slot, _ = add_sensor(prob, state, x, ys_new, lam=lam)
+    p2, s2, _rec = add_sensor(prob, state, x, ys_new, lam=lam)
+    slot, _ = _rec.slot, _rec.joined
     jax.block_until_ready(p2.chol)
     p3, s3, _ = remove_sensor(p2, s2, slot)
     jax.block_until_ready(p3.chol)
     t_join = t_rem = float("inf")
     for _ in range(reps):
         t0 = time.perf_counter()
-        p2, s2, slot, _ = add_sensor(prob, state, x, ys_new, lam=lam)
+        p2, s2, _rec = add_sensor(prob, state, x, ys_new, lam=lam)
+        slot, _ = _rec.slot, _rec.joined
         jax.block_until_ready(p2.chol)
         t_join = min(t_join, time.perf_counter() - t0)
         t0 = time.perf_counter()

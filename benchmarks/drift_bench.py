@@ -1,0 +1,268 @@
+"""Drift tracking: forgetting-factor streaming on a time-varying field.
+
+The paper trains on a STATIC field: every absorbed measurement keeps unit
+weight forever, so on a drifting field the consensus messages average the
+field's whole history and the estimate converges to the wrong (stale)
+surface.  ISSUE 6 adds per-field exponential forgetting (``beta``): each
+new arrival at a sensor ages that sensor's occupied stream lanes one
+``sqrt(beta)`` step (anchor weights, Gram, cached Cholesky, messages), so
+the effective window is ~1/(1-beta) arrivals and the sweeps track the
+field instead of its history.
+
+This bench runs the SAME drifting-field trace over a batch of fields that
+differ only in ``beta`` (one mixed-beta problem — one compiled program),
+with dense per-round measurement waves (``absorb_wave``: one arrival per
+sensor per round, one dispatch), periodic join/leave churn with
+``repair_lambda=True``, and per-round kNN-fused RMSE against the CURRENT
+truth.  It reports steady-state tracking error per beta across a grid of
+drift rates x refresh cadences (sweeps between measurement rounds — the
+"rebuild cadence" a non-forgetting deployment would have to re-seed at),
+plus the number of XLA program compiles after warmup (must be ZERO: the
+whole drift+churn trace runs at fixed shapes).
+
+Acceptance (ISSUE 6): at n=1000, B=16, a tuned ``beta < 1`` tracks the
+drifting field with >= 5x lower steady-state RMSE than ``beta = 1.0``.
+
+Run:  PYTHONPATH=src python -m benchmarks.drift_bench
+      PYTHONPATH=src python -m benchmarks.drift_bench --n 100 --batch 4
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    Kernel,
+    absorb_wave,
+    add_sensor,
+    build_topology,
+    colored_sweep,
+    fusion,
+    init_state,
+    make_batch_problem,
+    remove_sensor,
+    streaming,
+)
+
+BETAS = (1.0, 0.7, 0.5, 0.3)
+
+
+def _truth(pos, t, v):
+    """Drifting field: a unit-scale wave translating v per round along x0."""
+    return np.sin(np.pi * (pos[..., 0] - v * t)).astype(np.float32)
+
+
+def _build(n, b, dim, radius, gamma, lam, w_extra, spares, noise, seed=0):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(-1, 1, size=(n, dim)).astype(np.float32)
+    topo = build_topology(pos, radius)
+    d_max = int(np.asarray(topo.degrees).max()) + w_extra
+    topo = build_topology(pos, radius, d_max=d_max, n_max=n + spares)
+    betas = np.resize(np.asarray(BETAS, np.float32), b)
+    ys = _truth(pos, 0, 0.0)[None] + noise * rng.normal(size=(b, n)).astype(
+        np.float32
+    )
+    prob = make_batch_problem(
+        topo, Kernel("rbf", gamma=gamma), ys, jnp.full((n,), lam), beta=betas
+    )
+    state = colored_sweep(prob, init_state(prob), n_sweeps=2)
+    return pos, prob, state, betas
+
+
+@jax.jit
+def _fused_rmse(problem, state, xq, truth):
+    """kNN-fused (k=3) estimate at the sensor sites vs current truth: (B,)."""
+    preds = fusion.evaluate_sensors(problem, state, xq)
+    fused = fusion.knn_fusion(
+        preds, problem.topology.positions, xq, k=3, alive=problem.alive[:-1]
+    )
+    return jnp.sqrt(jnp.mean((fused - truth[None, :]) ** 2, axis=-1))
+
+
+def _cache_sizes():
+    fns = (
+        streaming._absorb_wave_evict_donate,
+        streaming._add_sensor_copy,
+        streaming._remove_sensor_copy,
+        colored_sweep,
+        _fused_rmse,
+    )
+    return [f._cache_size() for f in fns]
+
+
+def run_trace(
+    pos, prob, state, betas, *, v, sweeps, rounds, noise, lam,
+    churn_every=5, ss_rounds=10, seed=1,
+):
+    """One drifting trace; returns (ss_rmse per beta, compiles, s/round)."""
+    rng = np.random.default_rng(seed)
+    n, b = pos.shape[0], prob.batch_size
+    n_cap, dim = prob.n, pos.shape[1]
+    jitter = 0.2 * noise + 0.01
+    x_join = np.full((dim,), 0.11, np.float32)
+
+    def one_round(prob, state, t):
+        xs = np.zeros((b, n_cap, dim), np.float32)
+        xs[:, :n] = pos[None] + rng.normal(
+            scale=jitter, size=(b, n, dim)
+        ).astype(np.float32)
+        ys = _truth(xs[..., :n, :], t, v) + noise * rng.normal(
+            size=(b, n)
+        ).astype(np.float32)
+        ysf = np.zeros((b, n_cap), np.float32)
+        ysf[:, :n] = ys
+        amask = np.zeros((b, n_cap), bool)
+        amask[:, :n] = True
+        prob, state, _ = absorb_wave(
+            prob, state, xs, ysf, mask=amask, donate=True, on_full="evict"
+        )
+        if churn_every and t % churn_every == 0:
+            yj = np.full((b,), float(_truth(x_join[None], t, v)[0]), np.float32)
+            prob, state, rcpt = add_sensor(
+                prob, state, x_join, yj, lam=lam, repair_lambda=True
+            )
+            prob, state, _ = remove_sensor(
+                prob, state, rcpt.slot, repair_lambda=True
+            )
+        state = colored_sweep(prob, state, n_sweeps=sweeps)
+        return prob, state
+
+    # warm every program in the trace before counting compiles
+    prob, state = one_round(prob, state, 0)
+    rmse = np.asarray(_fused_rmse(prob, state, pos, _truth(pos, 0, v)))
+    jax.block_until_ready(state.z)
+    base = _cache_sizes()
+
+    hist = []
+    t0 = time.perf_counter()
+    for t in range(1, rounds + 1):
+        prob, state = one_round(prob, state, t)
+        hist.append(np.asarray(_fused_rmse(prob, state, pos, _truth(pos, t, v))))
+    jax.block_until_ready(state.z)
+    s_per_round = (time.perf_counter() - t0) / rounds
+    compiles = sum(a - b2 for a, b2 in zip(_cache_sizes(), base))
+
+    ss = np.mean(np.stack(hist[-ss_rounds:]), axis=0)  # (B,)
+    per_beta = {
+        round(float(bv), 6): float(np.mean(ss[betas == bv]))
+        for bv in np.unique(betas)
+    }
+    return per_beta, compiles, s_per_round
+
+
+def sweep_grid(
+    n, batch, vs, cadences, dim, radius, gamma, lam, w_extra, spares,
+    noise, rounds, ss_rounds, churn_every,
+):
+    entries = []
+    print(f"{'v':>6s} {'sweeps':>7s} " +
+          " ".join(f"b={b:<4g}" for b in BETAS) + f" {'ratio':>7s} "
+          f"{'compiles':>8s} {'s/round':>8s}")
+    for sw in cadences:
+        for v in vs:
+            pos, prob, state, betas = _build(
+                n, batch, dim, radius, gamma, lam, w_extra, spares, noise
+            )
+            per_beta, compiles, spr = run_trace(
+                pos, prob, state, betas, v=v, sweeps=sw, rounds=rounds,
+                noise=noise, lam=lam, churn_every=churn_every,
+                ss_rounds=ss_rounds,
+            )
+            best_rmse = min(
+                r for bv, r in per_beta.items() if bv < 1.0
+            )
+            ratio = per_beta[1.0] / best_rmse
+            entries.append({
+                "n": n, "batch": batch, "v": v, "sweeps_per_round": sw,
+                "rounds": rounds, "ss_rmse_per_beta": per_beta,
+                "rmse_ratio_beta1_vs_best": ratio,
+                "compiles_after_warmup": compiles,
+                "s_per_round": spr,
+            })
+            print(f"{v:6.3f} {sw:7d} " +
+                  " ".join(f"{per_beta[b]:.3f}" for b in BETAS) +
+                  f" {ratio:6.1f}x {compiles:8d} {spr:8.2f}")
+    return entries
+
+
+def drift_fast(rows):
+    """Trimmed trace for ``benchmarks/run.py --fast`` (CI bench-json rows)."""
+    entries = sweep_grid(
+        n=100, batch=4, vs=(0.05,), cadences=(10,), dim=1, radius=0.09,
+        gamma=10.0, lam=0.01, w_extra=12, spares=4, noise=0.01,
+        rounds=40, ss_rounds=10, churn_every=5,
+    )
+    for e in entries:
+        rows.append((
+            f"drift.n{e['n']}.v{e['v']}.track",
+            e["s_per_round"] * 1e6,
+            f"rmse_ratio_beta1_vs_best={e['rmse_ratio_beta1_vs_best']:.1f}x",
+        ))
+        rows.append((
+            f"drift.n{e['n']}.v{e['v']}.compiles",
+            float(e["compiles_after_warmup"]),
+            "xla_compiles_after_warmup",
+        ))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1000)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--vs", default="0.02,0.05,0.1",
+                    help="drift rates (field translation per round)")
+    ap.add_argument("--cadences", default="4,10",
+                    help="refresh sweeps per measurement round")
+    ap.add_argument("--dim", type=int, default=1)
+    ap.add_argument("--radius", type=float, default=-1.0,
+                    help="coupling radius (< 0: scale 0.09 * 100/n for 1D)")
+    ap.add_argument("--gamma", type=float, default=10.0)
+    ap.add_argument("--lam", type=float, default=0.01)
+    ap.add_argument("--w-extra", type=int, default=12,
+                    help="reserved stream lanes per sensor (window size)")
+    ap.add_argument("--spares", type=int, default=4)
+    ap.add_argument("--noise", type=float, default=0.01)
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--ss-rounds", type=int, default=10)
+    ap.add_argument("--churn-every", type=int, default=5)
+    ap.add_argument("--out", default="BENCH_drift.json")
+    args = ap.parse_args()
+    radius = args.radius
+    if radius < 0:
+        radius = 0.09 * (100.0 / args.n) ** (1.0 / args.dim)
+    vs = [float(s) for s in args.vs.split(",")]
+    cadences = [int(s) for s in args.cadences.split(",")]
+    entries = sweep_grid(
+        args.n, args.batch, vs, cadences, args.dim, radius, args.gamma,
+        args.lam, args.w_extra, args.spares, args.noise, args.rounds,
+        args.ss_rounds, args.churn_every,
+    )
+    ref = max(
+        (e for e in entries if e["v"] == 0.05),
+        key=lambda e: e["sweeps_per_round"],
+        default=entries[-1],
+    )
+    out = {
+        "name": "drift", "n": args.n, "batch": args.batch,
+        "betas": list(BETAS), "entries": entries,
+        "rmse_ratio_at_reference": ref["rmse_ratio_beta1_vs_best"],
+        "compiles_after_warmup_total": sum(
+            e["compiles_after_warmup"] for e in entries
+        ),
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(f"rmse_ratio_at_reference: {ref['rmse_ratio_beta1_vs_best']:.1f}x")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,7 @@ def main() -> None:
     from . import (
         churn_bench,
         consensus_bench,
+        drift_bench,
         kernels_bench,
         paper_figs,
         serving_bench,
@@ -53,6 +54,7 @@ def main() -> None:
         ("gossip_vs_allreduce", consensus_bench.gossip_vs_allreduce, False),
         ("serving", serving_bench.serving_fast, False),
         ("churn", churn_bench.churn_fast, False),
+        ("drift", drift_bench.drift_fast, False),
     ]
 
     rows: list[tuple[str, float, str]] = []

@@ -38,6 +38,7 @@ from .sn_train import (
     SNTrainState,
     colored_sweep,
     default_lambdas,
+    effective_coef,
     field_view,
     init_state,
     local_only,
@@ -52,7 +53,13 @@ from .sn_train import (
     weighted_norm_sq_hetero,
     weighted_sweep,
 )
-from .streaming import AbsorbReceipt, add_sensor, remove_sensor
+from .streaming import (
+    AbsorbReceipt,
+    JoinReceipt,
+    absorb_wave,
+    add_sensor,
+    remove_sensor,
+)
 from .topology import (
     SensorTopology,
     build_topology,
@@ -63,6 +70,7 @@ from .topology import (
 
 __all__ = [
     "AbsorbReceipt",
+    "JoinReceipt",
     "Kernel",
     "KRRModel",
     "LifecycleLayout",
@@ -70,6 +78,7 @@ __all__ = [
     "SNTrainState",
     "SensorTopology",
     "ServingPlan",
+    "absorb_wave",
     "add_sensor",
     "make_serving_plan",
     "plan_add_sensor",
@@ -81,6 +90,7 @@ __all__ = [
     "colored_sweep",
     "consensus",
     "default_lambdas",
+    "effective_coef",
     "field_view",
     "fit_krr",
     "fusion",

@@ -39,7 +39,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .sn_train import SNTrainProblem, SNTrainState
+from .sn_train import SNTrainProblem, SNTrainState, effective_coef
 
 
 @partial(jax.jit, static_argnames=("kernel",))
@@ -56,15 +56,22 @@ def _eval_all(kernel, nbr_pos, nbr_mask, coef, xq):
 def evaluate_sensors(
     problem: SNTrainProblem, state: SNTrainState, xq: jax.Array
 ) -> jax.Array:
-    """Per-sensor global estimates at queries: (n, Q), batched (B, n, Q)."""
+    """Per-sensor global estimates at queries: (n, Q), batched (B, n, Q).
+
+    Evaluates the TRUE representer coefficients ``effective_coef`` (the
+    solved coordinates rescaled by the forgetting anchor weights); for
+    static fields (``beta = 1``) the weights are all ones and this is the
+    plain coefficient read.
+    """
     xq = jnp.atleast_2d(jnp.asarray(xq, problem.nbr_pos.dtype))
+    coef = effective_coef(problem, state)
     if problem.batched:
         preds = jax.vmap(
             lambda np_, nm, cf: _eval_all(problem.kernel, np_, nm, cf, xq)
-        )(problem.nbr_pos, problem.nbr_mask, state.coef)
+        )(problem.nbr_pos, problem.nbr_mask, coef)
         return preds[:, : problem.n]
     preds = _eval_all(
-        problem.kernel, problem.nbr_pos, problem.nbr_mask, state.coef, xq
+        problem.kernel, problem.nbr_pos, problem.nbr_mask, coef, xq
     )
     return preds[: problem.n]
 
@@ -177,11 +184,12 @@ def global_coefficients(
         anchors = jnp.concatenate([positions.astype(stream_pos.dtype), stream_pos])
         return anchors, cglob[: n + s_cap]
 
+    ecoef = effective_coef(problem, state)  # true representer coefficients
     if problem.batched:
         return jax.vmap(one_field)(
-            problem.nbr_mask, state.coef, problem.stream_pos
+            problem.nbr_mask, ecoef, problem.stream_pos
         )
-    return one_field(problem.nbr_mask, state.coef, problem.stream_pos)
+    return one_field(problem.nbr_mask, ecoef, problem.stream_pos)
 
 
 def fuse(

@@ -664,3 +664,21 @@ def cells_add(
 def alive_slots(alive: jax.Array, slot_owner: jax.Array) -> jax.Array:
     """(n_z,) message-slot liveness from (n+1,) row liveness."""
     return alive[slot_owner]
+
+
+def degree_headroom(
+    degrees: jax.Array, alive: jax.Array, d_max: int
+) -> jax.Array:
+    """(n,) free reciprocal-anchor lanes per live row (0 for dead rows).
+
+    A symmetric join adopts a candidate only if the candidate's row has a
+    lane to spare for the reciprocal anchor (``degrees < d_max``); rows at
+    zero headroom are skipped and the coupling is silently lost relative
+    to a from-scratch build (``streaming.JoinReceipt.skipped`` reports
+    them per event).  Check this BEFORE a churn campaign: any live row at
+    0 means joins near it will drop edges — rebuild the topology with
+    d_max headroom, or evict arrivals to free lanes.
+    """
+    alive = jnp.asarray(alive, bool)[: degrees.shape[0]]
+    free = jnp.asarray(d_max, degrees.dtype) - degrees
+    return jnp.where(alive, jnp.maximum(free, 0), 0).astype(degrees.dtype)

@@ -74,7 +74,7 @@ import jax
 import jax.numpy as jnp
 
 from . import plans
-from .sn_train import SNTrainProblem, SNTrainState
+from .sn_train import SNTrainProblem, SNTrainState, effective_coef
 
 
 @jax.tree_util.register_dataclass
@@ -317,6 +317,13 @@ def knn_fuse(
     xq = jnp.atleast_2d(jnp.asarray(xq, dt))
     positions = problem.topology.positions.astype(dt)
 
+    # Serving reads the TRUE representer coefficients (the solved
+    # coordinates rescaled by the forgetting anchor weights; all-ones for
+    # static beta = 1 fields) — a value-level rescale, so both engines'
+    # compiled programs and the Pallas kernel's operand shapes are
+    # untouched by forgetting.
+    ecoef = effective_coef(problem, state)
+
     if engine == "pallas":
         from repro.kernels.knn_fuse import knn_fuse_fused
 
@@ -329,12 +336,12 @@ def knn_fuse(
         pos_pad = jnp.concatenate([positions, jnp.zeros((1, xq.shape[1]), dt)])
         if problem.batched:
             nbr_pos, nbr_mask, coef = (
-                problem.nbr_pos, problem.nbr_mask, state.coef,
+                problem.nbr_pos, problem.nbr_mask, ecoef,
             )
         else:
             nbr_pos = problem.nbr_pos[None]
             nbr_mask = problem.nbr_mask[None]
-            coef = state.coef[None]
+            coef = ecoef[None]
         out = knn_fuse_fused(
             xq, cid, plan.cells, plan.cell_mask, pos_pad,
             nbr_pos, nbr_mask, coef,
@@ -349,8 +356,8 @@ def knn_fuse(
             lambda np_, nm, cf: _eval_selected(
                 problem.kernel, np_, nm, cf, sel, valid, xq, k
             )
-        )(problem.nbr_pos, problem.nbr_mask, state.coef)
+        )(problem.nbr_pos, problem.nbr_mask, ecoef)
     return _eval_selected(
-        problem.kernel, problem.nbr_pos, problem.nbr_mask, state.coef,
+        problem.kernel, problem.nbr_pos, problem.nbr_mask, ecoef,
         sel, valid, xq, k,
     )

@@ -196,6 +196,33 @@ class SNTrainProblem:
     # sentinel row n is PERMANENTLY dead — retired lanes point at its slot,
     # and its deadness keeps them retired when spare rows are recycled
 
+    # Exponential forgetting (EW-RLS, Mateos & Giannakis arXiv:1109.4627)
+    # for time-varying fields.  ``beta`` is the per-field forgetting factor
+    # ((B,) batched, scalar single-field; 1.0 = the paper's static field).
+    # ``anchor_w`` holds the per-lane representer anchor weight
+    # omega = beta^(age/2): each absorb at (field, sensor) multiplies the
+    # sensor's occupied STREAM lanes' omega by sqrt(beta) — structural
+    # lanes never decay (they carry the network's live messages, not
+    # time-stamped data).  The invariants the streaming tick maintains:
+    #
+    #   gram[b,s,i,j] = omega_i * omega_j * K(x_i, x_j)   (decay in place)
+    #   chol[b,s]     = chol(gram + diag(occupied ? lambda_s : 1))
+    #   z[b, slot_j]  = omega_j * (message value)          (stream slots)
+    #
+    # lambda is NEVER decayed, so every factor-rebuild path (evict's
+    # downdate, rebuild_chol, robust_sweep's _masked_factors, the
+    # lifecycle _refactor_rows) and every sweep engine (serial / colored
+    # plan|onehot|pallas / sharded / robust) consumes the forgetting state
+    # through these arrays UNCHANGED, and each local solve is exactly the
+    # w-weighted regularized projection min_f sum_j w_j (z_j - f(x_j))^2
+    # + lambda_s ||f||^2 with w_j = omega_j^2 (in omega-scaled coordinates
+    # — the stored coef is v with TRUE representer coefficients
+    # a = anchor_w * v; external evaluators multiply through, see
+    # ``fusion``/``serving``).  With beta = 1.0 every tick multiplies by
+    # exactly 1.0 and is gated bitwise (tests/test_streaming_beta.py).
+    beta: jnp.ndarray  # () / (B,) per-field forgetting factor in (0, 1]
+    anchor_w: jnp.ndarray  # (n+1, D) / (B, n+1, D) per-lane anchor weights
+
     layout: LifecycleLayout  # event-invariant lifecycle metadata (repro.core.plans)
     n_stream: int = dataclasses.field(default=0, metadata=dict(static=True))
 
@@ -274,6 +301,7 @@ def make_problem(
     *,
     dtype=jnp.float32,
     n_max: int | None = None,
+    beta: float = 1.0,
 ) -> SNTrainProblem:
     """Precompute the padded SN-Train problem.
 
@@ -294,7 +322,13 @@ def make_problem(
     so ``streaming.add_sensor`` / ``remove_sensor`` can churn membership at
     fixed shapes, recompile-free.  ``y``/``lambdas`` may be given at the
     base length and are padded (0 / 1.0) over the spare rows.
+
+    beta: forgetting factor in (0, 1] for time-varying fields (see the
+    ``SNTrainProblem`` field docs); 1.0 (default) reproduces the paper's
+    static estimator bitwise.
     """
+    if not 0.0 < float(beta) <= 1.0:
+        raise ValueError(f"beta must be in (0, 1], got {beta}")
     if n_max is not None:
         topology = pad_topology(topology, n_max)
     n, d_max = topology.nbr_idx.shape
@@ -380,6 +414,8 @@ def make_problem(
         color_of=jnp.asarray(color_of),
         member_pos=jnp.asarray(member_pos),
         alive=jnp.asarray(alive0),
+        beta=jnp.asarray(beta, dtype),
+        anchor_w=jnp.ones((n + 1, d_max), dtype),
         layout=layout,
         n_stream=n_stream,
     )
@@ -393,14 +429,19 @@ def make_batch_problem(
     *,
     dtype=jnp.float32,
     n_max: int | None = None,
+    beta: float | jax.Array = 1.0,
 ) -> SNTrainProblem:
     """B independent fields over one network: ``ys`` is (B, n).
 
     Geometry (topology, regularizers, message-slot ids, liveness) is
     shared; the per-field ``nbr_pos``/``nbr_mask``/``gram``/``chol``/
-    ``stream_pos`` arrays start as B identical copies and diverge only
-    under streaming absorption.  ``n_max`` reserves lifecycle capacity as
-    in ``make_problem``.
+    ``stream_pos``/``anchor_w`` arrays start as B identical copies and
+    diverge only under streaming absorption.  ``n_max`` reserves lifecycle
+    capacity as in ``make_problem``.
+
+    beta: per-field forgetting factors — a scalar (shared) or a (B,)
+    vector, so one batch can mix static (beta = 1.0) and time-varying
+    (beta < 1) fields; each field's absorbs decay that field only.
     """
     ys = jnp.asarray(ys, dtype)
     if ys.ndim != 2:
@@ -408,6 +449,9 @@ def make_batch_problem(
     base = make_problem(topology, kernel, ys[0], lambdas, dtype=dtype, n_max=n_max)
     ys = _pad_per_sensor(ys, base.n, 0.0)
     b = ys.shape[0]
+    beta = jnp.broadcast_to(jnp.asarray(beta, dtype), (b,))
+    if not bool(jnp.all((beta > 0.0) & (beta <= 1.0))):
+        raise ValueError(f"beta must be in (0, 1] per field, got {beta}")
 
     def tile(a):
         return jnp.broadcast_to(a[None], (b,) + a.shape)
@@ -420,6 +464,8 @@ def make_batch_problem(
         gram=tile(base.gram),
         chol=tile(base.chol),
         stream_pos=tile(base.stream_pos),
+        beta=beta,
+        anchor_w=tile(base.anchor_w),
     )
 
 
@@ -437,6 +483,8 @@ def field_view(
         gram=problem.gram[b],
         chol=problem.chol[b],
         stream_pos=problem.stream_pos[b],
+        beta=problem.beta[b],
+        anchor_w=problem.anchor_w[b],
     )
     return prob, SNTrainState(z=state.z[b], coef=state.coef[b])
 
@@ -448,6 +496,14 @@ def weighted_norm_sq(problem: SNTrainProblem, state: SNTrainState) -> jax.Array:
     non-increasing along ANY admissible SOP ordering — the invariant the
     property tests assert.  Note ||f_i||^2 = c_i^T K_i c_i.  Batched inputs
     return one norm per field, shape (B,).
+
+    Forgetting (beta < 1): ``gram`` and the stream slots of ``z`` carry the
+    anchor weights in place, so this expression IS the w-weighted product
+    norm sum_j w_j z_j^2 + sum_i lambda_i ||f_i||^2 — the norm each
+    weighted projection is orthogonal in.  It stays non-increasing across
+    sweeps BETWEEN forgetting ticks; each absorb tick rescales the norm
+    itself (the steady-state-error bound of tests/test_streaming_beta.py
+    replaces cross-tick Fejér monotonicity).
     """
     z_part = jnp.sum(state.z[..., :-1] ** 2, axis=-1)  # excludes the sentinel
     quad = jnp.einsum(
@@ -474,6 +530,22 @@ def init_state(problem: SNTrainProblem) -> SNTrainState:
         z = jnp.concatenate([problem.y, jnp.zeros((pad,), dt)])
         coef = jnp.zeros((n + 1, d_max), dt)
     return SNTrainState(z=z, coef=coef)
+
+
+def effective_coef(problem: SNTrainProblem, state: SNTrainState) -> jax.Array:
+    """TRUE representer coefficients a = anchor_w * coef.
+
+    The sweep engines store coefficients in omega-scaled coordinates (see
+    the ``SNTrainProblem.anchor_w`` docs): the field estimate is
+    f_s(x) = sum_j anchor_w[s, j] * coef[s, j] * K(x, x_j).  Everything
+    INSIDE the training loop consumes gram/chol/z, which carry the weights
+    in place; evaluators that expand f_s against raw kernel values
+    (``fusion``, ``serving``, the Pallas knn_fuse / kernel_matvec serving
+    kernels) must evaluate these effective coefficients instead.  With
+    beta = 1.0 ``anchor_w`` is exactly 1.0 everywhere and this is a
+    bitwise identity.
+    """
+    return state.coef * problem.anchor_w.astype(state.coef.dtype)
 
 
 def _sensor_update(z, coef_s, nbr_idx_s, nbr_mask_s, gram_s, chol_s, lam_s):

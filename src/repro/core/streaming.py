@@ -46,6 +46,28 @@ invariant the grow-one update relies on) and the sensor's factor is
 downdated by a masked rebuild of its (D, D) Cholesky, O(D^3) for ONE sensor.
 ``absorb(..., on_full="evict")`` applies it automatically, turning each
 sensor's stream slots into a sliding window over its most recent arrivals.
+
+Time-varying fields (exponential forgetting / EW-RLS, the arXiv:1109.4627
+recursion): a problem built with ``beta < 1`` for a field decays that
+field's OLD arrivals one beta step per absorb — each absorb at (field,
+sensor) multiplies the sensor's occupied stream lanes' anchor weights
+omega by sqrt(beta) (``problem.anchor_w``), rescales the cached Gram /
+message slots in place, and patches the cached Cholesky factor by
+scale-then-update: a sqrt(beta) row scale followed by one rank-1 update
+per ticked lane restoring the UNDECAYED +lambda on the matrix diagonal
+(``_chol_diag_update``) — O(D^2) per ticked lane, no refactorization.
+Because lambda never decays, every factor-rebuild path (``rebuild_chol``,
+evict's masked downdate, the lifecycle ``_refactor_rows``, robust
+re-factorization) and every sweep engine consumes the forgetting state
+unchanged, and each local solve becomes the w-weighted projection
+min_f sum_j w_j (z_j - f(x_j))^2 + lambda_s ||f||^2 with w_j = omega_j^2
+— old measurements fade instead of anchoring the fit to the time-average.
+Sliding-window RLS is the composition that already exists: ``absorb(...,
+on_full="evict")`` plus ``beta < 1`` gives an exponentially-weighted
+window over each sensor's most recent arrivals.  With ``beta = 1.0``
+every tick multiplies by exactly 1.0 and the factor restore is gated, so
+the static path is BITWISE identical to no forgetting at all
+(tests/test_streaming_beta.py pins this engine by engine).
 """
 
 from __future__ import annotations
@@ -60,6 +82,33 @@ import jax.scipy.linalg as jsl
 
 from . import plans
 from .sn_train import SNTrainProblem, SNTrainState
+
+
+class JoinReceipt(NamedTuple):
+    """Outcome of one symmetric join (``add_sensor``), all fixed shapes.
+
+    ``joined``: () bool — False means the join was a bitwise no-op (no
+    spare row, or the recolor pool was exhausted).
+    ``slot``: () int32 — the claimed row (meaningful when ``joined``).
+    ``adopted``/``adopted_mask``: (A,) int32 / bool — the neighbor rows
+    that adopted a reciprocal anchor lane (sentinel ``n`` padded).
+    ``skipped``/``skipped_mask``: (A,) int32 / bool — live IN-RADIUS
+    neighbors that were NOT adopted because their rows have no free lane
+    (``degrees == d_max``).  Each is a silently lost coupling relative to
+    a from-scratch build; callers rebalance (rebuild with d_max headroom,
+    or evict arrivals to free lanes) — see ``plans.degree_headroom``.
+    ``dropped_newest``: (B, A) bool — fields whose adopter row was
+    completely FULL: growing the reciprocal anchor lane dropped that
+    field's newest absorbed arrival (its orphaned slot is zeroed).
+    """
+
+    joined: jax.Array
+    slot: jax.Array
+    adopted: jax.Array
+    adopted_mask: jax.Array
+    skipped: jax.Array
+    skipped_mask: jax.Array
+    dropped_newest: jax.Array
 
 
 class AbsorbReceipt(NamedTuple):
@@ -87,6 +136,45 @@ def capacity_left(problem: SNTrainProblem) -> jnp.ndarray:
     return jnp.sum(~problem.nbr_mask[:, :-1, :] & absorbable[None], axis=-1)
 
 
+def _chol_diag_update(chol_s: jax.Array, alpha: jax.Array) -> jax.Array:
+    """chol(L L^T + diag(alpha^2)) via one classic rank-1 update per lane.
+
+    The "update" half of the forgetting tick's scale-then-update: row
+    scaling the cached factor by sqrt(beta) decays the ticked stream
+    lanes' ENTIRE matrix diagonal, lambda included; this restores the
+    undecayed regularizer (+(1 - beta) * lambda per ticked lane), keeping
+    every local system >= lambda I and every full-lambda rebuild path
+    consistent with the cached factor.  ``alpha`` is (D,) with zeros on
+    untouched lanes; a zero entry is neutral only in exact arithmetic
+    (sqrt(l*l) costs an ulp), so callers gate the whole call on beta < 1
+    to keep the static path bitwise.  Fixed-shape fori_loops, O(D^2) per
+    nonzero lane.
+    """
+    d = chol_s.shape[-1]
+    ar = jnp.arange(d)
+
+    def one_lane(j, L):
+        x0 = jnp.zeros((d,), L.dtype).at[j].set(alpha[j])
+
+        def one_row(i, carry):
+            L, x = carry
+            lii = L[i, i]
+            xi = x[i]
+            r = jnp.sqrt(lii * lii + xi * xi)
+            c = r / lii
+            s = xi / lii
+            below = ar > i
+            col = L[:, i]
+            new_col = jnp.where(below, (col + s * x) / c, col).at[i].set(r)
+            x = jnp.where(below, c * x - s * new_col, x)
+            return L.at[:, i].set(new_col), x
+
+        L, _ = jax.lax.fori_loop(0, d, one_row, (L, x0))
+        return L
+
+    return jax.lax.fori_loop(0, d, one_lane, chol_s)
+
+
 def _absorb(
     problem: SNTrainProblem,
     state: SNTrainState,
@@ -112,21 +200,51 @@ def _absorb(
     pos_s = problem.nbr_pos[field, sensor]  # (D, d)
     lam_s = problem.lam_pad[sensor]
 
+    # ---- forgetting tick (scale-then-update, module docstring) --------
+    # The sensor's occupied STREAM lanes age one beta step: anchor weights
+    # omega *= sqrt(beta), the Gram rows/cols and the lanes' message slots
+    # rescale to match, and the cached factor is row-scaled then patched
+    # with a rank-1-per-lane diagonal restore of the undecayed lambda.
+    # Structural lanes never decay.  beta = 1.0 multiplies by exactly 1.0
+    # everywhere and the restore is gated: bitwise-identical static path.
+    gdt = problem.gram.dtype
+    ids_s = problem.nbr_idx[sensor]  # (D,)
+    beta_b = problem.beta[field].astype(gdt)
+    is_stream = mask_s & (ids_s >= n) & (ids_s != problem.sentinel)
+    root = jnp.sqrt(beta_b)
+    s_vec = jnp.where(is_stream, root, jnp.ones((), gdt))  # (D,)
+    aw_old = problem.anchor_w[field, sensor]  # (D,)
+    aw_s = aw_old * s_vec.astype(aw_old.dtype)
+    gram_s = problem.gram[field, sensor] * (s_vec[:, None] * s_vec[None, :])
+    chol_s = problem.chol[field, sensor] * s_vec[:, None].astype(
+        problem.chol.dtype
+    )
+    alpha = jnp.where(
+        is_stream, jnp.sqrt((1.0 - beta_b) * lam_s.astype(gdt)), 0.0
+    )
+    chol_s = jnp.where(
+        beta_b < 1.0, _chol_diag_update(chol_s, alpha), chol_s
+    )
+
     # The kernel vector is masked to the EFFECTIVE lanes (occupied & alive):
     # a removed neighbor's lane keeps its occupancy but is factored out of
     # the cached Cholesky, and must stay out of the grow-one update too.
+    # Anchor weights ride along (gram row (new, j) = omega_j * K; the fresh
+    # arrival enters at omega = 1).
     mask_eff = mask_s & problem.alive_z[problem.nbr_idx[sensor]]
-    kvec = jnp.where(mask_eff, problem.kernel(x[None, :], pos_s)[0], 0.0)  # (D,)
+    kvec = jnp.where(
+        mask_eff,
+        problem.kernel(x[None, :], pos_s)[0] * aw_s.astype(dt),
+        0.0,
+    )  # (D,)
     kself = problem.kernel(x[None, :], x[None, :])[0, 0]
 
     new_row = kvec.at[k].set(kself)
-    gram_s = problem.gram[field, sensor]
     gram_s = gram_s.at[k, :].set(new_row).at[:, k].set(new_row)
 
     # Grow-one Cholesky: rows >= k of chol[s] are identity (padded), so the
     # full-shape triangular solve returns w on the valid prefix and zeros
     # elsewhere; only row k of the factor changes.
-    chol_s = problem.chol[field, sensor]
     w = jsl.solve_triangular(chol_s, kvec, lower=True)
     d_new = jnp.sqrt(jnp.maximum(kself + lam_s - jnp.sum(w * w), 1e-12))
     chol_s = chol_s.at[k, :].set(w.at[k].set(d_new))
@@ -155,12 +273,21 @@ def _absorb(
         stream_pos=problem.stream_pos.at[field, sp_idx].set(
             jnp.where(ok, x, problem.stream_pos[field, sp_idx])
         ),
+        anchor_w=problem.anchor_w.at[field, sensor].set(
+            jnp.where(ok, aw_s.at[k].set(1.0), aw_old)
+        ),
     )
-    # The arrival seeds its own message slot (Table-1 init z_0 = y); the
+    # The ticked lanes' message slots decay with their anchors (the stored
+    # z invariant is omega_j * value; x1.0 writes when beta = 1 / not ok),
+    # then the arrival seeds its own slot (Table-1 init z_0 = y); the
     # sensor's coefficient for the new slot starts at 0.
+    z_scale = jnp.where(
+        is_stream & ok, root, jnp.ones((), gdt)
+    ).astype(state.z.dtype)
+    z = state.z.at[field, ids_s].multiply(z_scale)
     z_idx = jnp.where(ok, zid, problem.sentinel)
     state = SNTrainState(
-        z=state.z.at[field, z_idx].set(jnp.where(ok, y, state.z[field, z_idx])),
+        z=z.at[field, z_idx].set(jnp.where(ok, y, z[field, z_idx])),
         coef=state.coef,
     )
     return problem, state, ok
@@ -321,6 +448,267 @@ def absorb_many(
     return fn(problem, state, fields, sensors, xs, ys)
 
 
+def _absorb_wave_core(problem, state, xs, ys, amask, evict):
+    """Batched arrival wave: one optional arrival per (field, sensor).
+
+    The per-pair update of ``_absorb`` (and ``_evict_core`` under
+    ``evict``) writes only (field, sensor)-local rows plus message/stream
+    slots OWNED by that sensor, so a wave of arrivals at DISTINCT pairs
+    — which the (B, n) operand layout enforces structurally — commutes:
+    this computes every row's tick + evict + grow-one update as one
+    batched tensor program (no scan), equal to absorbing the arrivals
+    sequentially in any order.  O(B * n * D^3) fully parallel work; the
+    serving configuration for dense per-round streams (every sensor
+    measures every round — the drift-tracking regime), where the
+    scan-based ``absorb_many`` would pay B*n sequential steps.
+    """
+    n = problem.n
+    r_rows, d_max = problem.nbr_idx.shape  # R = n + 1 (sentinel row last)
+    f = problem.batch_size
+    s_cap = problem.n_stream
+    dt = problem.nbr_pos.dtype
+    gdt = problem.gram.dtype
+    ar = jnp.arange(d_max)
+    ids = problem.nbr_idx  # (R, D)
+    sentinel_id = problem.sentinel
+    absorbable = ids != sentinel_id  # (R, D)
+    xs = jnp.asarray(xs, dt)  # (F, n, d)
+    ys = jnp.asarray(ys, state.z.dtype)  # (F, n)
+    amask = jnp.asarray(amask, bool)  # (F, n)
+    # extend arrival operands to the R = n + 1 rows (sentinel row inert)
+    pad_r = ((0, 0), (0, r_rows - xs.shape[1]), (0, 0))
+    xs = jnp.pad(xs, pad_r)
+    ys = jnp.pad(ys, pad_r[:2])
+    amask = jnp.pad(amask, pad_r[:2])
+    deg = jnp.pad(problem.topology.degrees, (0, r_rows - n))  # (R,)
+    own_pos = jnp.pad(
+        problem.topology.positions.astype(dt), pad_r[1:]
+    )  # (R, d)
+    lam_r = problem.lam_pad[None, :, None]  # (1, R, 1)
+    lane_alive = problem.alive_z[ids]  # (R, D)
+    chol2 = jax.vmap(jax.vmap(lambda m: jsl.cholesky(m, lower=True)))
+    z = state.z
+    coef = state.coef
+    ev_ok = jnp.zeros((f, r_rows), bool)
+
+    if evict:
+        # ---- batched _evict_core, gated to FULL rows with an arrival --
+        mask = problem.nbr_mask  # (F, R, D)
+        full = jnp.all(mask | ~absorbable[None], axis=-1)  # (F, R)
+        occ = mask & (ar[None, None] >= deg[None, :, None])
+        ev_ok = (
+            occ.any(-1) & full & amask & problem.alive[None]
+        )  # (F, R)
+        last = deg[None] + occ.sum(-1) - 1  # (F, R)
+        above = ar[None, None] >= deg[None, :, None]  # lanes past structure
+        perm = jnp.where(
+            above & (ar[None, None] < last[..., None]),
+            ar[None, None] + 1, ar[None, None],
+        )  # (F, R, D)
+        freed = ar[None, None] == last[..., None]  # (F, R, D)
+        keep = ~freed
+
+        pos_p = jnp.take_along_axis(
+            problem.nbr_pos, perm[..., None], axis=2
+        )
+        new_pos = jnp.where(
+            freed[..., None], own_pos[None, :, None, :], pos_p
+        )
+        new_mask = jnp.where(freed, False, jnp.take_along_axis(mask, perm, 2))
+        g1 = jnp.take_along_axis(problem.gram, perm[..., None], axis=2)
+        g2 = jnp.take_along_axis(g1, perm[..., None, :], axis=3)
+        g2 = jnp.where(keep[..., None] & keep[..., None, :], g2, 0.0)
+        aw_p = jnp.take_along_axis(problem.anchor_w, perm, axis=2)
+        aw2 = jnp.where(freed, jnp.ones((), problem.anchor_w.dtype), aw_p)
+        diag = jnp.where(
+            new_mask & lane_alive[None], lam_r, jnp.ones((), gdt)
+        )
+        new_chol = chol2(g2 + diag[..., None] * jnp.eye(d_max, dtype=gdt))
+
+        okB = ev_ok[..., None]
+        problem = dataclasses.replace(
+            problem,
+            nbr_pos=jnp.where(okB[..., None], new_pos, problem.nbr_pos),
+            nbr_mask=jnp.where(okB, new_mask, problem.nbr_mask),
+            gram=jnp.where(okB[..., None], g2, problem.gram),
+            chol=jnp.where(okB[..., None], new_chol, problem.chol),
+            anchor_w=jnp.where(okB, aw2, problem.anchor_w),
+        )
+        # messages/coefficients/stream positions ride their slots; every
+        # slot this writes is OWNED by its row (stream ids are unique to
+        # one row; structural/sentinel lanes write their current values
+        # back), so the flat scatter has no conflicting duplicates.
+        zvals = z[:, ids.reshape(-1)].reshape(f, r_rows, d_max)
+        tvals = jnp.where(freed, 0.0, jnp.take_along_axis(zvals, perm, 2))
+        z_write = jnp.where(
+            okB & above & absorbable[None], tvals, zvals
+        )
+        z = z.at[:, ids.reshape(-1)].set(z_write.reshape(f, -1))
+        c_new = jnp.where(
+            freed, 0.0, jnp.take_along_axis(coef, perm, 2)
+        )
+        coef = jnp.where(okB & above, c_new, coef)
+        spv = jnp.pad(problem.stream_pos, ((0, 0), (0, 1), (0, 0)))
+        sp_gather = jnp.where(
+            ar[None, :] >= deg[:, None], jnp.clip(ids - n, 0, s_cap), s_cap
+        )  # (R, D); sentinel-retired lanes land in the dump row
+        cur_sp = spv[:, sp_gather.reshape(-1)].reshape(
+            f, r_rows, d_max, -1
+        )
+        sp_vals = jnp.where(
+            freed[..., None], 0.0,
+            jnp.take_along_axis(cur_sp, perm[..., None], axis=2),
+        )
+        sp_idx = jnp.where(
+            ev_ok[..., None] & above, jnp.clip(ids - n, 0, s_cap)[None],
+            s_cap,
+        )  # (F, R, D); everything not-ok dumps past the slice
+        spv = spv.at[jnp.arange(f)[:, None, None], sp_idx].set(sp_vals)
+        problem = dataclasses.replace(problem, stream_pos=spv[:, :s_cap])
+
+    # ---- batched _absorb: tick + weighted grow-one per (field, row) ---
+    mask = problem.nbr_mask  # (F, R, D)
+    free = ~mask & absorbable[None]
+    ok = free.any(-1) & problem.alive[None] & amask  # (F, R)
+    k = jnp.argmax(free, axis=-1)  # (F, R) first free slot
+    zid = jnp.take_along_axis(
+        jnp.broadcast_to(ids[None], (f, r_rows, d_max)), k[..., None], 2
+    )[..., 0]  # (F, R)
+    at_k = ar[None, None] == k[..., None]  # (F, R, D)
+
+    beta_b = problem.beta.astype(gdt)[:, None, None]  # (F, 1, 1)
+    is_stream = mask & (ids >= n)[None] & absorbable[None]
+    root = jnp.sqrt(beta_b)
+    s_vec = jnp.where(is_stream, root, jnp.ones((), gdt))  # (F, R, D)
+    aw_s = problem.anchor_w * s_vec.astype(problem.anchor_w.dtype)
+    gram_s = problem.gram * (s_vec[..., :, None] * s_vec[..., None, :])
+    chol_s = problem.chol * s_vec[..., :, None].astype(problem.chol.dtype)
+    alpha = jnp.where(
+        is_stream, jnp.sqrt((1.0 - beta_b) * lam_r.astype(gdt)), 0.0
+    )
+    chol_s = jnp.where(
+        (beta_b < 1.0)[..., None],
+        jax.vmap(jax.vmap(_chol_diag_update))(chol_s, alpha),
+        chol_s,
+    )
+
+    mask_eff = mask & lane_alive[None]
+    flat_x = xs.reshape(f * r_rows, -1)
+    flat_p = problem.nbr_pos.reshape(f * r_rows, d_max, -1)
+    kv = jax.vmap(lambda x, p: problem.kernel(x[None], p)[0])(
+        flat_x, flat_p
+    ).reshape(f, r_rows, d_max)
+    kself = jax.vmap(lambda x: problem.kernel(x[None], x[None])[0, 0])(
+        flat_x
+    ).reshape(f, r_rows)
+    kvec = jnp.where(mask_eff, kv * aw_s.astype(kv.dtype), 0.0)
+    new_row = jnp.where(at_k, kself[..., None], kvec)
+    gram_s = jnp.where(at_k[..., :, None], new_row[..., None, :], gram_s)
+    gram_s = jnp.where(at_k[..., None, :], new_row[..., :, None], gram_s)
+
+    w = jax.vmap(jax.vmap(
+        lambda L, b: jsl.solve_triangular(L, b, lower=True)
+    ))(chol_s, kvec)
+    d_new = jnp.sqrt(jnp.maximum(
+        kself + lam_r[..., 0] - jnp.sum(w * w, -1), 1e-12
+    ))
+    chol_row = jnp.where(at_k, d_new[..., None], w)
+    chol_s = jnp.where(at_k[..., :, None], chol_row[..., None, :], chol_s)
+
+    okB = ok[..., None]
+    problem = dataclasses.replace(
+        problem,
+        nbr_pos=jnp.where(
+            (okB & at_k)[..., None], xs[:, :, None, :], problem.nbr_pos
+        ),
+        nbr_mask=jnp.where(okB & at_k, True, problem.nbr_mask),
+        gram=jnp.where(okB[..., None], gram_s, problem.gram),
+        chol=jnp.where(okB[..., None], chol_s, problem.chol),
+        anchor_w=jnp.where(
+            okB, jnp.where(at_k, 1.0, aw_s), problem.anchor_w
+        ),
+    )
+    sp_idx = jnp.where(ok, zid - n, s_cap)  # (F, R); dump past the slice
+    spv = jnp.pad(problem.stream_pos, ((0, 0), (0, 1), (0, 0)))
+    spv = spv.at[jnp.arange(f)[:, None], sp_idx].set(
+        jnp.where(ok[..., None], xs, 0.0)
+    )
+    problem = dataclasses.replace(problem, stream_pos=spv[:, :s_cap])
+
+    # z: decay the ticked lanes' message slots (owned by their rows), then
+    # seed each arrival's slot (all writes owner-unique or value-neutral)
+    z_scale = jnp.where(
+        is_stream & okB, root, jnp.ones((), gdt)
+    ).astype(z.dtype)
+    z = z.at[:, ids.reshape(-1)].multiply(z_scale.reshape(f, -1))
+    z_idx = jnp.where(ok, zid, sentinel_id)  # not-ok rows hit the sentinel
+    cur = jnp.take_along_axis(z, z_idx, axis=1)
+    z = z.at[jnp.arange(f)[:, None], z_idx].set(
+        jnp.where(ok, ys, cur)
+    )
+    receipt = AbsorbReceipt(
+        absorbed=ok[:, :n], evicted=ev_ok[:, :n]
+    )
+    return problem, SNTrainState(z=z, coef=coef), receipt
+
+
+_absorb_wave_drop_copy = jax.jit(partial(_absorb_wave_core, evict=False))
+_absorb_wave_drop_donate = jax.jit(
+    partial(_absorb_wave_core, evict=False), donate_argnums=(0, 1))
+_absorb_wave_evict_copy = jax.jit(partial(_absorb_wave_core, evict=True))
+_absorb_wave_evict_donate = jax.jit(
+    partial(_absorb_wave_core, evict=True), donate_argnums=(0, 1))
+
+
+def absorb_wave(
+    problem: SNTrainProblem,
+    state: SNTrainState,
+    xs: jax.Array,
+    ys: jax.Array,
+    *,
+    mask: jax.Array | None = None,
+    donate: bool = False,
+    on_full: str = "drop",
+) -> tuple[SNTrainProblem, SNTrainState, AbsorbReceipt]:
+    """Absorb up to ONE arrival per (field, sensor) in one batched dispatch.
+
+    ``xs`` is (B, n, d) arrival locations, ``ys`` (B, n) values, ``mask``
+    an optional (B, n) bool selecting which pairs actually have an arrival
+    (default: all).  Equal to absorbing the masked arrivals one
+    ``absorb(..., on_full=...)`` at a time (every per-pair update touches
+    only its own row and its own reserved message/stream slots, so the
+    wave order cannot matter) — but as one O(B*n*D^3) data-parallel
+    program instead of a B*n-step scan: the dense-stream configuration
+    (every sensor measures every round) that drift tracking under
+    ``beta < 1`` wants, where ``absorb_many`` would be quadratically
+    slower.  Returns an ``AbsorbReceipt`` with (B, n) flag arrays.
+    """
+    if not problem.batched:
+        raise ValueError("streaming requires a batched problem (use B = 1)")
+    if problem.n_stream == 0:
+        raise ValueError(
+            "problem has no streaming capacity — build the topology with "
+            "d_max headroom (build_topology(pos, r, d_max=max_degree + k))"
+        )
+    if on_full not in ("drop", "evict"):
+        raise ValueError(f"on_full must be 'drop' or 'evict', got {on_full!r}")
+    n, b = problem.n, problem.batch_size
+    xs = jnp.asarray(xs, problem.nbr_pos.dtype)
+    ys = jnp.asarray(ys, state.z.dtype)
+    if xs.shape[:2] != (b, n) or ys.shape != (b, n):
+        raise ValueError(
+            f"xs must be (B={b}, n={n}, d) and ys (B, n), got "
+            f"{xs.shape} / {ys.shape}"
+        )
+    if mask is None:
+        mask = jnp.ones((b, n), bool)
+    if on_full == "evict":
+        fn = _absorb_wave_evict_donate if donate else _absorb_wave_evict_copy
+    else:
+        fn = _absorb_wave_drop_donate if donate else _absorb_wave_drop_copy
+    return fn(problem, state, xs, ys, mask)
+
+
 def _evict_core(
     problem: SNTrainProblem,
     state: SNTrainState,
@@ -353,9 +741,13 @@ def _evict_core(
 
     # Gram: permute rows/cols (exact — the kept entries are the very floats
     # the original absorptions computed), then zero the freed row/col.
+    # Anchor weights ride the same permutation (forgetting state survives
+    # the window slide); the freed lane resets to the fresh weight 1.
     g = problem.gram[field, sensor]
     keep = ~freed
     g2 = jnp.where(keep[:, None] & keep[None, :], g[perm][:, perm], 0.0)
+    aw = problem.anchor_w[field, sensor]
+    aw2 = jnp.where(freed, jnp.ones((), aw.dtype), aw[perm])
 
     # Downdate = masked rebuild of this ONE sensor's factor, O(D^3): padded
     # AND lifecycle-dead lanes get unit diagonal (matching the effective
@@ -402,6 +794,9 @@ def _evict_core(
             jnp.where(ok, new_chol, problem.chol[field, sensor])
         ),
         stream_pos=problem.stream_pos.at[field].set(new_sp),
+        anchor_w=problem.anchor_w.at[field, sensor].set(
+            jnp.where(ok, aw2, aw)
+        ),
     )
     return problem, SNTrainState(z=z, coef=coef), ok
 
@@ -503,7 +898,7 @@ def _refactor_rows(problem, alive_new, rows, idx_rows, mask_rows, gram_rows):
     return jax.vmap(jax.vmap(lambda m: jsl.cholesky(m, lower=True)))(a)
 
 
-def _add_sensor_core(problem, state, x, ys, lam):
+def _add_sensor_core(problem, state, x, ys, lam, repair, kappa):
     n = problem.n
     n_rows, d_max = problem.nbr_idx.shape
     dt = problem.nbr_pos.dtype
@@ -514,6 +909,8 @@ def _add_sensor_core(problem, state, x, ys, lam):
     x = jnp.asarray(x, dt).reshape(-1)  # (d,)
     ys = jnp.asarray(ys, state.z.dtype).reshape(-1)  # (B,)
     lam = jnp.asarray(lam, problem.lam_pad.dtype)
+    repair = jnp.asarray(repair, bool)
+    kappa = jnp.asarray(kappa, problem.lam_pad.dtype)
 
     # 1. Claim the first dead SPARE row (spares carry reserved singleton
     # colors, so the NEWCOMER never invalidates the frozen distance-2
@@ -531,17 +928,23 @@ def _add_sensor_core(problem, state, x, ys, lam):
     pos = topo.positions.astype(dt)  # (n, d)
     d2 = jnp.sum((pos - x[None, :]) ** 2, axis=-1)  # (n,)
     radius = jnp.asarray(topo.radius, dt)
-    cand = (
-        problem.alive[:n]
-        & (d2 < radius * radius)
-        & (topo.degrees < d_max)
-    )
+    in_radius = problem.alive[:n] & (d2 < radius * radius)
+    cand = in_radius & (topo.degrees < d_max)
     neg = jnp.where(cand, -d2, -jnp.inf)
     k_n = min(d_max - 1, n)  # static lane budget for adopted neighbors
     vals, ids = jax.lax.top_k(neg, k_n)  # nearest live first
     valid0 = jnp.isfinite(vals)  # (k_n,)
     c = 1 + jnp.sum(valid0)  # occupied lane count (self included)
-    lam = jnp.where(lam >= 0, lam, 0.01 / c.astype(lam.dtype) ** 2)
+    lam = jnp.where(lam >= 0, lam, kappa / c.astype(lam.dtype) ** 2)
+
+    # Lane-exhausted in-radius sensors are NOT adopted in either direction
+    # (the symmetric coupling would need a reciprocal lane they don't
+    # have): each is a lost coupling relative to a from-scratch build on
+    # the post-join positions.  Reported in the JoinReceipt so callers can
+    # rebalance (plans.degree_headroom) instead of silently losing edges.
+    exhausted = in_radius & (topo.degrees >= d_max)
+    sk_vals, sk_ids = jax.lax.top_k(jnp.where(exhausted, -d2, -jnp.inf), k_n)
+    sk_valid = jnp.isfinite(sk_vals)  # (k_n,)
 
     # 3. Conflict-aware recoloring: adopters all gain the newcomer's slot
     # as a shared neighbor, so same-color adopter pairs now violate the
@@ -605,7 +1008,11 @@ def _add_sensor_core(problem, state, x, ys, lam):
     old_mask_r = problem.nbr_mask[:, rows]  # (B, A, D)
     old_gram_r = problem.gram[:, rows]  # (B, A, D, D)
     old_chol_r = problem.chol[:, rows]
+    old_aw_r = problem.anchor_w[:, rows]  # (B, A, D)
     old_coef_r = state.coef[:, rows]
+    # a field whose adopter row was completely FULL loses its newest
+    # arrival to the inserted anchor lane — reported per (field, adopter)
+    dropped = old_mask_r[:, :, d_max - 1] & valid[None, :]  # (B, A)
     pos_sh = jnp.take_along_axis(old_pos_r, src[None, :, :, None], axis=2)
     new_pos_r = jnp.where(
         at_new[None, :, :, None], x[None, None, None, :], pos_sh
@@ -614,14 +1021,36 @@ def _add_sensor_core(problem, state, x, ys, lam):
     new_mask_r = jnp.where(at_new[None], True, mask_sh)
     coef_sh = jnp.take_along_axis(old_coef_r, src[None], axis=2)
     new_coef_r = jnp.where(at_new[None], 0.0, coef_sh)
+    # anchor weights shift with their lanes; the inserted structural
+    # anchor lane enters at the undecayed weight 1
+    aw_sh = jnp.take_along_axis(old_aw_r, src[None], axis=2)
+    new_aw_r = jnp.where(at_new[None], jnp.ones((), aw_sh.dtype), aw_sh)
     g1 = jnp.take_along_axis(old_gram_r, src[None, :, :, None], axis=2)
     g2 = jnp.take_along_axis(g1, src[None, :, None, :], axis=3)
-    # the anchor's kernel row vs the row's occupied lanes (K(x,x) at deg)
+    # the anchor's kernel row vs the row's occupied lanes (K(x,x) at deg);
+    # decayed stream lanes carry their anchor weights into the new row
+    # (gram invariant: entry (i, j) = omega_i * omega_j * K)
     kv = problem.kernel(x[None, :], new_pos_r.reshape(-1, x.shape[0]))[0]
     kv = kv.reshape(new_pos_r.shape[:-1])  # (B, A, D)
-    krow = jnp.where(new_mask_r, kv, 0.0).astype(problem.gram.dtype)
+    krow = jnp.where(
+        new_mask_r, kv * new_aw_r.astype(kv.dtype), 0.0
+    ).astype(problem.gram.dtype)
     g3 = jnp.where(at_new[None, :, None, :], krow[..., None], g2)
     g3 = jnp.where(at_new[None, :, :, None], krow[..., None, :], g3)
+
+    # Opt-in lambda repair (paper rule lambda_i = kappa / |N_i|^2): the
+    # adopters' degrees grew by one, so their build-time regularizers are
+    # stale relative to a from-scratch build.  Repairing rides the very
+    # refactorization this event already pays — _refactor_rows reads
+    # lam_pad, so patch it first.  repair=False writes the old floats
+    # back (bitwise no-op).
+    deg_new = (deg_r + 1).astype(problem.lam_pad.dtype)
+    lam_fix = kappa / (deg_new * deg_new)
+    do_fix = repair & valid
+    lam_pad2 = problem.lam_pad.at[rows].set(
+        jnp.where(do_fix, lam_fix, problem.lam_pad[rows])
+    )
+    problem = dataclasses.replace(problem, lam_pad=lam_pad2)
 
     # Affected-row refactorization (the adopters' factors gain a middle
     # row, so the rank-1 grow-one update does not apply): one batched
@@ -681,6 +1110,14 @@ def _add_sensor_core(problem, state, x, ys, lam):
             problem.chol[:, slot],
         )
     )
+    anchor_w2 = problem.anchor_w.at[:, rows].set(
+        jnp.where(vB, new_aw_r, old_aw_r)
+    ).at[:, slot].set(
+        gate(
+            jnp.ones((b, d_max), problem.anchor_w.dtype),
+            problem.anchor_w[:, slot],
+        )
+    )
 
     # 7. Color bookkeeping: recolored adopters change classes, the
     # newcomer (re)enters its reserved singleton class, and every repaired
@@ -737,6 +1174,7 @@ def _add_sensor_core(problem, state, x, ys, lam):
         chol=chol2,
         lam_pad=problem.lam_pad.at[slot].set(gate(lam, problem.lam_pad[slot])),
         stream_pos=stream_pos2,
+        anchor_w=anchor_w2,
         plan_z=plan_z,
         plan_coef=plan_coef,
         color_members=cm,
@@ -756,7 +1194,16 @@ def _add_sensor_core(problem, state, x, ys, lam):
     coef = state.coef.at[:, rows].set(
         jnp.where(vB, new_coef_r, old_coef_r)
     ).at[:, slot].set(jnp.where(ok, 0.0, state.coef[:, slot]))
-    return problem, SNTrainState(z=z, coef=coef), slot, ok
+    receipt = JoinReceipt(
+        joined=ok,
+        slot=slot,
+        adopted=jnp.where(valid, ids, n).astype(jnp.int32),
+        adopted_mask=valid,
+        skipped=jnp.where(sk_valid & ok, sk_ids, n).astype(jnp.int32),
+        skipped_mask=sk_valid & ok,
+        dropped_newest=dropped,
+    )
+    return problem, SNTrainState(z=z, coef=coef), receipt
 
 
 _add_sensor_copy = jax.jit(_add_sensor_core)
@@ -770,8 +1217,10 @@ def add_sensor(
     ys: jax.Array,
     *,
     lam: float | jax.Array = -1.0,
+    repair_lambda: bool = False,
+    kappa: float = 0.01,
     donate: bool = False,
-) -> tuple[SNTrainProblem, SNTrainState, jax.Array, jax.Array]:
+) -> tuple[SNTrainProblem, SNTrainState, JoinReceipt]:
     """A sensor JOINS the network at position ``x`` with measurements ``ys``.
 
     Occupies the first free spare row (``make_problem(..., n_max=...)``
@@ -814,12 +1263,25 @@ def add_sensor(
     the anchor lane.
 
     ``lam``: the newcomer's regularizer; negative (default) applies the
-    paper's 0.01/|N|^2 rule to its adopted degree (adopters keep their
-    build-time regularizers).  Returns ``(problem, state, slot, joined)``;
+    paper's ``kappa``/|N|^2 rule to its adopted degree.  By default the
+    ADOPTERS keep their build-time regularizers even though their degrees
+    just grew — the paper rule says they are now stale.
+    ``repair_lambda=True`` re-derives each adopter's lambda from its
+    post-join degree (lambda_i = kappa / |N_i|^2, self included) inside
+    the O(degree) refactorization this event already pays, so repaired
+    joins match a from-scratch build's regularizers too (the accuracy
+    drift of NOT repairing under sustained churn is recorded in
+    tests/test_churn_soak.py).  Both settings share one compiled program
+    (``repair_lambda``/``kappa`` are traced operands).
+
+    Returns ``(problem, state, receipt)`` — a ``JoinReceipt`` whose
     ``joined`` is False (bitwise no-op) when no spare row is free or the
-    recolor pool is exhausted — size capacity with ``n_max``/``n_recolor``.
-    A serving process also patches its query plan:
-    ``serving.plan_add_sensor(plan, x, slot)``.
+    recolor pool is exhausted (size capacity with ``n_max``/``n_recolor``),
+    whose ``skipped`` lists the in-radius live sensors NOT adopted because
+    their rows had no free lane, and whose ``dropped_newest`` flags the
+    (field, adopter) pairs whose newest absorbed arrival was orphaned by
+    the reciprocal anchor lane.  A serving process also patches its query
+    plan: ``serving.plan_add_sensor(plan, x, receipt.slot)``.
 
     ``donate=True`` has the ``absorb`` contract (rebind, drop the old
     buffers).
@@ -837,16 +1299,22 @@ def add_sensor(
             "the joining sensor's neighborhood"
         )
     fn = _add_sensor_donate if donate else _add_sensor_copy
-    return fn(problem, state, x, ys, lam)
+    return fn(
+        problem, state, x, ys, lam,
+        jnp.asarray(repair_lambda, bool),
+        jnp.asarray(kappa, problem.lam_pad.dtype),
+    )
 
 
-def _remove_sensor_core(problem, state, slot):
+def _remove_sensor_core(problem, state, slot, repair, kappa):
     n = problem.n
     n_rows, d_max = problem.nbr_idx.shape
     dt = problem.nbr_pos.dtype
     lay = problem.layout
     topo = problem.topology
     slot = jnp.asarray(slot, jnp.int32)
+    repair = jnp.asarray(repair, bool)
+    kappa = jnp.asarray(kappa, problem.lam_pad.dtype)
     ok = (slot >= 0) & (slot < n) & problem.alive[slot]
     sl = jnp.clip(slot, 0, n - 1)  # safe READ index; writes are ok-gated
 
@@ -898,6 +1366,7 @@ def _remove_sensor_core(problem, state, slot):
     old_mask_r = problem.nbr_mask[:, rows]
     old_gram_r = problem.gram[:, rows]
     old_chol_r = problem.chol[:, rows]
+    old_aw_r = problem.anchor_w[:, rows]  # (B, R, D)
     old_coef_r = state.coef[:, rows]
     pos_sh = jnp.take_along_axis(old_pos_r, src[None, :, :, None], axis=2)
     own_pos = topo.positions[jnp.clip(rows, 0, n - 1)].astype(dt)  # (R, d)
@@ -908,11 +1377,28 @@ def _remove_sensor_core(problem, state, slot):
     new_mask_r = jnp.where(freed[None], False, mask_sh)
     coef_sh = jnp.take_along_axis(old_coef_r, src[None], axis=2)
     new_coef_r = jnp.where(freed[None], 0.0, coef_sh)
+    # anchor weights shift down with their lanes; freed lanes reset to 1
+    aw_sh = jnp.take_along_axis(old_aw_r, src[None], axis=2)
+    new_aw_r = jnp.where(freed[None], jnp.ones((), aw_sh.dtype), aw_sh)
     g1 = jnp.take_along_axis(old_gram_r, src[None, :, :, None], axis=2)
     g2 = jnp.take_along_axis(g1, src[None, :, None, :], axis=3)
     g3 = jnp.where(
         freed[None, :, :, None] | freed[None, :, None, :], 0.0, g2
     )
+
+    # Opt-in lambda repair (the join-side mirror): the affected rows'
+    # degrees shrank by one, so lambda_i = kappa / |N_i|^2 re-derives from
+    # the post-removal degree before the refactorization reads lam_pad.
+    # repair=False writes the old floats back (bitwise no-op).
+    deg_post = jnp.maximum(
+        topo.degrees[jnp.clip(rows, 0, n - 1)] - 1, 1
+    ).astype(problem.lam_pad.dtype)
+    lam_fix = kappa / (deg_post * deg_post)
+    do_fix = repair & nb
+    lam_pad2 = problem.lam_pad.at[rows].set(
+        jnp.where(do_fix, lam_fix, problem.lam_pad[rows])
+    )
+    problem = dataclasses.replace(problem, lam_pad=lam_pad2)
 
     # O(degree) masked refactorization of the affected rows only (the
     # deleted lane sits mid-factor, so no rank-1 downdate applies); the
@@ -940,6 +1426,17 @@ def _remove_sensor_core(problem, state, slot):
     chol2 = problem.chol.at[:, rows].set(
         jnp.where(nbB[..., None], chol_r, old_chol_r)
     ).at[:, sl].set(jnp.where(ok, eye, problem.chol[:, sl]))
+    # the victim's own anchor weights reset to the pristine build state
+    # (bitwise spare-row recycling: make_problem inits anchor_w to ones)
+    anchor_w2 = problem.anchor_w.at[:, rows].set(
+        jnp.where(nbB, new_aw_r, old_aw_r)
+    ).at[:, sl].set(
+        jnp.where(
+            ok,
+            jnp.ones((), problem.anchor_w.dtype),
+            problem.anchor_w[:, sl],
+        )
+    )
     coef2 = state.coef.at[:, rows].set(
         jnp.where(nbB, new_coef_r, old_coef_r)
     ).at[:, sl].set(jnp.where(ok, 0.0, state.coef[:, sl]))
@@ -990,6 +1487,7 @@ def _remove_sensor_core(problem, state, slot):
         gram=gram2,
         chol=chol2,
         stream_pos=stream_pos,
+        anchor_w=anchor_w2,
         alive=alive,
         plan_z=plan_z,
         plan_coef=plan_coef,
@@ -1008,6 +1506,8 @@ def remove_sensor(
     state: SNTrainState,
     slot: jax.Array,
     *,
+    repair_lambda: bool = False,
+    kappa: float = 0.01,
     donate: bool = False,
 ) -> tuple[SNTrainProblem, SNTrainState, jax.Array]:
     """A sensor LEAVES the network (mote death, battery, redeployment).
@@ -1035,10 +1535,19 @@ def remove_sensor(
     candidates untouched — tests/test_lifecycle.py).  A serving process
     also patches its query plan: ``serving.plan_remove_sensor(plan, slot)``.
 
+    ``repair_lambda=True`` re-derives each affected row's regularizer from
+    its post-removal degree (the paper rule lambda_i = kappa / |N_i|^2;
+    mirror of ``add_sensor``'s repair) inside the refactorization this
+    event already pays; default keeps build-time regularizers.
+
     ``donate=True`` has the ``absorb`` contract (rebind, drop the old
     buffers).
     """
     if not problem.batched:
         raise ValueError("lifecycle ops require a batched problem (use B = 1)")
     fn = _remove_sensor_donate if donate else _remove_sensor_copy
-    return fn(problem, state, slot)
+    return fn(
+        problem, state, slot,
+        jnp.asarray(repair_lambda, bool),
+        jnp.asarray(kappa, problem.lam_pad.dtype),
+    )

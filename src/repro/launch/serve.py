@@ -125,7 +125,7 @@ def serve_fields(args):
     n_max = n + args.spares if args.churn else None
     prob = make_batch_problem(
         topo, Kernel("rbf", gamma=args.gamma), ys, jnp.full((n,), args.lam),
-        n_max=n_max,
+        n_max=n_max, beta=args.beta,
     )
     state = init_state(prob)
     print(
@@ -223,15 +223,23 @@ def serve_fields(args):
                 [xq_c] + [np.zeros_like(xq_c)] * (pos.shape[1] - 1), axis=1
             )
         stats = dict(joins=0, join_drops=0, leaves=0, cell_overflows=0,
-                     absorbed=0, dropped=0)
+                     absorbed=0, dropped=0, skipped_couplings=0,
+                     dropped_newest=0)
         joined: list[int] = []
 
         def churn_round(prob, state, plan, i):
             x = rng.uniform(-0.9, 0.9, size=pos.shape[1]).astype(np.float32)
-            prob, state, slot, ok = add_sensor(
+            prob, state, rcpt = add_sensor(
                 prob, state, x, rng.normal(size=b).astype(np.float32),
-                lam=args.lam, donate=True,
+                lam=args.lam, repair_lambda=args.repair_lambda, donate=True,
             )
+            slot, ok = rcpt.slot, rcpt.joined
+            # JoinReceipt fidelity counters: couplings lost to
+            # lane-exhausted neighbors and newest arrivals orphaned by
+            # reciprocal anchor-lane growth — capacity pressure that used
+            # to be silent
+            stats["skipped_couplings"] += int(np.asarray(rcpt.skipped_mask).sum())
+            stats["dropped_newest"] += int(np.asarray(rcpt.dropped_newest).sum())
             if bool(ok):  # a dropped join must not touch the query plan
                 plan, over = plan_add_sensor(plan, x, slot)
                 joined.append(int(slot))
@@ -252,7 +260,10 @@ def serve_fields(args):
             state = colored_sweep(prob, state, n_sweeps=args.refresh_sweeps)
             if i % 2 == 1:  # every other round a sensor leaves
                 victim = joined.pop(0) if joined else int(rng.integers(0, n))
-                prob, state, rok = remove_sensor(prob, state, victim, donate=True)
+                prob, state, rok = remove_sensor(
+                    prob, state, victim,
+                    repair_lambda=args.repair_lambda, donate=True,
+                )
                 plan = plan_remove_sensor(plan, victim)
                 stats["leaves"] += int(bool(rok))
                 state = colored_sweep(prob, state, n_sweeps=args.refresh_sweeps)
@@ -283,6 +294,13 @@ def serve_fields(args):
             f._cache_size() - s for f, s in zip(tracked, warm_sizes)
         )
         per_round = dt / max(args.churn - 2, 1) * 1e3
+        from repro.core import plans as _plans
+
+        headroom = _plans.degree_headroom(
+            prob.topology.degrees, prob.alive[: prob.n], prob.topology.d_max
+        )
+        live = np.asarray(prob.alive[: prob.n])
+        min_headroom = int(np.asarray(headroom)[live].min()) if live.any() else 0
         print(
             f"churn: {args.churn} rounds ({stats['joins']} joins, "
             f"{stats['leaves']} leaves, {stats['join_drops']} join-drops, "
@@ -290,6 +308,14 @@ def serve_fields(args):
             f"arrivals, {stats['cell_overflows']} cell overflows) "
             f"{per_round:.1f} ms/round warm; "
             f"recompiles after warmup: {recompiles} (want 0)"
+        )
+        print(
+            f"churn receipts: {stats['skipped_couplings']} couplings "
+            f"skipped (lane-exhausted neighbors), "
+            f"{stats['dropped_newest']} newest arrivals dropped to anchor "
+            f"lanes; min live degree headroom {min_headroom}"
+            + (" -- joins near 0-headroom rows lose couplings"
+               if min_headroom == 0 else "")
         )
 
     # -- query: one dispatch per request grid ------------------------------
@@ -351,6 +377,14 @@ def main():
     ap.add_argument("--stream", type=int, default=0, help="streaming arrivals to absorb")
     ap.add_argument("--on_full", default="drop", choices=["drop", "evict"],
                     help="over-capacity arrival policy (evict = sliding window)")
+    ap.add_argument("--beta", type=float, default=1.0,
+                    help="per-field forgetting factor in (0, 1]; beta < 1 "
+                         "decays old arrivals one step per absorb (EW-RLS) "
+                         "so streams track time-varying fields; 1.0 is the "
+                         "bitwise static path")
+    ap.add_argument("--repair_lambda", action="store_true",
+                    help="re-derive the paper rule lambda_i = 0.01/|N_i|^2 "
+                         "for rows whose degree changes in churn events")
     ap.add_argument("--churn", type=int, default=0,
                     help="membership churn rounds to replay (symmetric "
                          "joins/leaves with O(degree) event repairs)")

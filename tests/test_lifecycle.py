@@ -92,7 +92,8 @@ def test_add_sensor_structural():
     n_base = prob.n_base
     x = np.array([0.15], np.float32)
     ys_new = np.array([0.4, -0.2], np.float32)
-    prob2, state2, slot, ok = add_sensor(prob, state, x, ys_new, lam=0.1)
+    prob2, state2, _rec = add_sensor(prob, state, x, ys_new, lam=0.1)
+    slot, ok = _rec.slot, _rec.joined
     assert bool(ok) and int(slot) == n_base
     assert bool(prob2.alive[int(slot)])
     # the row adopted its live in-radius neighborhood, self first
@@ -153,7 +154,8 @@ def test_symmetric_join_matches_from_scratch():
     n = prob.n_base
     x = np.array([0.15], np.float32)
     ys_new = np.array([0.4, -0.2], np.float32)
-    prob2, state2, slot, ok = add_sensor(prob, state, x, ys_new, lam=0.1)
+    prob2, state2, _rec = add_sensor(prob, state, x, ys_new, lam=0.1)
+    slot, ok = _rec.slot, _rec.joined
     assert bool(ok)
     s = int(slot)
 
@@ -218,10 +220,11 @@ def test_symmetric_join_recolors_conflicting_adopters():
     state = colored_sweep(prob, init_state(prob), n_sweeps=4)
     rs = prob.recolor_start
     assert topo.n_recolor == 4  # default 2x spares
-    prob2, state2, slot, ok = add_sensor(
+    prob2, state2, _rec = add_sensor(
         prob, state, np.zeros(1, np.float32),
         np.array([0.1, -0.1], np.float32), lam=0.2,
     )
+    slot, ok = _rec.slot, _rec.joined
     assert bool(ok)
     co = np.asarray(prob2.color_of)
     moved = [i for i in range(4) if co[i] >= rs]
@@ -245,10 +248,11 @@ def test_symmetric_join_recolors_conflicting_adopters():
     topoZ = build_topology(pos, 0.46, d_max=6, n_max=6, n_recolor=0)
     probZ = make_batch_problem(topoZ, KERN, ys, jnp.full((4,), 0.2))
     stateZ = colored_sweep(probZ, init_state(probZ), n_sweeps=2)
-    probZ2, stateZ2, _, okZ = add_sensor(
+    probZ2, stateZ2, _rec = add_sensor(
         probZ, stateZ, np.zeros(1, np.float32),
         np.array([0.1, -0.1], np.float32), lam=0.2,
     )
+    _, okZ = _rec.slot, _rec.joined
     assert not bool(okZ)
     for f in ("nbr_idx", "nbr_mask", "gram", "chol", "plan_z", "plan_coef",
               "alive", "color_members", "color_of"):
@@ -282,9 +286,10 @@ def test_symmetric_join_shifts_adopter_arrivals():
     z_last0 = float(state.z[0, zid_last])
     assert z_last0 != 0.0
     x_new = (pos[target] + 0.005).astype(np.float32)  # adopts `target` first
-    prob2, state2, slot, ok = add_sensor(
+    prob2, state2, _rec = add_sensor(
         prob, state, x_new, np.zeros(2, np.float32), lam=0.1
     )
+    slot, ok = _rec.slot, _rec.joined
     assert bool(ok)
     s = int(slot)
     idx2 = np.asarray(prob2.nbr_idx)
@@ -347,31 +352,35 @@ def test_spare_recycling_round_trip():
     """join -> leave -> join again reuses the spare row cleanly (the stale
     lanes other joiners bound to the first generation stay retired)."""
     prob, state, pos, rng = _lifecycle_problem(spares=2)
-    prob, state, s1, ok1 = add_sensor(
+    prob, state, _rec = add_sensor(
         prob, state, np.array([0.1], np.float32), np.zeros(2, np.float32),
         lam=0.1,
     )
+    s1, ok1 = _rec.slot, _rec.joined
     # second joiner adopts the first (they are within radius)
-    prob, state, s2, ok2 = add_sensor(
+    prob, state, _rec = add_sensor(
         prob, state, np.array([0.12], np.float32), np.zeros(2, np.float32),
         lam=0.1,
     )
+    s2, ok2 = _rec.slot, _rec.joined
     assert bool(ok1) and bool(ok2)
     assert int(s1) in np.asarray(prob.nbr_idx[int(s2)]).tolist()
     # no third spare row: the join is DROPPED, not corrupted
-    probX, stateX, _, ok3 = add_sensor(
+    probX, stateX, _rec = add_sensor(
         prob, state, np.array([0.2], np.float32), np.zeros(2, np.float32),
         lam=0.1,
     )
+    _, ok3 = _rec.slot, _rec.joined
     assert not bool(ok3)
     np.testing.assert_array_equal(np.asarray(probX.gram), np.asarray(prob.gram))
     # remove the first generation, recycle its row elsewhere
     prob, state, ok = remove_sensor(prob, state, int(s1))
     assert bool(ok)
-    prob, state, s3, ok = add_sensor(
+    prob, state, _rec = add_sensor(
         prob, state, np.array([-0.4], np.float32), np.ones(2, np.float32),
         lam=0.1,
     )
+    s3, ok = _rec.slot, _rec.joined
     assert bool(ok) and int(s3) == int(s1)
     np.testing.assert_allclose(
         np.asarray(prob.chol), np.asarray(streaming.rebuild_chol(prob)),
@@ -551,9 +560,10 @@ def test_churn_trace_compiles_zero_programs_after_warmup():
 
     def trace_round(prob, state, plan, i):
         x = np.array([0.1 + 0.04 * i], np.float32)
-        prob, state, slot, _ = add_sensor(
+        prob, state, _rec = add_sensor(
             prob, state, x, rng.normal(size=2).astype(np.float32), lam=0.1
         )
+        slot, _ = _rec.slot, _rec.joined
         plan, _ = plan_add_sensor(plan, x, slot)
         a = 4
         fs = rng.integers(0, 2, size=a)
@@ -595,9 +605,10 @@ def test_serving_plan_repair_matches_alive_masked_dense():
     removed = [4, 11, 17]
     for i, rm in enumerate(removed):
         x = np.array([-0.3 + 0.25 * i], np.float32)
-        prob, state, slot, ok = add_sensor(
+        prob, state, _rec = add_sensor(
             prob, state, x, rng.normal(size=3).astype(np.float32), lam=0.1
         )
+        slot, ok = _rec.slot, _rec.joined
         assert bool(ok)
         plan, over = plan_add_sensor(plan, x, slot)
         assert int(over) == 0
@@ -648,10 +659,11 @@ def test_global_coefficients_exclude_dead_rows():
     from repro.kernels import kernel_matvec
 
     prob, state, pos, rng = _lifecycle_problem(n=25, b=2, spares=3, sweeps=6)
-    prob, state, slot, _ = add_sensor(
+    prob, state, _rec = add_sensor(
         prob, state, np.array([0.22], np.float32),
         rng.normal(size=2).astype(np.float32), lam=0.1,
     )
+    slot, _ = _rec.slot, _rec.joined
     prob, state, _ = remove_sensor(prob, state, 6)
     state = colored_sweep(prob, state, n_sweeps=4)
     xq = np.linspace(-0.9, 0.9, 21)[:, None].astype(np.float32)
@@ -683,10 +695,11 @@ def test_fejer_preserved_across_interleaved_churn(seed):
         kind = ev_rng.integers(0, 3)
         if kind == 0:
             x = ev_rng.uniform(-0.8, 0.8, size=1).astype(np.float32)
-            prob, state, slot, ok = add_sensor(
+            prob, state, _rec = add_sensor(
                 prob, state, x, ev_rng.normal(size=2).astype(np.float32),
                 lam=0.1,
             )
+            slot, ok = _rec.slot, _rec.joined
             if bool(ok):
                 joined.append(int(slot))
         elif kind == 1 and step > 1:

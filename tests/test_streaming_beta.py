@@ -1,0 +1,278 @@
+"""Forgetting-factor streaming (ISSUE 6).
+
+Pins the two contracts of the exponential-forgetting tick:
+
+  (a) ``beta = 1.0`` is the EXACT static path: every streaming op
+      (absorb / evict / wave / join / leave) and every sweep engine
+      produces bitwise-identical arrays for a ``beta = 1`` field even
+      when it shares a batch with decaying fields — the tick multiplies
+      by exactly 1.0 and the Cholesky diagonal restore is gated out.
+  (b) ``beta < 1`` stays exactly factorized: the cached Cholesky always
+      equals the factorization of the decayed Gram plus the UNDECAYED
+      regularizer (scale-then-update), so ``rebuild_chol`` agrees after
+      any interleaving, and fresh arrivals dominate stale lanes — a
+      drifting field is tracked instead of averaged into its history.
+
+Plus the ``absorb_wave`` vectorization contract: one batched wave over
+distinct (field, sensor) pairs equals absorbing them sequentially.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (
+    Kernel,
+    absorb_wave,
+    add_sensor,
+    build_topology,
+    colored_sweep,
+    effective_coef,
+    fusion,
+    init_state,
+    make_batch_problem,
+    remove_sensor,
+    serial_sweep,
+    streaming,
+    uniform_sensors,
+    weighted_norm_sq,
+)
+
+KERN = Kernel("rbf", gamma=1.0)
+LAM = 0.3
+RADIUS = 0.55
+N, B, SPARES = 12, 2, 3
+
+PROBLEM_FIELDS = ("nbr_pos", "nbr_mask", "gram", "chol", "anchor_w",
+                  "stream_pos", "lam_pad", "alive", "alive_z")
+
+
+def _build(seed, betas=1.0):
+    pos = uniform_sensors(N, d=1, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    ys = np.sin(np.pi * pos[None, :, 0]) + 0.2 * rng.normal(size=(B, N))
+    topo = build_topology(pos, RADIUS)
+    d_max = int(np.asarray(topo.degrees).max()) + 6
+    topo = build_topology(pos, RADIUS, d_max=d_max, n_max=N + SPARES)
+    prob = make_batch_problem(
+        topo, KERN, ys, jnp.full((N,), LAM), beta=betas
+    )
+    return pos, prob, colored_sweep(prob, init_state(prob), n_sweeps=2)
+
+
+def _trace(prob, state, pos, seed, rounds=6):
+    """A fixed streaming trace: dense evicting absorbs + one join/leave."""
+    rng = np.random.default_rng(seed)
+    for r in range(rounds):
+        for s in range(N):
+            xa = (pos[s] + 0.05 * rng.normal(size=1)).astype(np.float32)
+            ya = float(rng.normal())
+            for f in range(B):
+                prob, state, _ = streaming.absorb(
+                    prob, state, f, s, xa, ya, on_full="evict"
+                )
+        if r == 2:
+            x = np.asarray([0.11], np.float32)
+            yn = rng.normal(size=B).astype(np.float32)
+            prob, state, rec = add_sensor(prob, state, x, yn, lam=LAM)
+            assert bool(rec.joined)
+            prob, state, _ = remove_sensor(prob, state, rec.slot)
+    return prob, state
+
+
+def test_beta1_field_bitwise_in_mixed_batch():
+    """A beta=1 field sharing a batch with a decaying field is untouched:
+    the whole trace (absorb, evict, join, leave) and every engine's sweep
+    match the all-static problem BITWISE, field by field."""
+    pos, prob_s, state_s = _build(3, betas=1.0)
+    _, prob_m, state_m = _build(3, betas=np.asarray([1.0, 0.5], np.float32))
+
+    prob_s, state_s = _trace(prob_s, state_s, pos, seed=7)
+    prob_m, state_m = _trace(prob_m, state_m, pos, seed=7)
+
+    for f in PROBLEM_FIELDS:
+        a = np.asarray(getattr(prob_s, f))
+        b = np.asarray(getattr(prob_m, f))
+        if a.shape and a.shape[0] == B and f != "lam_pad":
+            a, b = a[0], b[0]
+        assert np.array_equal(a, b), f"{f} diverged for the beta=1 field"
+    assert np.array_equal(np.asarray(state_s.z)[0], np.asarray(state_m.z)[0])
+    assert np.array_equal(
+        np.asarray(state_s.coef)[0], np.asarray(state_m.coef)[0]
+    )
+
+    # engine by engine on the post-trace problems: bitwise per sweep
+    for name, run in (
+        ("plan", lambda p, s: colored_sweep(p, s, n_sweeps=2)),
+        ("onehot", lambda p, s: colored_sweep(p, s, n_sweeps=2,
+                                              engine="onehot")),
+        ("serial", lambda p, s: serial_sweep(p, s, n_sweeps=2)),
+    ):
+        zs = np.asarray(run(prob_s, state_s).z)
+        zm = np.asarray(run(prob_m, state_m).z)
+        assert np.array_equal(zs[0], zm[0]), f"{name} engine diverged"
+
+    # the decaying field really did decay (this is not a trivial test)
+    assert not np.array_equal(
+        np.asarray(prob_s.anchor_w)[1], np.asarray(prob_m.anchor_w)[1]
+    )
+    assert np.asarray(prob_m.anchor_w).min() < 0.9
+
+
+def test_beta_lt1_factors_stay_consistent():
+    """Scale-then-update: after any interleaving of ticks, evictions and
+    lifecycle events, the cached factor equals the from-scratch
+    factorization of the decayed Gram + full lambda."""
+    pos, prob, state = _build(5, betas=np.asarray([0.7, 0.4], np.float32))
+    prob, state = _trace(prob, state, pos, seed=11)
+    err = float(jnp.max(jnp.abs(streaming.rebuild_chol(prob) - prob.chol)))
+    assert err < 5e-5, err
+    # anchors decay but never below sqrt(beta)^window or above 1
+    aw = np.asarray(prob.anchor_w)
+    assert aw.max() <= 1.0 + 1e-6
+    assert (aw > 0.0).all()
+    # sweeps on the decayed problem remain Fejér monotone between ticks
+    prev = np.asarray(weighted_norm_sq(prob, state))
+    for _ in range(2):
+        state = colored_sweep(prob, state, n_sweeps=1)
+        cur = np.asarray(weighted_norm_sq(prob, state))
+        assert (cur <= prev * 1.06 + 1e-5).all()
+        prev = cur
+
+
+def test_absorb_wave_equals_sequential():
+    """One wave over distinct (field, sensor) pairs == sequential absorbs
+    (bitwise except the factor, which batched trsm perturbs at ulp)."""
+    pos, prob, state = _build(0, betas=np.asarray([1.0, 0.7], np.float32))
+    n_cap = prob.n
+    rng = np.random.default_rng(2)
+
+    def seq(prob, state, xs, ys, amask, on_full):
+        for b in range(B):
+            for s in range(n_cap):
+                if amask[b, s]:
+                    prob, state, _ = streaming.absorb(
+                        prob, state, b, s, xs[b, s], ys[b, s],
+                        on_full=on_full,
+                    )
+        return prob, state
+
+    def compare(pw, sw, ps, ss):
+        for f in ("nbr_pos", "nbr_mask", "gram", "anchor_w", "stream_pos"):
+            assert np.array_equal(
+                np.asarray(getattr(pw, f)), np.asarray(getattr(ps, f))
+            ), f
+        np.testing.assert_allclose(
+            np.asarray(pw.chol), np.asarray(ps.chol), atol=1e-5
+        )
+        # z equal everywhere but the sentinel scratch slot
+        assert np.array_equal(
+            np.asarray(sw.z)[:, :-1], np.asarray(ss.z)[:, :-1]
+        )
+        assert np.array_equal(np.asarray(sw.coef), np.asarray(ss.coef))
+
+    # round 1: partial mask, drop policy
+    xs = np.zeros((B, n_cap, 1), np.float32)
+    ys = np.zeros((B, n_cap), np.float32)
+    amask = np.zeros((B, n_cap), bool)
+    for b in range(B):
+        for s in range(N):
+            if (b + s) % 3 != 0:
+                amask[b, s] = True
+                xs[b, s] = pos[s] + rng.normal(scale=0.05, size=1)
+                ys[b, s] = float(rng.normal())
+    pw, sw, rc = absorb_wave(prob, state, xs, ys, mask=amask)
+    ps, ss = seq(prob, state, xs, ys, amask, "drop")
+    compare(pw, sw, ps, ss)
+    assert int(np.asarray(rc.absorbed).sum()) == int(amask.sum())
+
+    # dense evicting rounds until the windows wrap
+    prob, state = pw, sw
+    total_evicted = 0
+    for _ in range(7):
+        xs = np.zeros((B, n_cap, 1), np.float32)
+        xs[:, :N] = pos[None] + rng.normal(
+            scale=0.03, size=(B, N, 1)
+        ).astype(np.float32)
+        ys = rng.normal(size=(B, n_cap)).astype(np.float32)
+        amask = np.zeros((B, n_cap), bool)
+        amask[:, :N] = True
+        pw, sw, rc = absorb_wave(
+            prob, state, xs, ys, mask=amask, on_full="evict"
+        )
+        ps, ss = seq(prob, state, xs, ys, amask, "evict")
+        compare(pw, sw, ps, ss)
+        total_evicted += int(np.asarray(rc.evicted).sum())
+        prob, state = pw, sw
+    assert total_evicted > 0  # the wave really exercised batched eviction
+    err = float(jnp.max(jnp.abs(streaming.rebuild_chol(prob) - prob.chol)))
+    assert err < 5e-5, err
+
+
+def test_drift_tracking_smoke():
+    """On a drifting field, a tuned beta < 1 tracks where beta = 1 stalls:
+    steady-state fused RMSE is at least 1.5x lower (the full acceptance
+    run — benchmarks/drift_bench.py — pins >= 5x at n=1000, B=16)."""
+    n, b = 40, 2
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(-1, 1, size=(n, 1)).astype(np.float32)
+    topo = build_topology(pos, 0.2)
+    d_max = int(np.asarray(topo.degrees).max()) + 8
+    topo = build_topology(pos, 0.2, d_max=d_max, n_max=n + 2)
+    kern = Kernel("rbf", gamma=10.0)
+    betas = np.asarray([1.0, 0.4], np.float32)
+
+    def truth(x, t, v=0.08):
+        return np.sin(np.pi * (x[..., 0] - v * t)).astype(np.float32)
+
+    ys0 = truth(pos, 0)[None] + 0.01 * rng.normal(size=(b, n)).astype(
+        np.float32
+    )
+    prob = make_batch_problem(
+        topo, kern, ys0, jnp.full((n,), 0.01), beta=betas
+    )
+    state = colored_sweep(prob, init_state(prob), n_sweeps=4)
+
+    hist = []
+    for t in range(1, 17):
+        xs = np.zeros((b, prob.n, 1), np.float32)
+        xs[:, :n] = pos[None] + rng.normal(
+            scale=0.01, size=(b, n, 1)
+        ).astype(np.float32)
+        ys = np.zeros((b, prob.n), np.float32)
+        ys[:, :n] = truth(xs[:, :n], t) + 0.01 * rng.normal(
+            size=(b, n)
+        ).astype(np.float32)
+        amask = np.zeros((b, prob.n), bool)
+        amask[:, :n] = True
+        prob, state, _ = absorb_wave(
+            prob, state, xs, ys, mask=amask, on_full="evict"
+        )
+        state = colored_sweep(prob, state, n_sweeps=8)
+        preds = fusion.evaluate_sensors(prob, state, pos)
+        fused = fusion.knn_fusion(
+            preds, prob.topology.positions, pos, k=3, alive=prob.alive[:-1]
+        )
+        rmse = np.sqrt(
+            np.mean((np.asarray(fused) - truth(pos, t)[None]) ** 2, axis=-1)
+        )
+        hist.append(rmse)
+    ss = np.mean(np.stack(hist[-5:]), axis=0)
+    assert np.isfinite(ss).all()
+    assert ss[1] * 1.5 < ss[0], (
+        f"beta=0.4 should track >=1.5x better: rmse={ss}"
+    )
+
+
+def test_effective_coef_is_the_representer():
+    """Serving reads anchor-weighted coefficients: effective_coef equals
+    coef * anchor_w, and a decayed problem's evaluation uses it."""
+    pos, prob, state = _build(9, betas=np.asarray([0.6, 0.6], np.float32))
+    prob, state = _trace(prob, state, pos, seed=4, rounds=4)
+    # solve so the stream lanes carry nonzero coefficients, then tick them
+    # once more so their anchors sit strictly below 1
+    state = colored_sweep(prob, state, n_sweeps=2)
+    prob, state = _trace(prob, state, pos, seed=5, rounds=1)
+    ec = np.asarray(effective_coef(prob, state))
+    ref = np.asarray(state.coef) * np.asarray(prob.anchor_w)
+    assert np.array_equal(ec, ref.astype(ec.dtype))
+    assert not np.array_equal(ec, np.asarray(state.coef))  # really decayed
