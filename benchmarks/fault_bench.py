@@ -1,0 +1,217 @@
+"""Unreliable links: RMSE + sweeps-to-converge vs message drop rate.
+
+The paper's convergence theory (Sec. 3) assumes every inter-sensor message
+arrives.  ISSUE 7 adds the ``core.faults`` process (seeded i.i.d. drops,
+Gilbert–Elliott bursts, crash/restart schedules) with hold-last-value
+semantics in every sweep engine, and the ``core.monitor`` watchdog that
+supervises faulty training (retry with fresh draws -> refactorize ->
+bitwise rollback).  This bench trains the SAME static multi-field problem
+at a grid of drop rates under the watchdog and reports, per rate:
+
+  * kNN-fused (k=3) RMSE against the noiseless truth at the sensor sites;
+  * sweeps-to-converge (total supervised sweeps the watchdog executed,
+    retried rounds included) and how many fields met the residual tol;
+  * watchdog activity (retries / refactorizations / rollbacks).
+
+The fault rates are TRACED operands of one jitted program per engine, so
+after the first rate warms the programs every further rate reuses them —
+the bench counts the jit caches and reports the growth (must be ZERO).
+
+Acceptance (ISSUE 7): at n=1000, B=16, the colored engine converges within
+2x the fault-free RMSE at a 10% i.i.d. drop rate with the watchdog on.
+
+Run:  PYTHONPATH=src python -m benchmarks.fault_bench
+      PYTHONPATH=src python -m benchmarks.fault_bench --n 100 --batch 4
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    Kernel,
+    build_topology,
+    faults,
+    fusion,
+    init_state,
+    make_batch_problem,
+    monitor,
+)
+
+DROPS = (0.0, 0.05, 0.1, 0.2, 0.3)
+
+
+def _build(n, b, dim, radius, gamma, lam, noise, seed=0):
+    """Static per-field sinusoid targets over one geometric network."""
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(-1, 1, size=(n, dim)).astype(np.float32)
+    topo = build_topology(pos, radius)
+    freq = rng.uniform(0.5, 2.0, size=(b, 1)).astype(np.float32)
+    phase = rng.uniform(0, 2 * np.pi, size=(b, 1)).astype(np.float32)
+    truth = np.sin(np.pi * freq * pos[None, :, 0] + phase).astype(np.float32)
+    ys = truth + noise * rng.normal(size=(b, n)).astype(np.float32)
+    prob = make_batch_problem(
+        topo, Kernel("rbf", gamma=gamma), ys, jnp.full((n,), lam)
+    )
+    return pos, prob, truth
+
+
+@jax.jit
+def _fused_rmse(problem, state, xq, truth):
+    """kNN-fused (k=3) estimate at the sensor sites vs truth: (B,)."""
+    preds = fusion.evaluate_sensors(problem, state, xq)
+    fused = fusion.knn_fusion(
+        preds, problem.topology.positions, xq, k=3, alive=problem.alive[:-1]
+    )
+    return jnp.sqrt(jnp.mean((fused - truth) ** 2, axis=-1))
+
+
+def _cache_sizes(engine):
+    """Jit-cache sizes of every program a watchdog-supervised faulty
+    training round dispatches (the zero-recompile assertion's witness)."""
+    fns = (
+        faults._faulty_serial if engine == "serial" else faults._faulty_colored,
+        monitor._round_metrics,
+        _fused_rmse,
+    )
+    return [f._cache_size() for f in fns]
+
+
+def run_rate(pos, prob, truth, drop, *, engine, cfg, seed=1):
+    """Watchdog-supervised training from scratch at one drop rate."""
+    state = init_state(prob)
+    # A FaultModel even at drop=0: the rate is a traced operand, so the
+    # p=0 run warms the exact program every other rate reuses.
+    model = faults.make_fault_model(drop)
+    t0 = time.perf_counter()
+    prob_out, state, receipt = monitor.watch_sweeps(
+        prob, state, model=model, key=jax.random.PRNGKey(seed),
+        engine=engine, config=cfg,
+    )
+    jax.block_until_ready(state.z)
+    dt = time.perf_counter() - t0
+    rmse = np.asarray(_fused_rmse(prob_out, state, pos, truth))
+    return {
+        "drop": drop,
+        "rmse_mean": float(rmse.mean()),
+        "rmse_max": float(rmse.max()),
+        "sweeps_to_converge": int(receipt.sweeps),
+        "rounds": int(receipt.rounds),
+        "converged_fields": int(np.sum(receipt.converged)),
+        "retries": int(receipt.retries),
+        "refactorized": int(receipt.refactorized),
+        "rolled_back": bool(receipt.rolled_back),
+        "s_per_sweep": dt / max(receipt.sweeps, 1),
+    }
+
+
+def sweep_drops(
+    n, batch, drops, *, dim, radius, gamma, lam, noise, engine, tol,
+    sweeps_per_round, max_rounds, seed=0,
+):
+    pos, prob, truth = _build(n, batch, dim, radius, gamma, lam, noise, seed)
+    cfg = monitor.WatchdogConfig(
+        sweeps_per_round=sweeps_per_round, tol=tol, max_rounds=max_rounds
+    )
+    # Warm every program on the FIRST rate (a short budget is enough: the
+    # programs are keyed on shapes + static sweeps_per_round, not rates).
+    warm_cfg = monitor.WatchdogConfig(
+        sweeps_per_round=sweeps_per_round, tol=tol, max_rounds=2
+    )
+    run_rate(pos, prob, truth, drops[0], engine=engine, cfg=warm_cfg)
+    base = _cache_sizes(engine)
+
+    entries = []
+    print(f"{'drop':>6s} {'rmse':>8s} {'ratio':>7s} {'sweeps':>7s} "
+          f"{'conv':>6s} {'retry':>5s} {'s/sweep':>9s}")
+    for p in drops:
+        e = run_rate(pos, prob, truth, p, engine=engine, cfg=cfg)
+        entries.append(e)
+        ratio = e["rmse_mean"] / max(entries[0]["rmse_mean"], 1e-12)
+        e["rmse_ratio_vs_faultfree"] = ratio
+        print(f"{p:6.2f} {e['rmse_mean']:8.4f} {ratio:6.2f}x "
+              f"{e['sweeps_to_converge']:7d} "
+              f"{e['converged_fields']:3d}/{batch:<2d} {e['retries']:5d} "
+              f"{e['s_per_sweep']:9.5f}")
+    compiles = sum(a - b for a, b in zip(_cache_sizes(engine), base))
+    print(f"compiles after warmup across {len(drops)} rates: {compiles} "
+          f"(want 0)")
+    return entries, compiles
+
+
+def fault_fast(rows):
+    """Trimmed grid for ``benchmarks/run.py --fast`` (CI bench-json rows)."""
+    entries, compiles = sweep_drops(
+        100, 4, (0.0, 0.1), dim=1, radius=0.3, gamma=10.0, lam=0.01,
+        noise=0.05, engine="plan", tol=1e-3, sweeps_per_round=5,
+        max_rounds=40,
+    )
+    e = entries[-1]
+    rows.append((
+        f"faults.n100.p{e['drop']:.2f}.watchdog",
+        e["s_per_sweep"] * 1e6,
+        f"rmse_ratio_vs_faultfree={e['rmse_ratio_vs_faultfree']:.2f}x;"
+        f"converged={e['converged_fields']}/4;"
+        f"sweeps={e['sweeps_to_converge']}",
+    ))
+    rows.append((
+        f"faults.n100.compiles",
+        float(compiles),
+        "xla_compiles_after_warmup_across_rates",
+    ))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1000)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--drops", default=",".join(str(p) for p in DROPS))
+    ap.add_argument("--dim", type=int, default=1)
+    ap.add_argument("--radius", type=float, default=-1.0,
+                    help="coupling radius (< 0: scale 0.3 * (100/n)^(1/dim))")
+    ap.add_argument("--gamma", type=float, default=10.0)
+    ap.add_argument("--lam", type=float, default=0.01)
+    ap.add_argument("--noise", type=float, default=0.05)
+    ap.add_argument("--engine", default="plan",
+                    choices=["serial", "plan", "onehot", "pallas"])
+    ap.add_argument("--tol", type=float, default=1e-3)
+    ap.add_argument("--sweeps-per-round", type=int, default=5)
+    ap.add_argument("--max-rounds", type=int, default=40)
+    ap.add_argument("--out", default="BENCH_faults.json")
+    args = ap.parse_args()
+    radius = args.radius
+    if radius < 0:
+        radius = 0.3 * (100.0 / args.n) ** (1.0 / args.dim)
+    drops = tuple(float(s) for s in args.drops.split(","))
+    entries, compiles = sweep_drops(
+        args.n, args.batch, drops, dim=args.dim, radius=radius,
+        gamma=args.gamma, lam=args.lam, noise=args.noise,
+        engine=args.engine, tol=args.tol,
+        sweeps_per_round=args.sweeps_per_round, max_rounds=args.max_rounds,
+    )
+    at_p10 = next((e for e in entries if abs(e["drop"] - 0.1) < 1e-9), None)
+    out = {
+        "name": "faults", "n": args.n, "batch": args.batch,
+        "engine": args.engine, "tol": args.tol, "entries": entries,
+        "rmse_ratio_at_p10":
+            None if at_p10 is None else at_p10["rmse_ratio_vs_faultfree"],
+        "compiles_after_warmup": compiles,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    if at_p10 is not None:
+        print(f"rmse_ratio_at_p10: {at_p10['rmse_ratio_vs_faultfree']:.2f}x "
+              f"(acceptance: <= 2x)")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

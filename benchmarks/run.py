@@ -38,6 +38,7 @@ def main() -> None:
         churn_bench,
         consensus_bench,
         drift_bench,
+        fault_bench,
         kernels_bench,
         paper_figs,
         serving_bench,
@@ -55,6 +56,7 @@ def main() -> None:
         ("serving", serving_bench.serving_fast, False),
         ("churn", churn_bench.churn_fast, False),
         ("drift", drift_bench.drift_fast, False),
+        ("faults", fault_bench.fault_fast, False),
     ]
 
     rows: list[tuple[str, float, str]] = []

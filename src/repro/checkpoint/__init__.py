@@ -1,5 +1,5 @@
 """Pytree checkpointing: flat .npz + treedef manifest (no orbax offline)."""
 
-from .ckpt import latest_step, restore, save
+from .ckpt import latest_step, restore, restore_train, save, save_train
 
-__all__ = ["latest_step", "restore", "save"]
+__all__ = ["latest_step", "restore", "restore_train", "save", "save_train"]

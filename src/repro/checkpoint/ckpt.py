@@ -82,3 +82,29 @@ def restore(directory: str, step: int, like: Pytree) -> Pytree:
         np.asarray(a, dtype=np.asarray(t).dtype) for t, a in zip(leaves, arrays)
     ]
     return jax.tree.unflatten(treedef, restored)
+
+
+def save_train(directory: str, step: int, problem, state) -> str:
+    """Snapshot a full ``SNTrainProblem`` + ``SNTrainState`` pair.
+
+    Both are registered dataclass pytrees, so one atomic ``save`` of the
+    two-entry dict captures EVERYTHING the solver owns — topology tables,
+    factors, scatter plans, liveness, forgetting weights, messages and
+    coefficients.  npz storage is lossless and dtypes match the template
+    at restore, so the round-trip is bitwise (the crash-recovery anchor
+    of the convergence watchdog, ``repro.core.monitor``).
+    """
+    return save(directory, step, {"problem": problem, "state": state})
+
+
+def restore_train(directory: str, step: int, problem, state) -> tuple:
+    """Bitwise-inverse of ``save_train``.
+
+    ``problem``/``state`` are live templates (their static fields —
+    kernel, n_stream, layout ints — carry over; array leaves are
+    replaced by the snapshot).  Returns ``(problem, state)`` with
+    device arrays, every leaf bitwise equal to what ``save_train`` saw.
+    """
+    tree = restore(directory, step, {"problem": problem, "state": state})
+    tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree["problem"], tree["state"]

@@ -10,13 +10,17 @@ Public surface:
   sn_train     — the paper's SN-Train message-passing algorithm (Eq. 18)
   fusion       — single-sensor / kNN / connectivity-averaged aggregation
   consensus    — SOP-gossip data parallelism (pairwise projections == gossip)
+  faults       — seeded link-drop/burst/crash fault injection (FaultModel)
+  monitor      — convergence watchdog: retry / refactorize / rollback
 """
 
 from . import (
     centralized,
     consensus,
+    faults,
     fusion,
     kernels_math,
+    monitor,
     plans,
     serving,
     sn_train,
@@ -24,6 +28,8 @@ from . import (
     streaming,
     topology,
 )
+from .faults import FaultModel, faulty_sweep, make_fault_model
+from .monitor import WatchdogConfig, WatchdogReceipt, watch_sweeps
 from .centralized import KRRModel, fit_krr, predict
 from .kernels_math import Kernel
 from .plans import LifecycleLayout
@@ -70,6 +76,7 @@ from .topology import (
 
 __all__ = [
     "AbsorbReceipt",
+    "FaultModel",
     "JoinReceipt",
     "Kernel",
     "KRRModel",
@@ -78,8 +85,15 @@ __all__ = [
     "SNTrainState",
     "SensorTopology",
     "ServingPlan",
+    "WatchdogConfig",
+    "WatchdogReceipt",
     "absorb_wave",
     "add_sensor",
+    "faults",
+    "faulty_sweep",
+    "make_fault_model",
+    "monitor",
+    "watch_sweeps",
     "make_serving_plan",
     "plan_add_sensor",
     "plan_remove_sensor",

@@ -1,0 +1,269 @@
+"""Fault injection for SN-Train: lossy links, bursts, and sensor crashes.
+
+The paper's whole premise is message passing over *wireless* links
+(Sec. 4 "practical aspects"), where delivery is lossy, bursty, and
+sensors crash mid-training.  This module is the seeded, shape-static
+fault model that drives the degraded-execution paths of
+``repro.core.sn_train``:
+
+  * **i.i.d. Bernoulli drops** — every padded neighbor lane ``(s, k)``
+    of every sweep independently loses its outgoing message write with
+    probability ``drop``.
+  * **Gilbert–Elliott bursts** — each lane carries a 2-state Markov
+    link (good/bad); the bad state adds ``drop_bad`` loss on top of the
+    ambient rate, and the ``burst_to_bad`` / ``burst_to_good``
+    transition probabilities set the burst length.  The chain starts at
+    its stationary distribution so sweep 0 is statistically identical
+    to sweep 10^6.
+  * **crash/restart schedules** — a per-sensor up/down Markov chain
+    that lowers onto the EXISTING ``alive`` machinery: a crashed sweep
+    routes through ``robust_sweep``'s per-sweep masked refactorization,
+    so a down sensor neither updates nor is read, exactly as under
+    lifecycle churn.
+
+Semantics of a dropped message: **hold-last-value**.  The sender still
+runs its local projection (compute is local), but the write to the
+target message slot never lands, so the stale z persists — mirroring
+the dead-target-slot gates PR 4 threaded through every engine.  An
+all-delivered mask is therefore a bitwise identity, engine by engine
+(tests/test_faults.py pins this for serial/plan/onehot/pallas/robust).
+
+Everything here is shape-static and seeded: the ``FaultModel`` rates
+are *traced* scalars, so sweeping a grid of drop rates reuses ONE
+compiled program (zero recompiles across fault rates, exactly like the
+PR-4 liveness masks — ``benchmarks/fault_bench.py`` counts the jit
+cache to prove it).  Delivery masks are sampled by thresholding
+uniforms (``u >= p``), which monotonically couples rates under a fixed
+key: raising ``drop`` can only shrink the delivered set — the property
+the monotone-degradation soak test leans on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import sn_train
+from .sn_train import SNTrainProblem, SNTrainState
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Seeded link/sensor fault process; all rates are traced scalars.
+
+    ``crash``/``restart`` are ``None`` for the crash-free model — a
+    *static* pytree-structure distinction, so the crash-free path never
+    pays ``robust_sweep``'s per-sweep refactorization.  Build with
+    ``make_fault_model``.
+    """
+
+    drop: jnp.ndarray  # () ambient P(per-lane message drop per sweep)
+    burst_to_bad: jnp.ndarray  # () P(good -> bad) per sweep
+    burst_to_good: jnp.ndarray  # () P(bad -> good) per sweep
+    drop_bad: jnp.ndarray  # () EXTRA drop probability while in the bad state
+    crash: jnp.ndarray | None = None  # () P(up sensor crashes per sweep)
+    restart: jnp.ndarray | None = None  # () P(down sensor restarts per sweep)
+
+    @property
+    def has_crash(self) -> bool:
+        return self.crash is not None
+
+
+def make_fault_model(
+    drop: float = 0.0,
+    burst: tuple | None = None,
+    crash: tuple | None = None,
+    *,
+    dtype=jnp.float32,
+) -> FaultModel:
+    """Build a FaultModel from plain rates.
+
+    drop: ambient i.i.d. per-lane drop probability.
+    burst: optional ``(to_bad, to_good, drop_bad)`` Gilbert–Elliott
+        parameters (None: the chain never leaves the good state).
+    crash: optional ``(p_crash, p_restart)`` per-sensor Markov rates
+        (None: the crash-free — and refactorization-free — path).
+    """
+    z = lambda v: jnp.asarray(v, dtype)
+    to_bad, to_good, drop_bad = burst if burst is not None else (0.0, 1.0, 0.0)
+    return FaultModel(
+        drop=z(drop),
+        burst_to_bad=z(to_bad),
+        burst_to_good=z(to_good),
+        drop_bad=z(drop_bad),
+        crash=None if crash is None else z(crash[0]),
+        restart=None if crash is None else z(crash[1]),
+    )
+
+
+def link_masks(
+    model: FaultModel, key: jax.Array, n_sweeps: int, lane_shape: tuple
+) -> jax.Array:
+    """Sample per-sweep delivered masks, shape ``(n_sweeps,) + lane_shape``.
+
+    ``lane_shape`` is the padded neighbor table shape ``(n+1, D)`` —
+    delivery is a property of the physical lane, shared across fields
+    (every field's message for one sweep rides the same radio packet).
+    The Gilbert–Elliott state starts at its stationary distribution;
+    within each sweep the lane drops with probability
+    ``1 - (1-drop) * (1 - drop_bad * [bad])``.  Delivery thresholds a
+    uniform (``u >= p``), so under one key the delivered set shrinks
+    monotonically as rates rise.
+    """
+    k_init, k_seq = jax.random.split(jnp.asarray(key))
+    denom = model.burst_to_bad + model.burst_to_good
+    pi_bad = jnp.where(
+        denom > 0, model.burst_to_bad / jnp.maximum(denom, 1e-20), 0.0
+    )
+    bad0 = jax.random.uniform(k_init, lane_shape) < pi_bad
+
+    def step(bad, k):
+        ku, kb, kg = jax.random.split(k, 3)
+        p_drop = 1.0 - (1.0 - model.drop) * (
+            1.0 - jnp.where(bad, model.drop_bad, 0.0)
+        )
+        delivered = jax.random.uniform(ku, lane_shape) >= p_drop
+        go_bad = jax.random.uniform(kb, lane_shape) < model.burst_to_bad
+        go_good = jax.random.uniform(kg, lane_shape) < model.burst_to_good
+        bad = jnp.where(bad, ~go_good, go_bad)
+        return bad, delivered
+
+    _, delivered = jax.lax.scan(step, bad0, jax.random.split(k_seq, n_sweeps))
+    return delivered
+
+
+def crash_schedule(
+    model: FaultModel, key: jax.Array, n_sweeps: int, n: int
+) -> jax.Array:
+    """Per-sensor up/down Markov chain, shape ``(n_sweeps, n)`` bool.
+
+    Starts all-up (the problem's persistent ``alive`` mask composes on
+    top inside ``robust_sweep``, so lifecycle-dead rows stay dead).
+    """
+    if model.crash is None:
+        return jnp.ones((n_sweeps, n), bool)
+
+    def step(up, k):
+        kc, kr = jax.random.split(k)
+        crash = jax.random.uniform(kc, (n,)) < model.crash
+        restart = jax.random.uniform(kr, (n,)) < model.restart
+        up = jnp.where(up, ~crash, restart)
+        return up, up
+
+    _, trace = jax.lax.scan(
+        step, jnp.ones((n,), bool), jax.random.split(jnp.asarray(key), n_sweeps)
+    )
+    return trace
+
+
+def sample_faults(
+    model: FaultModel,
+    key: jax.Array,
+    n_sweeps: int,
+    problem: SNTrainProblem,
+) -> tuple[jax.Array, jax.Array | None]:
+    """(delivered (n_sweeps, n+1, D), alive trace (n_sweeps, n) or None)."""
+    kl, kc = jax.random.split(jnp.asarray(key))
+    delivered = link_masks(model, kl, n_sweeps, problem.nbr_idx.shape)
+    alive_tn = (
+        crash_schedule(model, kc, n_sweeps, problem.n)
+        if model.has_crash
+        else None
+    )
+    return delivered, alive_tn
+
+
+@partial(jax.jit, static_argnames=("n_sweeps", "engine"))
+def _faulty_colored(problem, state, model, key, n_sweeps, engine):
+    delivered, _ = sample_faults(model, key, n_sweeps, problem)
+    return sn_train.colored_sweep(
+        problem, state, n_sweeps=n_sweeps, engine=engine, delivered=delivered
+    )
+
+
+@partial(jax.jit, static_argnames=("n_sweeps",))
+def _faulty_serial(problem, state, model, key, n_sweeps):
+    delivered, _ = sample_faults(model, key, n_sweeps, problem)
+    return sn_train.serial_sweep(
+        problem, state, n_sweeps=n_sweeps, delivered=delivered
+    )
+
+
+@partial(jax.jit, static_argnames=("n_sweeps", "engine"))
+def _faulty_robust(problem, state, model, key, n_sweeps, engine):
+    delivered, alive_tn = sample_faults(model, key, n_sweeps, problem)
+    return sn_train._robust_colored(
+        problem, state, alive_tn, n_sweeps=n_sweeps, engine=engine,
+        delivered=delivered,
+    )
+
+
+def faulty_sweep(
+    problem: SNTrainProblem,
+    state: SNTrainState,
+    model: FaultModel,
+    key: jax.Array,
+    n_sweeps: int = 1,
+    *,
+    engine: str = "plan",
+) -> SNTrainState:
+    """Run ``n_sweeps`` sweeps under the fault model.
+
+    Samples the delivery masks (and, when the model crashes sensors,
+    the alive trace) INSIDE jit from ``key``, then dispatches:
+
+      * crash-free models   -> the cached-factor engines
+        (``serial_sweep`` / ``colored_sweep``) with the ``delivered``
+        operand threaded through — no refactorization;
+      * crashing models     -> the ``robust_sweep`` path, which
+        refactorizes the masked systems per sweep (the PR-5 transient
+        machinery) and composes ``delivered`` on top.
+
+    ``engine``: "serial", or the colored engines "plan"/"onehot"/
+    "pallas".  Rates are traced, so one compiled program per
+    (n_sweeps, engine, shape) serves EVERY fault rate.
+    """
+    if engine == "serial":
+        if model.has_crash:
+            raise NotImplementedError(
+                "crash schedules dispatch the colored robust path; "
+                "use engine='plan'/'onehot'/'pallas'"
+            )
+        return _faulty_serial(problem, state, model, key, n_sweeps=n_sweeps)
+    if model.has_crash:
+        return _faulty_robust(
+            problem, state, model, key, n_sweeps=n_sweeps, engine=engine
+        )
+    return _faulty_colored(
+        problem, state, model, key, n_sweeps=n_sweeps, engine=engine
+    )
+
+
+def parse_fault_spec(spec: str, *, dtype=jnp.float32) -> FaultModel:
+    """Parse the CLI fault spec: ``drop=P[,burst=GB:BG:PB][,crash=C:R]``.
+
+    Examples: ``drop=0.1``; ``drop=0.05,burst=0.02:0.3:0.6``;
+    ``drop=0.1,crash=0.01:0.25``.  Used by ``serve.py --faults``.
+    """
+    drop, burst, crash = 0.0, None, None
+    for part in filter(None, (p.strip() for p in spec.split(","))):
+        if "=" not in part:
+            raise ValueError(f"bad fault spec field {part!r} in {spec!r}")
+        name, _, val = part.partition("=")
+        vals = tuple(float(v) for v in val.split(":"))
+        if name == "drop" and len(vals) == 1:
+            drop = vals[0]
+        elif name == "burst" and len(vals) == 3:
+            burst = vals
+        elif name == "crash" and len(vals) == 2:
+            crash = vals
+        else:
+            raise ValueError(
+                f"bad fault spec field {part!r} (want drop=P, "
+                f"burst=to_bad:to_good:drop_bad, crash=p_crash:p_restart)"
+            )
+    return make_fault_model(drop, burst, crash, dtype=dtype)

@@ -564,38 +564,65 @@ def _sensor_update(z, coef_s, nbr_idx_s, nbr_mask_s, gram_s, chol_s, lam_s):
 
 def _serial_core(
     nbr_idx, nbr_mask, gram, chol, lam_pad, sentinel, z, coef, order, n_sweeps,
-    alive_row, alive_slot,
+    alive_row, alive_slot, delivered=None,
 ):
-    def body(carry, s):
-        z, coef = carry
-        # Effective neighborhood: padded occupancy & slot/row liveness (a
-        # dead sensor neither updates nor is heard from; identity when the
-        # network is fully alive).
-        mask_s = nbr_mask[s] & alive_slot[nbr_idx[s]] & alive_row[s]
-        coef_new, z_new = _sensor_update(
-            z, coef[s], nbr_idx[s], mask_s, gram[s], chol[s], lam_pad[s]
-        )
-        coef = coef.at[s].set(jnp.where(alive_row[s], coef_new, coef[s]))
-        scatter_idx = jnp.where(mask_s, nbr_idx[s], sentinel)
-        z = z.at[scatter_idx].set(jnp.where(mask_s, z_new, z[sentinel]))
-        return (z, coef), None
+    def make_body(deliv_t):
+        def body(carry, s):
+            z, coef = carry
+            # Effective neighborhood: padded occupancy & slot/row liveness (a
+            # dead sensor neither updates nor is heard from; identity when the
+            # network is fully alive).
+            mask_s = nbr_mask[s] & alive_slot[nbr_idx[s]] & alive_row[s]
+            coef_new, z_new = _sensor_update(
+                z, coef[s], nbr_idx[s], mask_s, gram[s], chol[s], lam_pad[s]
+            )
+            coef = coef.at[s].set(jnp.where(alive_row[s], coef_new, coef[s]))
+            # Unreliable links (repro.core.faults): a dropped lane's WRITE
+            # never lands — the stale message persists (hold-last-value,
+            # the dead-target-slot semantics) while the local coefficient
+            # update above still runs (compute is local).
+            send = mask_s if deliv_t is None else mask_s & deliv_t[s]
+            scatter_idx = jnp.where(send, nbr_idx[s], sentinel)
+            z = z.at[scatter_idx].set(jnp.where(send, z_new, z[sentinel]))
+            return (z, coef), None
 
-    def sweep(carry, _):
-        carry, _ = jax.lax.scan(body, carry, order)
-        return carry, None
+        return body
 
-    (z, coef), _ = jax.lax.scan(sweep, (z, coef), None, length=n_sweeps)
+    if delivered is None:
+        body = make_body(None)
+
+        def sweep(carry, _):
+            carry, _ = jax.lax.scan(body, carry, order)
+            return carry, None
+
+        (z, coef), _ = jax.lax.scan(sweep, (z, coef), None, length=n_sweeps)
+    else:
+
+        def sweep(carry, deliv_t):
+            carry, _ = jax.lax.scan(make_body(deliv_t), carry, order)
+            return carry, None
+
+        (z, coef), _ = jax.lax.scan(sweep, (z, coef), delivered)
     return z, coef
 
 
 @partial(jax.jit, static_argnames=("n_sweeps",))
 def serial_sweep(
-    problem: SNTrainProblem, state: SNTrainState, n_sweeps: int = 1
+    problem: SNTrainProblem,
+    state: SNTrainState,
+    n_sweeps: int = 1,
+    *,
+    delivered: jax.Array | None = None,
 ) -> SNTrainState:
     """The paper's Table-1 serial ordering: for t: for s: project.
 
     Batched problems run every field's serial sweep simultaneously (vmap over
-    the field axis)."""
+    the field axis).
+
+    delivered: optional (n_sweeps, n+1, D) bool per-sweep link-delivery
+    mask (repro.core.faults), shared across fields; a dropped lane's
+    message write never lands (hold-last-value).  All-True is bitwise
+    the fault-free sweep."""
     order = jnp.arange(problem.n, dtype=jnp.int32)
     core = partial(
         _serial_core,
@@ -606,6 +633,7 @@ def serial_sweep(
         n_sweeps=n_sweeps,
         alive_row=problem.alive,
         alive_slot=problem.alive_z,
+        delivered=delivered,
     )
     run = lambda nm, g, ch, z, c: core(
         nbr_mask=nm, gram=g, chol=ch, z=z, coef=c
@@ -699,7 +727,10 @@ def _color_solve(
     return idx_m, coef_new, z_new
 
 
-def _apply_plan(z, coef, z_new, coef_new, plan_z_c, plan_coef_c, live_m, alive_slot):
+def _apply_plan(
+    z, coef, z_new, coef_new, plan_z_c, plan_coef_c, live_m, alive_slot,
+    deliv_flat=None,
+):
     """Static-gather realization of the color-step scatter: O(n_z + n*D).
 
     Scatter codes whose source member OR target message slot is DEAD
@@ -710,12 +741,21 @@ def _apply_plan(z, coef, z_new, coef_new, plan_z_c, plan_coef_c, live_m, alive_s
     persists (exactly what the serial engine's masked scatter does).
     Coefficient rows need no target gate — a row's only writer is its own
     sensor, so source and target liveness coincide.
+
+    deliv_flat: optional (M*D,) per-lane delivery gate in the color's
+    flat member order (repro.core.faults) — an UNDELIVERED lane's
+    message code degrades to "keep" exactly like a dead slot, while the
+    coefficient scatter is untouched (the local solve still happened).
     """
     b, n_z = z.shape
     d = z_new.shape[-1]
     zc = jnp.concatenate([z, z_new.reshape(b, -1)], axis=-1)[:, plan_z_c]
     src_m = jnp.clip((plan_z_c - n_z) // d, 0, live_m.shape[0] - 1)
-    use = (plan_z_c < n_z) | (live_m[src_m] & alive_slot)
+    fresh_ok = live_m[src_m] & alive_slot
+    if deliv_flat is not None:
+        lane = jnp.clip(plan_z_c - n_z, 0, deliv_flat.shape[0] - 1)
+        fresh_ok = fresh_ok & deliv_flat[lane]
+    use = (plan_z_c < n_z) | fresh_ok
     z = jnp.where(use[None, :], zc, z)
     n_rows = coef.shape[1]
     cc = jnp.concatenate([coef, coef_new], axis=1)[:, plan_coef_c]
@@ -726,19 +766,24 @@ def _apply_plan(z, coef, z_new, coef_new, plan_z_c, plan_coef_c, live_m, alive_s
 
 
 def _apply_onehot(
-    z, coef, z_new, coef_new, idx_m, members, n_z, n_rows, live_m, alive_slot
+    z, coef, z_new, coef_new, idx_m, members, n_z, n_rows, live_m, alive_slot,
+    deliv_flat=None,
 ):
     """Dense one-hot reference realization: O(M*D*n_z) GEMMs per color.
 
     Exact because slot ids are unique within a color; the sentinel id may
     repeat but only ever receives zeros, 0 * (1-hit) == 0.  Dead members'
     one-hot ROWS and dead slots' one-hot COLUMNS are zeroed, realizing the
-    same source/target "keep" gates as the plan gather.
+    same source/target "keep" gates as the plan gather; an undelivered
+    lane (``deliv_flat``, repro.core.faults) zeroes its one-hot ROW the
+    same way — the message never lands, the slot keeps its value.
     """
     b = z.shape[0]
     d = idx_m.shape[-1]
     flat_idx = idx_m.reshape(-1)  # (M*D,)
     live_f = jnp.repeat(live_m, d).astype(z.dtype)  # (M*D,)
+    if deliv_flat is not None:
+        live_f = live_f * deliv_flat.astype(z.dtype)
     oh = (flat_idx[:, None] == jnp.arange(n_z)[None, :]).astype(z.dtype)
     oh = oh * live_f[:, None] * alive_slot.astype(z.dtype)[None, :]
     hit = oh.sum(axis=0)  # (NZ,)
@@ -763,6 +808,7 @@ def _colored_core(
     problem: SNTrainProblem, nbr_mask, gram, chol, z, coef, n_sweeps,
     engine: str = "plan",
     alive=None,
+    delivered=None,
 ):
     """Batched colored sweep over explicitly-leading field axes.
 
@@ -770,6 +816,13 @@ def _colored_core(
     ``robust_sweep`` for per-sweep transient liveness); all engines gate
     dead members' updates and dead slots' reads, reducing bit-for-bit to
     the lifecycle-free sweep at all-True liveness.
+
+    ``delivered`` is the optional (n_sweeps, n+1, D) per-sweep
+    link-delivery mask (repro.core.faults), shared across fields: an
+    undelivered lane's message write degrades to "keep" in every engine
+    (hold-last-value), the coefficient update is untouched, and
+    all-True is bitwise the fault-free sweep.  ``None`` keeps the
+    fault-free scan structure unchanged.
     """
     if engine not in ENGINES:
         raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
@@ -785,51 +838,69 @@ def _colored_core(
         problem.plan_z, problem.plan_coef,
     )
 
-    if engine == "pallas":
-        from repro.kernels.color_step import color_step_fused
+    def make_color_body(deliv_t):
+        if engine == "pallas":
+            from repro.kernels.color_step import color_step_fused
 
-        def color_body(carry, cm):
-            z, coef = carry
-            members, member_mask, _, _ = cm
-            idx_m = problem.nbr_idx[members]
-            live_m = member_mask & alive_row[members]
-            z, coef = color_step_fused(
-                z, coef, members, idx_m,
-                nbr_mask[:, members]
-                & live_m[None, :, None]
-                & alive_slot[idx_m][None],
-                gram[:, members], chol[:, members],
-                problem.lam_pad[members],
-                alive_row[members],
-                alive_slot,
-            )
-            return (z, coef), None
+            def color_body(carry, cm):
+                z, coef = carry
+                members, member_mask, _, _ = cm
+                idx_m = problem.nbr_idx[members]
+                live_m = member_mask & alive_row[members]
+                z, coef = color_step_fused(
+                    z, coef, members, idx_m,
+                    nbr_mask[:, members]
+                    & live_m[None, :, None]
+                    & alive_slot[idx_m][None],
+                    gram[:, members], chol[:, members],
+                    problem.lam_pad[members],
+                    alive_row[members],
+                    alive_slot,
+                    None if deliv_t is None else deliv_t[members],
+                )
+                return (z, coef), None
+        else:
+
+            def color_body(carry, cm):
+                z, coef = carry
+                members, member_mask, plan_z_c, plan_coef_c = cm
+                live_m = member_mask & alive_row[members]
+                deliv_flat = (
+                    None if deliv_t is None else deliv_t[members].reshape(-1)
+                )
+                idx_m, coef_new, z_new = solve(
+                    nbr_mask, gram, chol, z, coef, members, member_mask
+                )
+                if engine == "plan":
+                    z, coef = _apply_plan(
+                        z, coef, z_new, coef_new, plan_z_c, plan_coef_c,
+                        live_m, alive_slot, deliv_flat,
+                    )
+                else:
+                    z, coef = _apply_onehot(
+                        z, coef, z_new, coef_new, idx_m, members,
+                        problem.n_z, problem.n + 1, live_m, alive_slot,
+                        deliv_flat,
+                    )
+                return (z, coef), None
+
+        return color_body
+
+    if delivered is None:
+        color_body = make_color_body(None)
+
+        def sweep(carry, _):
+            carry, _ = jax.lax.scan(color_body, carry, xs)
+            return carry, None
+
+        (z, coef), _ = jax.lax.scan(sweep, (z, coef), None, length=n_sweeps)
     else:
 
-        def color_body(carry, cm):
-            z, coef = carry
-            members, member_mask, plan_z_c, plan_coef_c = cm
-            live_m = member_mask & alive_row[members]
-            idx_m, coef_new, z_new = solve(
-                nbr_mask, gram, chol, z, coef, members, member_mask
-            )
-            if engine == "plan":
-                z, coef = _apply_plan(
-                    z, coef, z_new, coef_new, plan_z_c, plan_coef_c,
-                    live_m, alive_slot,
-                )
-            else:
-                z, coef = _apply_onehot(
-                    z, coef, z_new, coef_new, idx_m, members,
-                    problem.n_z, problem.n + 1, live_m, alive_slot,
-                )
-            return (z, coef), None
+        def sweep(carry, deliv_t):
+            carry, _ = jax.lax.scan(make_color_body(deliv_t), carry, xs)
+            return carry, None
 
-    def sweep(carry, _):
-        carry, _ = jax.lax.scan(color_body, carry, xs)
-        return carry, None
-
-    (z, coef), _ = jax.lax.scan(sweep, (z, coef), None, length=n_sweeps)
+        (z, coef), _ = jax.lax.scan(sweep, (z, coef), delivered)
     return z, coef
 
 
@@ -840,6 +911,7 @@ def colored_sweep(
     n_sweeps: int = 1,
     *,
     engine: str = "plan",
+    delivered: jax.Array | None = None,
 ) -> SNTrainState:
     """Distance-2-colored parallel SOP (paper Sec. 3.3 'Parallelism').
 
@@ -850,17 +922,23 @@ def colored_sweep(
     (dense one-hot GEMM reference, O(n^2)) or "pallas" (fused VMEM color-step
     kernel).  All three share the local solves and produce identical fixed
     points; see the module docstring.
+
+    delivered: optional (n_sweeps, n+1, D) bool per-sweep link-delivery
+    mask (repro.core.faults), shared across fields; dropped messages
+    hold their last value.  All-True is bitwise the fault-free sweep,
+    engine by engine.
     """
     if problem.batched:
         z, coef = _colored_core(
             problem, problem.nbr_mask, problem.gram, problem.chol,
-            state.z, state.coef, n_sweeps, engine,
+            state.z, state.coef, n_sweeps, engine, delivered=delivered,
         )
         return SNTrainState(z=z, coef=coef)
     z, coef = _colored_core(
         problem,
         problem.nbr_mask[None], problem.gram[None], problem.chol[None],
         state.z[None], state.coef[None], n_sweeps, engine,
+        delivered=delivered,
     )
     return SNTrainState(z=z[0], coef=coef[0])
 
@@ -922,6 +1000,7 @@ def sharded_sweep(
     axis: str = "sensors",
     n_sweeps: int = 1,
     engine: str = "plan",
+    delivered: jax.Array | None = None,
 ) -> SNTrainState:
     """colored_sweep distributed with shard_map over `axis`.
 
@@ -940,10 +1019,17 @@ def sharded_sweep(
     problems, so each device runs the colored engine on its own B/n_dev
     fields with no cross-device traffic at all (the serving-throughput
     configuration).
+
+    delivered: optional (n_sweeps, n+1, D) bool link-delivery mask
+    (repro.core.faults).  Delivery is a property of the physical lane,
+    so the mask is REPLICATED in both sharding regimes (every device
+    applies the same gates to its shard of the work); dropped messages
+    hold their last value, all-True is bitwise fault-free.
     """
     if problem.batched:
         return _sharded_sweep_fields(
-            problem, state, mesh, axis=axis, n_sweeps=n_sweeps, engine=engine
+            problem, state, mesh, axis=axis, n_sweeps=n_sweeps, engine=engine,
+            delivered=delivered,
         )
 
     if engine not in ENGINES:
@@ -980,39 +1066,62 @@ def sharded_sweep(
         # members_l: (n_colors, 1, m_local) local shard.
         members_l = members_l[:, 0]
         mask_l = mask_l[:, 0]
+        xs = (
+            members_l, mask_l, problem.plan_z, problem.plan_coef,
+            live_full, members_full,
+        )
 
-        def color_body(carry, cm):
-            z, coef = carry
-            mem, mmask, plan_z_c, plan_coef_c, live_c = cm
-            _, coef_new, z_new = solve(
-                problem.nbr_mask[None], problem.gram[None], problem.chol[None],
-                z[None], coef[None], mem, mmask,
-            )
-            # Assemble the color's touched values: device order equals the
-            # plans' flat member order (padding is appended), so one tiled
-            # all-gather of each device's fresh slice IS the (m_pad, D)
-            # buffer — no zero-padded psum, payload exactly M*D.
-            z_full = jax.lax.all_gather(
-                z_new[0].reshape(-1), axis, tiled=True
-            )  # (m_pad*D,)
-            c_full = jax.lax.all_gather(
-                coef_new[0], axis, tiled=True
-            )  # (m_pad, D)
-            z, coef = _apply_plan(
-                z[None], coef[None], z_full[None], c_full[None],
-                plan_z_c, plan_coef_c, live_c, problem.alive_z,
-            )
-            return (z[0], coef[0]), None
+        def make_color_body(deliv_t):
+            def color_body(carry, cm):
+                z, coef = carry
+                mem, mmask, plan_z_c, plan_coef_c, live_c, mem_full = cm
+                _, coef_new, z_new = solve(
+                    problem.nbr_mask[None], problem.gram[None],
+                    problem.chol[None], z[None], coef[None], mem, mmask,
+                )
+                # Assemble the color's touched values: device order equals
+                # the plans' flat member order (padding is appended), so one
+                # tiled all-gather of each device's fresh slice IS the
+                # (m_pad, D) buffer — no zero-padded psum, payload exactly
+                # M*D.
+                z_full = jax.lax.all_gather(
+                    z_new[0].reshape(-1), axis, tiled=True
+                )  # (m_pad*D,)
+                c_full = jax.lax.all_gather(
+                    coef_new[0], axis, tiled=True
+                )  # (m_pad, D)
+                # Link delivery gates the full flat buffer (replicated —
+                # every device sees the same drops).
+                deliv_flat = (
+                    None if deliv_t is None
+                    else deliv_t[mem_full].reshape(-1)
+                )
+                z, coef = _apply_plan(
+                    z[None], coef[None], z_full[None], c_full[None],
+                    plan_z_c, plan_coef_c, live_c, problem.alive_z,
+                    deliv_flat,
+                )
+                return (z[0], coef[0]), None
 
-        def sweep(carry, _):
-            carry, _ = jax.lax.scan(
-                color_body, carry,
-                (members_l, mask_l, problem.plan_z, problem.plan_coef,
-                 live_full),
-            )
-            return carry, None
+            return color_body
 
-        (z, coef), _ = jax.lax.scan(sweep, (z, coef), None, length=n_sweeps)
+        if delivered is None:
+            body = make_color_body(None)
+
+            def sweep(carry, _):
+                carry, _ = jax.lax.scan(body, carry, xs)
+                return carry, None
+
+            (z, coef), _ = jax.lax.scan(
+                sweep, (z, coef), None, length=n_sweeps
+            )
+        else:
+
+            def sweep(carry, deliv_t):
+                carry, _ = jax.lax.scan(make_color_body(deliv_t), carry, xs)
+                return carry, None
+
+            (z, coef), _ = jax.lax.scan(sweep, (z, coef), delivered)
         return z, coef
 
     fn = compat.shard_map(
@@ -1025,8 +1134,13 @@ def sharded_sweep(
     return SNTrainState(z=z, coef=coef)
 
 
-def _sharded_sweep_fields(problem, state, mesh, *, axis, n_sweeps, engine="plan"):
-    """Field-data-parallel sharding of the batched colored engine."""
+def _sharded_sweep_fields(
+    problem, state, mesh, *, axis, n_sweeps, engine="plan", delivered=None
+):
+    """Field-data-parallel sharding of the batched colored engine.
+
+    ``delivered`` rides in by closure: link delivery is shared across
+    fields, so the mask is replicated on every device shard."""
     b = problem.batch_size
     n_dev = mesh.shape[axis]
     if b % n_dev != 0:
@@ -1034,7 +1148,8 @@ def _sharded_sweep_fields(problem, state, mesh, *, axis, n_sweeps, engine="plan"
 
     def device_fn(nbr_mask, gram, chol, z, coef):
         return _colored_core(
-            problem, nbr_mask, gram, chol, z, coef, n_sweeps, engine
+            problem, nbr_mask, gram, chol, z, coef, n_sweeps, engine,
+            delivered=delivered,
         )
 
     spec = P(axis)
@@ -1190,14 +1305,15 @@ def _masked_factors(problem: SNTrainProblem, nbr_mask, gram, alive_row):
 
 
 @partial(jax.jit, static_argnames=("n_sweeps", "engine"))
-def _robust_colored(problem, state, alive_tn, n_sweeps, engine):
+def _robust_colored(problem, state, alive_tn, n_sweeps, engine, delivered=None):
     batched = problem.batched
     nbr_mask = problem.nbr_mask if batched else problem.nbr_mask[None]
     gram = problem.gram if batched else problem.gram[None]
     z = state.z if batched else state.z[None]
     coef = state.coef if batched else state.coef[None]
 
-    def sweep_body(carry, alive_t):
+    def sweep_body(carry, inp):
+        alive_t, deliv_t = inp
         z, coef = carry
         alive_row = problem.alive & jnp.concatenate(
             [alive_t, jnp.ones((1,), bool)]
@@ -1206,10 +1322,11 @@ def _robust_colored(problem, state, alive_tn, n_sweeps, engine):
         z, coef = _colored_core(
             problem, nbr_mask, gram_eff, chol_eff, z, coef, 1, engine,
             alive=alive_row,
+            delivered=None if deliv_t is None else deliv_t[None],
         )
         return (z, coef), None
 
-    (z, coef), _ = jax.lax.scan(sweep_body, (z, coef), alive_tn)
+    (z, coef), _ = jax.lax.scan(sweep_body, (z, coef), (alive_tn, delivered))
     if batched:
         return SNTrainState(z=z, coef=coef)
     return SNTrainState(z=z[0], coef=coef[0])
@@ -1222,6 +1339,7 @@ def robust_sweep(
     n_sweeps: int = 1,
     *,
     engine: str = "plan",
+    delivered: jax.Array | None = None,
 ) -> SNTrainState:
     """SN-Train with a changing topology (paper Sec. 3.3 'Robustness').
 
@@ -1251,12 +1369,23 @@ def robust_sweep(
     ``remove_sensor`` instead, which patch the factors once per event so
     ``colored_sweep`` keeps its cached-factor speed.
 
+    ``delivered``: optional (n_sweeps, n+1, D) bool per-sweep
+    link-delivery mask (repro.core.faults) composed ON TOP of the
+    per-sweep liveness — a crashed-sensor schedule with lossy links is
+    exactly this call (``faults.faulty_sweep`` dispatches here when the
+    model crashes sensors).  All-True is the plain robust sweep bitwise.
+
     Legacy LINK-level traces — (n_sweeps, n, D) bool — route to the
     original serial dense path (``robust_sweep_links``), single-field
-    only, unchanged.
+    only, unchanged (and without fault injection).
     """
     alive = jnp.asarray(alive)
     if alive.ndim == 3:
+        if delivered is not None:
+            raise NotImplementedError(
+                "delivered masks compose with SENSOR-level alive traces; "
+                "legacy link-level traces already encode per-lane loss"
+            )
         return robust_sweep_links(problem, state, alive, n_sweeps)
     alive = alive.astype(bool)
     if alive.ndim == 1:
@@ -1267,7 +1396,8 @@ def robust_sweep(
             f"or legacy (n_sweeps, n, D); got {alive.shape}"
         )
     return _robust_colored(
-        problem, state, alive, n_sweeps=n_sweeps, engine=engine
+        problem, state, alive, n_sweeps=n_sweeps, engine=engine,
+        delivered=delivered,
     )
 
 

@@ -37,7 +37,7 @@ from jax.experimental import pallas as pl
 
 def _color_step_kernel(
     z_ref, coef_ref, mem_ref, idx_ref, mask_ref, gram_ref, chol_ref, lam_ref,
-    alive_ref, alivez_ref, zout_ref, cout_ref,
+    alive_ref, alivez_ref, deliv_ref, zout_ref, cout_ref,
 ):
     j = pl.program_id(1)
 
@@ -56,6 +56,7 @@ def _color_step_kernel(
     lam = lam_ref[...]  # (bm,)
     alive = alive_ref[...] != 0  # (bm,) member liveness (network lifecycle)
     alivez = alivez_ref[...] != 0  # (NZ,) message-slot liveness
+    deliv = deliv_ref[...] != 0  # (bm, D) per-lane link delivery (faults)
     d = idx.shape[-1]
 
     # Gather: this block's messages and previous coefficients.
@@ -84,11 +85,14 @@ def _color_step_kernel(
     # Scatter (unique owners; padded lanes write zeros to the sentinels).
     # DEAD members (removed / transiently down sensors) redirect to the
     # sentinels, and so do lanes whose TARGET slot is dead (a down mote's
-    # own message slot is unreachable): slots and coefficient rows KEEP
-    # their values, matching the source/target gates of the plan engine.
+    # own message slot is unreachable) and lanes whose message was DROPPED
+    # by the link (repro.core.faults): slots and coefficient rows KEEP
+    # their values, matching the source/target/delivery gates of the plan
+    # engine.  Coefficients are local compute, so ``deliv`` gates the
+    # message scatter only.
     n_z = z.shape[0]
     r = coefv.shape[0]
-    idx_eff = jnp.where(alive[:, None] & alivez[idx], idx, n_z - 1)
+    idx_eff = jnp.where(alive[:, None] & alivez[idx] & deliv, idx, n_z - 1)
     mem_eff = jnp.where(alive, mem, r - 1)
     zout_ref[0, :] = z.at[idx_eff.reshape(-1)].set(z_new.reshape(-1))
     cout_ref[0] = coefv.at[mem_eff].set(coef_new)
@@ -106,6 +110,7 @@ def color_step_pallas(
     lam_m: jax.Array,
     alive_m: jax.Array,
     alive_z: jax.Array,
+    deliv_m: jax.Array,
     *,
     block_m: int = 8,
     interpret: bool = False,
@@ -119,6 +124,7 @@ def color_step_pallas(
     assert gram_m.shape == (b, m, d, d) and chol_m.shape == (b, m, d, d)
     assert alive_m.shape == (m,), (alive_m.shape, m)
     assert alive_z.shape == (n_z,), (alive_z.shape, n_z)
+    assert deliv_m.shape == (m, d), (deliv_m.shape, m, d)
     assert m % block_m == 0, (m, block_m)
     grid = (b, m // block_m)
     return pl.pallas_call(
@@ -135,6 +141,7 @@ def color_step_pallas(
             pl.BlockSpec((block_m,), lambda b, j: (j,)),
             pl.BlockSpec((block_m,), lambda b, j: (j,)),
             pl.BlockSpec((n_z,), lambda b, j: (0,)),
+            pl.BlockSpec((block_m, d), lambda b, j: (j, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, n_z), lambda b, j: (b, 0)),
@@ -145,7 +152,10 @@ def color_step_pallas(
             jax.ShapeDtypeStruct(coef.shape, coef.dtype),
         ],
         interpret=interpret,
-    )(z, coef, members, idx_m, mask_m, gram_m, chol_m, lam_m, alive_m, alive_z)
+    )(
+        z, coef, members, idx_m, mask_m, gram_m, chol_m, lam_m, alive_m,
+        alive_z, deliv_m,
+    )
 
 
 def color_step_fused(
@@ -159,6 +169,7 @@ def color_step_fused(
     lam_m: jax.Array,
     alive_m: jax.Array | None = None,
     alive_z: jax.Array | None = None,
+    deliv_m: jax.Array | None = None,
     *,
     block_m: int = 8,
     interpret: bool | None = None,
@@ -171,7 +182,11 @@ def color_step_fused(
     liveness (None = fully alive) — the network lifecycle's mask operands:
     scatters from dead members or onto dead slots redirect to the
     sentinels so those slots and coefficient rows KEEP their values.
-    Returns the updated (z, coef).
+    deliv_m (M, D) bool per-lane link delivery (None = all delivered,
+    repro.core.faults): an undelivered lane redirects its MESSAGE write
+    to the sentinel the same way (hold-last-value) while the
+    coefficient row still updates — compute is local, only the radio
+    drops.  Returns the updated (z, coef).
 
     The lane axis is padded to a block multiple with inert lanes (sentinel
     member row, sentinel slot ids, identity Cholesky): they solve to exact
@@ -186,6 +201,8 @@ def color_step_fused(
         alive_m = jnp.ones((m,), bool)
     if alive_z is None:
         alive_z = jnp.ones((n_z,), bool)
+    if deliv_m is None:
+        deliv_m = jnp.ones((m, d), bool)
     block_m = min(block_m, max(1, m))
     pad = (-m) % block_m
     if pad:
@@ -205,10 +222,14 @@ def color_step_fused(
         chol_m = jnp.concatenate([chol_m, eye], axis=1)
         lam_m = jnp.concatenate([lam_m, jnp.ones((pad,), lam_m.dtype)])
         alive_m = jnp.concatenate([alive_m, jnp.ones((pad,), alive_m.dtype)])
+        deliv_m = jnp.concatenate(
+            [deliv_m, jnp.ones((pad, d), deliv_m.dtype)]
+        )
     return color_step_pallas(
         z, coef,
         members.astype(jnp.int32), idx_m.astype(jnp.int32),
         mask_m.astype(jnp.int8), gram_m, chol_m, lam_m,
         alive_m.astype(jnp.int8), alive_z.astype(jnp.int8),
+        deliv_m.astype(jnp.int8),
         block_m=block_m, interpret=interpret,
     )

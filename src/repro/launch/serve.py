@@ -25,6 +25,15 @@ Two workloads:
                        fixed ``n_max`` capacity, so the whole trace compiles
                        a constant number of programs (the report prints the
                        jit-cache growth after warmup; it should be 0).
+                       ``--faults drop=P[,burst=..][,crash=..]`` replays
+                       training over unreliable links: every message draw
+                       comes from the seeded ``core.faults`` process
+                       (i.i.d. drops, Gilbert–Elliott bursts, crash/restart
+                       schedules) and the ``core.monitor`` watchdog
+                       supervises each round — retrying poisoned rounds
+                       with fresh draws, refactorizing once, rolling back
+                       bitwise if divergence persists — and its receipt is
+                       printed.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m \
@@ -35,6 +44,9 @@ Examples:
   PYTHONPATH=src python -m repro.launch.serve --mode field \
     --fields 16 --sensors 100 --stream 64 --churn 12 --spares 8 \
     --fusion knn --k 3 --engine plan
+  PYTHONPATH=src python -m repro.launch.serve --mode field \
+    --fields 8 --sensors 60 --sweeps 150 \
+    --faults drop=0.1,burst=0.05:0.4:0.5
 """
 
 from __future__ import annotations
@@ -134,14 +146,46 @@ def serve_fields(args):
     )
 
     # -- train: batched colored sweeps -------------------------------------
-    # warm with the SAME n_sweeps: it is a static jit arg, so a different
-    # value would compile a different program and the timing would include it
-    colored_sweep(prob, state, n_sweeps=args.sweeps).z.block_until_ready()
-    t0 = time.time()
-    state = colored_sweep(prob, state, n_sweeps=args.sweeps)
-    state.z.block_until_ready()
-    dt = time.time() - t0
-    print(f"train: {args.sweeps} sweeps x {b} fields in {dt:.3f}s -> {b/dt:.1f} fields/s")
+    if args.faults:
+        # Unreliable-link replay: train under the seeded fault process with
+        # the convergence watchdog supervising every round (retry with fresh
+        # draws -> refactorize -> bitwise rollback).  The fault rates are
+        # traced operands, so the whole replay reuses the fault-free
+        # programs — zero extra compiles.
+        from repro.core import faults as faults_mod, monitor
+
+        model = faults_mod.parse_fault_spec(args.faults, dtype=state.z.dtype)
+        engine = "pallas" if args.engine == "pallas" else "plan"
+        cfg = monitor.WatchdogConfig(
+            sweeps_per_round=args.refresh_sweeps,
+            tol=args.watch_tol,
+            max_rounds=max(1, -(-args.sweeps // args.refresh_sweeps)),
+        )
+        t0 = time.time()
+        prob, state, receipt = monitor.watch_sweeps(
+            prob, state, model=model,
+            key=jax.random.PRNGKey(args.seed + 1), engine=engine, config=cfg,
+        )
+        state.z.block_until_ready()
+        dt = time.time() - t0
+        print(
+            f"train[faults {args.faults}, engine={engine}]: "
+            f"{receipt.sweeps} supervised sweeps x {b} fields in {dt:.3f}s"
+        )
+        print(monitor.format_receipt(receipt))
+    else:
+        # warm with the SAME n_sweeps: it is a static jit arg, so a
+        # different value would compile a different program and the timing
+        # would include it
+        colored_sweep(prob, state, n_sweeps=args.sweeps).z.block_until_ready()
+        t0 = time.time()
+        state = colored_sweep(prob, state, n_sweeps=args.sweeps)
+        state.z.block_until_ready()
+        dt = time.time() - t0
+        print(
+            f"train: {args.sweeps} sweeps x {b} fields in {dt:.3f}s "
+            f"-> {b/dt:.1f} fields/s"
+        )
 
     # -- streaming: batched absorb, ONE dispatch per arrival window --------
     if args.stream:
@@ -296,11 +340,17 @@ def serve_fields(args):
         per_round = dt / max(args.churn - 2, 1) * 1e3
         from repro.core import plans as _plans
 
-        headroom = _plans.degree_headroom(
-            prob.topology.degrees, prob.alive[: prob.n], prob.topology.d_max
+        headroom = np.asarray(
+            _plans.degree_headroom(
+                prob.topology.degrees, prob.alive[: prob.n],
+                prob.topology.d_max,
+            )
         )
         live = np.asarray(prob.alive[: prob.n])
-        min_headroom = int(np.asarray(headroom)[live].min()) if live.any() else 0
+        hr = headroom[live]
+        min_headroom = int(hr.min()) if hr.size else 0
+        p50_headroom = int(np.median(hr)) if hr.size else 0
+        rows_at_0 = int((hr == 0).sum())
         print(
             f"churn: {args.churn} rounds ({stats['joins']} joins, "
             f"{stats['leaves']} leaves, {stats['join_drops']} join-drops, "
@@ -313,9 +363,10 @@ def serve_fields(args):
             f"churn receipts: {stats['skipped_couplings']} couplings "
             f"skipped (lane-exhausted neighbors), "
             f"{stats['dropped_newest']} newest arrivals dropped to anchor "
-            f"lanes; min live degree headroom {min_headroom}"
+            f"lanes; live degree headroom min={min_headroom} "
+            f"p50={p50_headroom} rows_at_0={rows_at_0}"
             + (" -- joins near 0-headroom rows lose couplings"
-               if min_headroom == 0 else "")
+               if rows_at_0 else "")
         )
 
     # -- query: one dispatch per request grid ------------------------------
@@ -392,6 +443,16 @@ def main():
                     help="spare sensor rows reserved for --churn joins "
                          "(n_max = sensors + spares; the recolor pool "
                          "defaults to 2x this)")
+    ap.add_argument("--faults", default="",
+                    help="unreliable-link replay spec for training: "
+                         "drop=P[,burst=to_bad:to_good:drop_bad]"
+                         "[,crash=p_crash:p_restart]; trains under the "
+                         "seeded fault process with the convergence "
+                         "watchdog supervising (retry / refactorize / "
+                         "rollback) and prints the receipt")
+    ap.add_argument("--watch_tol", type=float, default=1e-3,
+                    help="--faults watchdog convergence tolerance "
+                         "(max relative z-residual per round)")
     ap.add_argument("--queries", type=int, default=256)
     ap.add_argument("--fusion", default="conn", choices=["conn", "knn"],
                     help="query fusion rule (knn routes through the query plan)")

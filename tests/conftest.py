@@ -10,3 +10,18 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _clear_jax_caches_between_modules():
+    # The suite jit-compiles hundreds of programs across modules; on the
+    # single-CPU container the accumulated XLA compiler state can segfault
+    # a later module's backend_compile. Dropping compiled executables at
+    # module boundaries keeps each module's compile pressure independent.
+    yield
+    try:
+        import jax
+
+        jax.clear_caches()
+    except Exception:
+        pass

@@ -304,3 +304,82 @@ def test_drift_soak_beta_tracking_under_churn(seed):
     # never does worse than the static field it shares the trace with
     assert ss[1] < 0.45, f"beta=0.5 steady-state RMSE {ss}"
     assert ss[1] <= ss[0] + 0.05, f"forgetting must not hurt tracking {ss}"
+
+
+@settings(deadline=None, max_examples=3)
+@given(seed=st.integers(0, 1000))
+def test_fault_soak_identity_monotone_degradation_rollback(seed):
+    """ISSUE-7 fault soak on CHURNED problems (a join and a leave first, so
+    the delivered gates compose with real liveness masks).  Pins:
+
+      (i)   an all-delivered mask reproduces the fault-free iterates
+            BITWISE for every engine;
+      (ii)  degradation is monotone in the drop rate: the key-averaged
+            distance to the converged fault-free solution only grows as
+            the rate rises (delivery masks are monotonically coupled
+            under one key — u >= p thresholding);
+      (iii) checkpoint -> faulty training -> rollback restores every
+            problem/state table bitwise.
+    """
+    import tempfile
+
+    import jax
+
+    from repro import checkpoint as ckpt
+    from repro.core import faults
+
+    prob, state, _ = _build(seed % 5)
+    ev = np.random.default_rng(seed)
+    x = ev.uniform(-0.8, 0.8, size=1).astype(np.float32)
+    prob, state, rec = add_sensor(
+        prob, state, x, ev.normal(size=B).astype(np.float32), lam=LAM
+    )
+    live = np.nonzero(np.asarray(prob.alive[: prob.n]))[0]
+    prob2, state2, ok = remove_sensor(prob, state, int(ev.choice(live)))
+    if bool(ok):
+        prob, state = prob2, state2
+
+    # (i) all-delivered == fault-free, bitwise, engine by engine
+    ones = jnp.ones((2,) + prob.nbr_idx.shape, bool)
+    for engine in ("serial", "plan", "onehot", "pallas"):
+        if engine == "serial":
+            ref = serial_sweep(prob, state, n_sweeps=2)
+            out = serial_sweep(prob, state, n_sweeps=2, delivered=ones)
+        else:
+            ref = colored_sweep(prob, state, n_sweeps=2, engine=engine)
+            out = colored_sweep(
+                prob, state, n_sweeps=2, engine=engine, delivered=ones
+            )
+        assert np.array_equal(np.asarray(out.z), np.asarray(ref.z)), engine
+        assert np.array_equal(
+            np.asarray(out.coef), np.asarray(ref.coef)
+        ), engine
+
+    # (ii) monotone degradation vs the converged fault-free solution
+    zstar = colored_sweep(prob, state, n_sweeps=60).z
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    dist = []
+    for p in (0.0, 0.25, 0.6):
+        dist.append(np.mean([
+            float(jnp.linalg.norm(
+                faults.faulty_sweep(
+                    prob, state, faults.make_fault_model(p), k, n_sweeps=8
+                ).z - zstar
+            ))
+            for k in keys
+        ]))
+    assert dist[0] <= dist[1] * 1.05 + 1e-6, dist
+    assert dist[1] <= dist[2] * 1.05 + 1e-6, dist
+
+    # (iii) checkpoint -> faulty training -> rollback, bitwise
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save_train(d, 0, prob, state)
+        mutated = faults.faulty_sweep(
+            prob, state, faults.make_fault_model(0.5), keys[0], n_sweeps=4
+        )
+        assert not np.array_equal(np.asarray(mutated.z), np.asarray(state.z))
+        prob_r, state_r = ckpt.restore_train(d, 0, prob, mutated)
+    for a, b in zip(jax.tree.leaves(prob), jax.tree.leaves(prob_r)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(state_r)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))

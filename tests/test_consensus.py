@@ -153,3 +153,107 @@ print("OK")
                          env=env, cwd=root)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "OK" in out.stdout
+
+
+def test_schedule_dispatch_and_validation():
+    """`schedule()` is the named entry point serve/bench configs use; the
+    pairings it returns must be involutions (pairwise_project's contract)."""
+    assert consensus.schedule("hypercube", 8) == consensus.hypercube_schedule(8)
+    assert consensus.schedule("ring", 6) == consensus.ring_schedule(6)
+    for name, n in (("hypercube", 8), ("ring", 6)):
+        for partners in consensus.schedule(name, n):
+            assert [partners[p] for p in partners] == list(range(n)), (
+                name, partners,
+            )
+    import pytest
+
+    with pytest.raises(ValueError):
+        consensus.schedule("bogus", 4)
+    with pytest.raises(ValueError):
+        consensus.hypercube_schedule(6)  # not a power of two
+    with pytest.raises(ValueError):
+        consensus.ring_schedule(5)  # odd
+
+
+def test_one_sided_ring_schedule_shifts():
+    """The Cimmino-style schedule is a pair of mutually inverse shifts."""
+    n = 6
+    fwd, bwd = consensus.one_sided_ring_schedule(n)
+    assert fwd == [(i + 1) % n for i in range(n)]
+    assert [fwd[b] for b in bwd] == list(range(n))
+
+
+def test_gossip_round_and_neighborhood_average_device_subprocess():
+    """Device-mode coverage of the collectives the stacked trainer uses:
+    gossip_round's lax.switch pairing == the host sim of the same pairing;
+    neighborhood_average == the explicit (x_{i-1}+x_i+x_{i+1})/3 stencil
+    and contracts the disagreement; allreduce_average == the global mean
+    (paper Lemma 3.1's complete-graph special case)."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.core import consensus
+
+n = 4
+rng = np.random.default_rng(1)
+stacked = {"w": jnp.asarray(rng.normal(size=(n, 3, 2)).astype(np.float32))}
+sched = consensus.ring_schedule(n)
+mesh = compat.make_mesh((n,), ("data",))
+sm = lambda f: jax.jit(compat.shard_map(
+    f, mesh=mesh, in_specs=(P("data"),), out_specs=P("data")))
+
+for r in range(3):  # round-robin switch over the schedule
+    dev = sm(lambda t, r=r: jax.tree.map(
+        lambda a: a[None],
+        consensus.gossip_round(
+            jax.tree.map(lambda a: a[0], t), "data", sched, jnp.int32(r)
+        ),
+    ))(stacked)
+    sim = consensus.sim_pairwise_project(stacked, sched[r % len(sched)])
+    assert np.allclose(np.asarray(dev["w"]), np.asarray(sim["w"]), atol=1e-6), r
+
+out = sm(lambda t: jax.tree.map(
+    lambda a: a[None],
+    consensus.neighborhood_average(jax.tree.map(lambda a: a[0], t), "data", n),
+))(stacked)
+w = np.asarray(stacked["w"])
+stencil = (w + np.roll(w, 1, axis=0) + np.roll(w, -1, axis=0)) / 3.0
+assert np.allclose(np.asarray(out["w"]), stencil, atol=1e-6)
+
+def disagreement(tree):
+    v = np.asarray(tree["w"])
+    return float(np.sum((v - v.mean(0, keepdims=True)) ** 2))
+tree = stacked
+for _ in range(40):  # repeated averaging drives consensus to the mean
+    prev = disagreement(tree)
+    tree = sm(lambda t: jax.tree.map(
+        lambda a: a[None],
+        consensus.neighborhood_average(
+            jax.tree.map(lambda a: a[0], t), "data", n
+        ),
+    ))(tree)
+    assert disagreement(tree) <= prev * (1 + 1e-6) + 1e-9
+assert np.allclose(
+    np.asarray(tree["w"]),
+    np.asarray(stacked["w"]).mean(0, keepdims=True), atol=1e-4,
+)
+
+avg = sm(lambda t: jax.tree.map(
+    lambda a: a[None],
+    consensus.allreduce_average(jax.tree.map(lambda a: a[0], t), "data"),
+))(stacked)
+assert np.allclose(
+    np.asarray(avg["w"]),
+    np.asarray(stacked["w"]).mean(0, keepdims=True), atol=1e-6,
+)
+print("OK")
+"""
+    env = dict(os.environ, PYTHONPATH="src")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, cwd=root)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
