@@ -37,6 +37,7 @@ def main() -> None:
     from . import (
         churn_bench,
         consensus_bench,
+        daemon_bench,
         drift_bench,
         fault_bench,
         kernels_bench,
@@ -57,6 +58,7 @@ def main() -> None:
         ("churn", churn_bench.churn_fast, False),
         ("drift", drift_bench.drift_fast, False),
         ("faults", fault_bench.fault_fast, False),
+        ("daemon", daemon_bench.daemon_fast, False),
     ]
 
     rows: list[tuple[str, float, str]] = []

@@ -1,5 +1,19 @@
 """Pytree checkpointing: flat .npz + treedef manifest (no orbax offline)."""
 
-from .ckpt import latest_step, restore, restore_train, save, save_train
+from .ckpt import (
+    latest_step,
+    restore,
+    restore_train,
+    save,
+    save_train,
+    step_valid,
+)
 
-__all__ = ["latest_step", "restore", "restore_train", "save", "save_train"]
+__all__ = [
+    "latest_step",
+    "restore",
+    "restore_train",
+    "save",
+    "save_train",
+    "step_valid",
+]

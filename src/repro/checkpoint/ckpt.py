@@ -13,6 +13,7 @@ import os
 import re
 import shutil
 import tempfile
+import zipfile
 from typing import Any
 
 import jax
@@ -54,15 +55,53 @@ def save(directory: str, step: int, tree: Pytree) -> str:
     return final
 
 
-def latest_step(directory: str) -> int | None:
+def step_valid(directory: str, step: int) -> bool:
+    """True when ``step_<N>`` is a complete, readable checkpoint.
+
+    The atomic tmp-dir + rename protocol means a crash mid-``save`` should
+    never leave a partial final directory — but the filesystem under it can
+    (a SIGKILL between the rename and the data hitting disk, a copied
+    checkpoint truncated in transit).  A warm-restart path must therefore
+    verify before trusting: the manifest must parse, the npz must be a
+    sound zip archive (per-member CRCs checked), and its member set must
+    match the manifest's leaf count exactly.
+    """
+    path = os.path.join(directory, f"step_{step:08d}")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        n_leaves = int(manifest["n_leaves"])
+        with zipfile.ZipFile(os.path.join(path, "arrays.npz")) as zf:
+            if zf.testzip() is not None:  # CRC failure: truncated member
+                return False
+            names = {name.removesuffix(".npy") for name in zf.namelist()}
+        return names == {f"leaf_{i:05d}" for i in range(n_leaves)}
+    except (OSError, ValueError, KeyError, zipfile.BadZipFile):
+        return False
+
+
+def latest_step(directory: str, *, verify: bool = True) -> int | None:
+    """Largest step with a checkpoint in ``directory`` (None if none).
+
+    ``verify=True`` (the default) skips steps that fail ``step_valid`` —
+    a truncated or partially-written snapshot is ignored and the prior
+    intact step is returned instead, so crash-kill -> warm-restart always
+    lands on restorable state (the daemon's recovery anchor).
+    """
     if not os.path.isdir(directory):
         return None
-    steps = [
-        int(m.group(1))
-        for name in os.listdir(directory)
-        if (m := re.fullmatch(r"step_(\d+)", name))
-    ]
-    return max(steps) if steps else None
+    steps = sorted(
+        (
+            int(m.group(1))
+            for name in os.listdir(directory)
+            if (m := re.fullmatch(r"step_(\d+)", name))
+        ),
+        reverse=True,
+    )
+    for step in steps:
+        if not verify or step_valid(directory, step):
+            return step
+    return None
 
 
 def restore(directory: str, step: int, like: Pytree) -> Pytree:

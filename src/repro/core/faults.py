@@ -243,27 +243,78 @@ def faulty_sweep(
     )
 
 
-def parse_fault_spec(spec: str, *, dtype=jnp.float32) -> FaultModel:
-    """Parse the CLI fault spec: ``drop=P[,burst=GB:BG:PB][,crash=C:R]``.
+_FAULT_SPEC_USAGE = (
+    "usage: drop=P[,burst=to_bad:to_good:drop_bad][,crash=p_crash:p_restart]"
+    " — every rate a probability in [0, 1], each key at most once"
+    " (e.g. drop=0.1,burst=0.05:0.4:0.5)"
+)
 
-    Examples: ``drop=0.1``; ``drop=0.05,burst=0.02:0.3:0.6``;
-    ``drop=0.1,crash=0.01:0.25``.  Used by ``serve.py --faults``.
+# key -> (arity, per-position rate names, used in the error messages)
+_FAULT_SPEC_KEYS = {
+    "drop": ("drop",),
+    "burst": ("to_bad", "to_good", "drop_bad"),
+    "crash": ("p_crash", "p_restart"),
+}
+
+
+def parse_fault_spec(spec: str, *, dtype=jnp.float32) -> FaultModel:
+    """Parse and VALIDATE the CLI fault spec.
+
+    ``drop=P[,burst=GB:BG:PB][,crash=C:R]`` — examples: ``drop=0.1``;
+    ``drop=0.05,burst=0.02:0.3:0.6``; ``drop=0.1,crash=0.01:0.25``.  Used
+    by ``serve.py --faults`` and the daemon's fault drills.  Malformed
+    specs raise ``ValueError`` with a usage message instead of silently
+    building a nonsense model: unknown or repeated keys, wrong arity,
+    non-numeric values, and rates outside [0, 1] (a Bernoulli probability)
+    are all rejected.
     """
-    drop, burst, crash = 0.0, None, None
+    if not spec.strip():
+        raise ValueError(f"empty fault spec; {_FAULT_SPEC_USAGE}")
+    seen: dict[str, tuple] = {}
     for part in filter(None, (p.strip() for p in spec.split(","))):
         if "=" not in part:
-            raise ValueError(f"bad fault spec field {part!r} in {spec!r}")
-        name, _, val = part.partition("=")
-        vals = tuple(float(v) for v in val.split(":"))
-        if name == "drop" and len(vals) == 1:
-            drop = vals[0]
-        elif name == "burst" and len(vals) == 3:
-            burst = vals
-        elif name == "crash" and len(vals) == 2:
-            crash = vals
-        else:
             raise ValueError(
-                f"bad fault spec field {part!r} (want drop=P, "
-                f"burst=to_bad:to_good:drop_bad, crash=p_crash:p_restart)"
+                f"bad fault spec field {part!r} in {spec!r}; "
+                f"{_FAULT_SPEC_USAGE}"
             )
-    return make_fault_model(drop, burst, crash, dtype=dtype)
+        name, _, val = part.partition("=")
+        name = name.strip()
+        if name not in _FAULT_SPEC_KEYS:
+            raise ValueError(
+                f"unknown fault spec key {name!r} in {spec!r}; "
+                f"{_FAULT_SPEC_USAGE}"
+            )
+        if name in seen:
+            raise ValueError(
+                f"repeated fault spec key {name!r} in {spec!r}; "
+                f"{_FAULT_SPEC_USAGE}"
+            )
+        rate_names = _FAULT_SPEC_KEYS[name]
+        raw = val.split(":")
+        if len(raw) != len(rate_names):
+            raise ValueError(
+                f"{name} takes {len(rate_names)} value(s) "
+                f"({':'.join(rate_names)}), got {val!r}; {_FAULT_SPEC_USAGE}"
+            )
+        vals = []
+        for rname, v in zip(rate_names, raw):
+            try:
+                rate = float(v)
+            except ValueError:
+                raise ValueError(
+                    f"non-numeric {name} rate {rname}={v!r} in {spec!r}; "
+                    f"{_FAULT_SPEC_USAGE}"
+                ) from None
+            if not (0.0 <= rate <= 1.0):  # also rejects nan
+                raise ValueError(
+                    f"{name} rate {rname}={v} outside [0, 1] in {spec!r}; "
+                    f"{_FAULT_SPEC_USAGE}"
+                )
+            vals.append(rate)
+        seen[name] = tuple(vals)
+    return make_fault_model(
+        seen.get("drop", (0.0,))[0],
+        seen.get("burst"),
+        seen.get("crash"),
+        dtype=dtype,
+    )

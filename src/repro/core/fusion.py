@@ -202,6 +202,7 @@ def fuse(
     sensor: int = 0,
     engine: str = "dense",
     plan=None,
+    ecoef: jax.Array | None = None,
 ) -> jax.Array:
     """Convenience dispatcher over the paper's three rules.
 
@@ -213,6 +214,11 @@ def fuse(
     ``make_serving_plan`` to amortize the host-side precomputation across
     requests).  The other rules are already O(n)-per-query and accept only
     "dense".
+
+    ecoef: optional precomputed ``effective_coef(problem, state)`` for the
+    plan/pallas kNN engines — snapshot-serving processes (the daemon)
+    compute it once per published snapshot and thread it through every
+    query dispatch against that snapshot.
     """
     if rule in ("nn", "knn") and engine != "dense":
         from . import serving
@@ -220,6 +226,12 @@ def fuse(
         return serving.knn_fuse(
             problem, state, xq,
             k=(1 if rule == "nn" else k), plan=plan, engine=engine,
+            ecoef=ecoef,
+        )
+    if ecoef is not None:
+        raise ValueError(
+            "ecoef precomputation applies to the plan/pallas kNN engines "
+            f"only; rule {rule!r} engine {engine!r} computes it internally"
         )
     if engine != "dense":
         raise ValueError(

@@ -54,6 +54,9 @@ class WatchdogConfig:
     max_rounds: int = 60
 
 
+RECEIPT_SCHEMA = "watchdog_receipt/1"
+
+
 class WatchdogReceipt(NamedTuple):
     """What happened, per field and overall (printed by serve.py)."""
 
@@ -66,6 +69,48 @@ class WatchdogReceipt(NamedTuple):
     refactorized: int  # 0/1: rebuild_chol escalations
     rolled_back: bool  # True: state restored from the snapshot
     diverged: np.ndarray  # (B,) bool fields flagged in the final round
+
+    def to_json(self) -> dict:
+        """Machine-readable receipt with a STABLE schema.
+
+        Plain JSON types only (per-field arrays become lists), tagged with
+        ``schema`` so consumers — the daemon health endpoint,
+        ``serve.py --faults`` — can detect drift.  ``receipt_from_json``
+        is the exact inverse (round-trip pinned in tests/test_faults.py).
+        """
+        return {
+            "schema": RECEIPT_SCHEMA,
+            "converged": [bool(v) for v in np.atleast_1d(self.converged)],
+            "residual": [float(v) for v in np.atleast_1d(self.residual)],
+            "norm": [float(v) for v in np.atleast_1d(self.norm)],
+            "rounds": int(self.rounds),
+            "sweeps": int(self.sweeps),
+            "retries": int(self.retries),
+            "refactorized": int(self.refactorized),
+            "rolled_back": bool(self.rolled_back),
+            "diverged": [bool(v) for v in np.atleast_1d(self.diverged)],
+        }
+
+
+def receipt_from_json(payload: dict) -> WatchdogReceipt:
+    """Rebuild a ``WatchdogReceipt`` from ``WatchdogReceipt.to_json``."""
+    schema = payload.get("schema")
+    if schema != RECEIPT_SCHEMA:
+        raise ValueError(
+            f"unknown watchdog receipt schema {schema!r} "
+            f"(expected {RECEIPT_SCHEMA!r})"
+        )
+    return WatchdogReceipt(
+        converged=np.asarray(payload["converged"], bool),
+        residual=np.asarray(payload["residual"], float),
+        norm=np.asarray(payload["norm"], float),
+        rounds=int(payload["rounds"]),
+        sweeps=int(payload["sweeps"]),
+        retries=int(payload["retries"]),
+        refactorized=int(payload["refactorized"]),
+        rolled_back=bool(payload["rolled_back"]),
+        diverged=np.asarray(payload["diverged"], bool),
+    )
 
 
 @jax.jit

@@ -293,6 +293,7 @@ def knn_fuse(
     *,
     plan: ServingPlan | None = None,
     engine: str = "plan",
+    ecoef: jax.Array | None = None,
 ) -> jax.Array:
     """Plan-based kNN fusion (paper Eq. 19) — O(Q*k*D) per field.
 
@@ -300,7 +301,11 @@ def knn_fuse(
     selected sensor set depends only on the shared positions, so selection
     runs once and the B evaluations share it).  ``plan`` defaults to a
     fresh ``make_serving_plan(problem, k=k)``; serving processes build the
-    plan once and pass it in.
+    plan once and pass it in.  ``ecoef`` optionally supplies the TRUE
+    representer coefficients (``sn_train.effective_coef``) precomputed —
+    a snapshot-serving process (``launch.daemon``) publishes an immutable
+    (problem, state) pair and pays the anchor-weight rescale ONCE per
+    published snapshot instead of once per query dispatch.
     """
     if engine not in ("plan", "pallas"):
         raise ValueError(f"engine must be 'plan' or 'pallas', got {engine!r}")
@@ -322,7 +327,8 @@ def knn_fuse(
     # static beta = 1 fields) — a value-level rescale, so both engines'
     # compiled programs and the Pallas kernel's operand shapes are
     # untouched by forgetting.
-    ecoef = effective_coef(problem, state)
+    if ecoef is None:
+        ecoef = effective_coef(problem, state)
 
     if engine == "pallas":
         from repro.kernels.knn_fuse import knn_fuse_fused

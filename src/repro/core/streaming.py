@@ -76,6 +76,8 @@ import dataclasses
 from functools import partial
 from typing import NamedTuple
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 import jax.scipy.linalg as jsl
@@ -446,6 +448,54 @@ def absorb_many(
     else:
         fn = _absorb_many_drop_donate if donate else _absorb_many_drop_copy
     return fn(problem, state, fields, sensors, xs, ys)
+
+
+def pad_arrivals(
+    problem: SNTrainProblem,
+    fields,
+    sensors,
+    xs,
+    ys,
+    a_pad: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, np.ndarray]:
+    """Pad an arrival window to ``a_pad`` rows with guaranteed no-ops.
+
+    ``absorb_many``'s compiled program is specialized on the window length
+    A, so a long-lived serving process draining arbitrary arrival batches
+    would compile one program per distinct size.  Padding each window to
+    its power-of-two bucket (``kernels.ops.bucket_rows``) caps that at
+    O(log A) programs — IF the padding rows provably change nothing.
+
+    They do: padding arrivals target the SENTINEL row (``sensor ==
+    problem.n``), which is permanently dead (``alive[n]`` is False by
+    construction — retired lanes point at it).  ``_absorb`` gates every
+    table write on ``ok = free-slot & alive[sensor]`` and ``_evict_core``
+    on ``occupied & alive[sensor]``, so a sentinel-row arrival is a
+    bitwise no-op under both ``on_full`` policies; its receipt row comes
+    back ``absorbed=False`` (tests/test_daemon.py pins padded == unpadded
+    bitwise).  Returns ``(fields, sensors, xs, ys, real)`` — ``real`` is
+    the (a_pad,) bool mask of genuine arrivals for receipt accounting.
+    """
+    fields = jnp.asarray(fields, jnp.int32)
+    sensors = jnp.asarray(sensors, jnp.int32)
+    xs = jnp.atleast_2d(jnp.asarray(xs, problem.nbr_pos.dtype))
+    ys = jnp.asarray(ys)
+    a = int(fields.shape[0])
+    if a > a_pad:
+        raise ValueError(f"window of {a} arrivals exceeds a_pad={a_pad}")
+    pad = a_pad - a
+    real = np.arange(a_pad) < a
+    if pad == 0:
+        return fields, sensors, xs, ys, real
+    return (
+        jnp.concatenate([fields, jnp.zeros((pad,), jnp.int32)]),
+        jnp.concatenate(
+            [sensors, jnp.full((pad,), problem.n, jnp.int32)]
+        ),
+        jnp.concatenate([xs, jnp.zeros((pad, xs.shape[1]), xs.dtype)]),
+        jnp.concatenate([ys, jnp.zeros((pad,), ys.dtype)]),
+        real,
+    )
 
 
 def _absorb_wave_core(problem, state, xs, ys, amask, evict):

@@ -1,8 +1,15 @@
 """Serving launcher.
 
-Two workloads:
+Three workloads:
 
-  * ``--mode lm``    — batched greedy decoding against a KV/SSM cache.
+  * ``--mode lm``     — batched greedy decoding against a KV/SSM cache.
+  * ``--mode daemon`` — the long-lived serving loop of
+                       ``repro.launch.daemon``: coalesced bucketed
+                       queries against a double-buffered snapshot while
+                       supervised training ticks (watchdog + checkpoints
+                       + fault drills) run behind it.  All other flags
+                       are the daemon's own
+                       (``python -m repro.launch.daemon --help``).
   * ``--mode field`` — multi-field sensor regression: B independent fields
                        over one network are trained with the batched SN-Train
                        engine, streaming arrivals are absorbed in ONE batched
@@ -173,6 +180,11 @@ def serve_fields(args):
             f"{receipt.sweeps} supervised sweeps x {b} fields in {dt:.3f}s"
         )
         print(monitor.format_receipt(receipt))
+        # machine-readable twin of the line above (stable schema; the
+        # exact inverse is monitor.receipt_from_json)
+        import json
+
+        print("watchdog.json: " + json.dumps(receipt.to_json()))
     else:
         # warm with the SAME n_sweeps: it is a static jit arg, so a
         # different value would compile a different program and the timing
@@ -408,8 +420,21 @@ def serve_fields(args):
 
 
 def main():
+    import sys
+
+    # daemon mode has its own flag set — peel --mode off and delegate the
+    # rest of argv to repro.launch.daemon untouched
+    pre = argparse.ArgumentParser(add_help=False)
+    pre.add_argument("--mode", default="lm",
+                     choices=["lm", "field", "daemon"])
+    ns, rest = pre.parse_known_args()
+    if ns.mode == "daemon":
+        from repro.launch import daemon
+
+        return daemon.main(rest)
+
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="lm", choices=["lm", "field"])
+    ap.add_argument("--mode", default="lm", choices=["lm", "field", "daemon"])
     # lm mode
     ap.add_argument("--arch", default="smollm-135m", choices=ARCH_NAMES)
     ap.add_argument("--variant", default="smoke", choices=["smoke", "full"])

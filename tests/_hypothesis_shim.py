@@ -45,6 +45,15 @@ except ImportError:
         def booleans():
             return _Strategy(lambda r: bool(r.getrandbits(1)))
 
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(
+                lambda r: [
+                    elements.draw(r)
+                    for _ in range(r.randint(min_size, max_size))
+                ]
+            )
+
     def settings(max_examples: int = 10, **_ignored):
         """Record max_examples; every other hypothesis knob is a no-op here."""
 

@@ -1,6 +1,12 @@
 import numpy as np
 import pytest
 
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running subprocess smoke tests"
+    )
+
 # NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
 # and benches must see the real single device; only launch/dryrun.py forces
 # 512 placeholder devices (and tests that need multiple devices run in a

@@ -220,6 +220,55 @@ def test_parse_fault_spec():
         faults.parse_fault_spec("burst=0.1")
 
 
+@pytest.mark.parametrize("spec", [
+    "",                       # empty
+    "drop",                   # missing '='
+    "drop=",                  # empty value
+    "drop=abc",               # non-numeric
+    "drop=-0.1",              # negative rate
+    "drop=1.5",               # rate > 1
+    "drop=nan",               # NaN sneaks past naive range checks
+    "drop=0.1,drop=0.2",      # repeated key
+    "burst=0.1:0.2",          # wrong arity (wants 3)
+    "burst=0.1:0.2:0.3:0.4",  # wrong arity (wants 3)
+    "crash=0.1",              # wrong arity (wants 2)
+    "crash=0.1:0.2:0.3",      # wrong arity (wants 2)
+    "jitter=0.1",             # unknown key
+])
+def test_parse_fault_spec_rejects_with_usage(spec):
+    """Every malformed spec fails fast with the usage line — a daemon
+    launched with a typo'd --faults must die at argv parse, not mid-run."""
+    with pytest.raises(ValueError) as ei:
+        faults.parse_fault_spec(spec)
+    assert "usage:" in str(ei.value)
+
+
+def test_watchdog_receipt_json_roundtrip():
+    """to_json is a STABLE machine-readable schema (the daemon health
+    endpoint and serve.py --faults both emit it); receipt_from_json is its
+    exact inverse through a real JSON wire trip."""
+    import json
+
+    prob, state = _build(12)
+    _, _, receipt = monitor.watch_sweeps(
+        prob, state, model=faults.make_fault_model(0.1),
+        key=jax.random.PRNGKey(5),
+        config=monitor.WatchdogConfig(max_rounds=4),
+    )
+    payload = json.loads(json.dumps(receipt.to_json()))
+    assert payload["schema"] == monitor.RECEIPT_SCHEMA
+    back = monitor.receipt_from_json(payload)
+    assert np.array_equal(back.converged, receipt.converged)
+    assert np.array_equal(back.diverged, receipt.diverged)
+    np.testing.assert_allclose(back.residual, receipt.residual)
+    np.testing.assert_allclose(back.norm, receipt.norm)
+    for f in ("rounds", "sweeps", "retries", "refactorized", "rolled_back"):
+        assert getattr(back, f) == getattr(receipt, f), f
+    # schema drift is detected, not silently misparsed
+    with pytest.raises(ValueError):
+        monitor.receipt_from_json({**payload, "schema": "watchdog_receipt/0"})
+
+
 def test_watchdog_converges_fault_free_and_at_10pct():
     prob, state = _build(8)
     cfg = monitor.WatchdogConfig(tol=1e-3, max_rounds=60)
@@ -272,6 +321,52 @@ def test_checkpoint_train_roundtrip_bitwise():
     for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(s2)):
         assert np.array_equal(np.asarray(a), np.asarray(b))
     assert p2.kernel == prob.kernel  # static fields carry over
+
+
+def test_latest_step_skips_crash_corrupted_checkpoints():
+    """Crash-mid-save atomicity: ``latest_step`` verifies each candidate
+    (manifest parses, npz passes CRC, every leaf present) and falls back
+    to the newest INTACT step, which restores bitwise — a kill during
+    ``save_train`` can never poison a warm restart."""
+    import os
+
+    prob, state = _build(13)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save_train(d, 1, prob, state)
+        ckpt.save_train(d, 2, prob, state)
+        assert ckpt.latest_step(d) == 2
+
+        # truncated npz (the classic kill-mid-write): CRC check fails
+        arrays2 = os.path.join(d, "step_00000002", "arrays.npz")
+        size = os.path.getsize(arrays2)
+        with open(arrays2, "r+b") as f:
+            f.truncate(size // 2)
+        assert not ckpt.step_valid(d, 2)
+        assert ckpt.step_valid(d, 1)
+        assert ckpt.latest_step(d) == 1  # verify=True is the default
+        assert ckpt.latest_step(d, verify=False) == 2  # raw newest, opt-in
+
+        p2, s2 = ckpt.restore_train(d, ckpt.latest_step(d), prob, state)
+        for a, b in zip(jax.tree.leaves(prob), jax.tree.leaves(p2)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(s2)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+        # a step dir that never got its manifest (killed even earlier)
+        ckpt.save_train(d, 3, prob, state)
+        os.remove(os.path.join(d, "step_00000003", "manifest.json"))
+        assert not ckpt.step_valid(d, 3)
+        assert ckpt.latest_step(d) == 1
+
+        # a fully-missing npz
+        ckpt.save_train(d, 4, prob, state)
+        os.remove(os.path.join(d, "step_00000004", "arrays.npz"))
+        assert ckpt.latest_step(d) == 1
+
+        # all steps corrupted -> None, not a crash
+        with open(os.path.join(d, "step_00000001", "arrays.npz"), "r+b") as f:
+            f.truncate(10)
+        assert ckpt.latest_step(d) is None
 
 
 def test_one_program_serves_all_fault_rates():
