@@ -42,6 +42,7 @@ def main() -> None:
         fault_bench,
         kernels_bench,
         paper_figs,
+        quant_bench,
         serving_bench,
     )
 
@@ -59,6 +60,7 @@ def main() -> None:
         ("drift", drift_bench.drift_fast, False),
         ("faults", fault_bench.fault_fast, False),
         ("daemon", daemon_bench.daemon_fast, False),
+        ("quant", quant_bench.quant_fast, False),
     ]
 
     rows: list[tuple[str, float, str]] = []

@@ -12,6 +12,7 @@ Public surface:
   consensus    — SOP-gossip data parallelism (pairwise projections == gossip)
   faults       — seeded link-drop/burst/crash fault injection (FaultModel)
   monitor      — convergence watchdog: retry / refactorize / rollback
+  pruning      — representer energy scoring, prune masks, plan compaction
 """
 
 from . import (
@@ -22,6 +23,7 @@ from . import (
     kernels_math,
     monitor,
     plans,
+    pruning,
     serving,
     sn_train,
     sop,
@@ -33,6 +35,13 @@ from .monitor import WatchdogConfig, WatchdogReceipt, watch_sweeps
 from .centralized import KRRModel, fit_krr, predict
 from .kernels_math import Kernel
 from .plans import LifecycleLayout
+from .pruning import (
+    PruneReport,
+    answer_bound,
+    prune_mask,
+    prune_plan,
+    representer_energy,
+)
 from .serving import (
     ServingPlan,
     make_serving_plan,
@@ -98,6 +107,12 @@ __all__ = [
     "plan_add_sensor",
     "plan_remove_sensor",
     "plans",
+    "PruneReport",
+    "answer_bound",
+    "prune_mask",
+    "prune_plan",
+    "pruning",
+    "representer_energy",
     "serving",
     "build_topology",
     "centralized",

@@ -203,6 +203,9 @@ def fuse(
     engine: str = "dense",
     plan=None,
     ecoef: jax.Array | None = None,
+    compute_dtype=None,
+    prune: jax.Array | None = None,
+    block_q: int | None = None,
 ) -> jax.Array:
     """Convenience dispatcher over the paper's three rules.
 
@@ -219,6 +222,13 @@ def fuse(
     plan/pallas kNN engines — snapshot-serving processes (the daemon)
     compute it once per published snapshot and thread it through every
     query dispatch against that snapshot.
+
+    compute_dtype/prune/block_q: the quantized + sparsified serving path
+    (plan/pallas kNN engines only — the dense oracle stays full-precision
+    by definition).  ``compute_dtype="bf16"`` stores the anchor tables in
+    bf16 (selection-exact; accumulation stays in the coefficient dtype);
+    ``prune`` is a (n+1,) ``pruning.prune_mask`` keep mask ANDed into
+    liveness; ``block_q`` overrides the Pallas query tile for bulk sweeps.
     """
     if rule in ("nn", "knn") and engine != "dense":
         from . import serving
@@ -226,12 +236,19 @@ def fuse(
         return serving.knn_fuse(
             problem, state, xq,
             k=(1 if rule == "nn" else k), plan=plan, engine=engine,
-            ecoef=ecoef,
+            ecoef=ecoef, compute_dtype=compute_dtype, prune=prune,
+            block_q=block_q,
         )
     if ecoef is not None:
         raise ValueError(
             "ecoef precomputation applies to the plan/pallas kNN engines "
             f"only; rule {rule!r} engine {engine!r} computes it internally"
+        )
+    if compute_dtype is not None or prune is not None or block_q is not None:
+        raise ValueError(
+            "compute_dtype/prune/block_q apply to the plan/pallas kNN "
+            f"engines only; rule {rule!r} engine {engine!r} is the "
+            "full-precision dense oracle"
         )
     if engine != "dense":
         raise ValueError(

@@ -1,0 +1,247 @@
+"""Representer pruning — sparsify the serving path by coefficient energy.
+
+The serving read-out answers a query by averaging the k nearest LIVE
+sensors' local representers f_s(x) = sum_j c_{s,j} K(x, x_j) (paper
+Eq. 19).  After training — and especially after beta-forgetting decay,
+evictions, and churn — many sensors carry near-zero effective coefficients:
+they still occupy candidate-list columns (``ServingPlan.cells`` is padded
+to ``K_max`` = the widest cell, inflated further by ``spare``/``slack``
+lifecycle capacity), so every query tile gathers and masks them for no
+accuracy.  This module scores sensors by coefficient energy and drops the
+dead weight — the sparse distributed-identification direction
+(arXiv:2203.02737 in PAPERS.md) applied to the serving plan.
+
+Energy and the pointwise bound
+------------------------------
+Per-sensor energy is the masked L1 norm of the TRUE representer
+coefficients (``sn_train.effective_coef`` — beta-decay already applied),
+maxed over fields:
+
+    E_s = max_b sum_j |ecoef[b, s, j]| * nbr_mask[b, s, j]
+
+For kernels with sup_x K(x, y) <= 1 (rbf, matern32 — the serving kernels)
+this bounds the sensor's prediction everywhere: |f_s(x)| <= E_s.  Pruning
+a sensor therefore behaves EXACTLY like the sensor dying (it is masked out
+of selection; the next-nearest kept sensors take its slots), and the
+answer perturbation is bounded by the energies of the sensors that enter
+or leave the selected set — ``answer_bound`` computes that bound per query
+from the two selections, and the hypothesis tests in
+``tests/test_pruning.py`` hold serving to it at every liveness fraction.
+
+Two pruning paths
+-----------------
+``prune_mask``   device-side fast path: a (n+1,) keep mask ANDed into the
+                 ``alive`` gate of every serving engine.  ``energy_tau``
+                 is a TRACED scalar, so a long-lived daemon re-prunes on
+                 every snapshot publish — fresh coefficients, even a
+                 changed tau — with ZERO recompiles.
+``prune_plan``   host-side compaction: rebuild the per-cell candidate
+                 lists with pruned/dead sensors removed and left-packed,
+                 shrinking ``K_max`` to the widest SURVIVING cell (+
+                 ``spare``).  Gather width and plan memory drop; use it
+                 offline, at daemon startup, or whenever a smaller kernel
+                 launch is worth a one-time host pass + recompile.
+
+Composition with the lifecycle: churn repairs (``plan_add_sensor`` /
+``plan_remove_sensor``) operate on the UNPRUNED capacity plan; the keep
+mask is re-derived on top after every event (a compacted plan has no spare
+columns for joins — treat it as serving-frozen).  ``prune_mask`` ANDs in
+``alive``, so a pruned-out dead sensor can never be resurrected by later
+churn: only a genuinely re-joined (alive, energetic) row re-enters.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .sn_train import SNTrainProblem, SNTrainState, effective_coef
+
+
+@jax.jit
+def _lane_energy(nbr_mask, ecoef):
+    """(n+1, D) per-sensor per-lane |coef|, masked, maxed over fields."""
+    e = jnp.abs(ecoef) * (nbr_mask != 0)
+    return e.max(axis=0) if e.ndim == 3 else e
+
+
+def representer_energy(
+    problem: SNTrainProblem,
+    state: SNTrainState | None = None,
+    *,
+    ecoef: jax.Array | None = None,
+    per_lane: bool = False,
+) -> jax.Array:
+    """Per-sensor coefficient energy E_s, (n+1,) (or (n+1, D) per-lane).
+
+    E_s = max over fields of the masked L1 norm of the sensor's effective
+    coefficients.  For kernels bounded by 1 (rbf/matern32) E_s bounds the
+    sensor's prediction magnitude everywhere: |f_s(x)| <= E_s.  Pass
+    ``ecoef`` when a snapshot already precomputed ``effective_coef``.
+    """
+    if ecoef is None:
+        if state is None:
+            raise ValueError("representer_energy needs state or ecoef")
+        ecoef = effective_coef(problem, state)
+    lane = _lane_energy(problem.nbr_mask, ecoef)
+    return lane if per_lane else lane.sum(axis=-1)
+
+
+@jax.jit
+def _keep_mask(nbr_mask, alive, ecoef, tau):
+    e = _lane_energy(nbr_mask, ecoef).sum(axis=-1)
+    return (e > tau.astype(e.dtype)) & (alive != 0)
+
+
+def prune_mask(
+    problem: SNTrainProblem,
+    state: SNTrainState | None = None,
+    *,
+    energy_tau,
+    ecoef: jax.Array | None = None,
+) -> jax.Array:
+    """(n+1,) bool keep mask: alive AND energy above ``energy_tau``.
+
+    The device-side fast path: AND this into the serving ``alive`` gate
+    (``serving.knn_fuse(..., prune=keep)`` does exactly that).  Shapes are
+    static and ``energy_tau`` is traced, so re-pruning per snapshot publish
+    — or sweeping tau — compiles nothing after the first call.  Dead rows
+    (including the sentinel) are never kept, so pruning composes with
+    churn: a pruned-out removed sensor stays out until an actual re-join
+    makes it alive and energetic again.
+    """
+    if ecoef is None:
+        if state is None:
+            raise ValueError("prune_mask needs state or ecoef")
+        ecoef = effective_coef(problem, state)
+    tau = jnp.asarray(energy_tau, jnp.result_type(float))
+    return _keep_mask(problem.nbr_mask, problem.alive, ecoef, tau)
+
+
+class PruneReport(NamedTuple):
+    """Host-side summary of a ``prune_plan`` compaction."""
+
+    n_live: int          # live sensors before pruning
+    n_kept: int          # live sensors surviving the energy threshold
+    n_pruned: int        # n_live - n_kept
+    k_max_before: int    # candidate-list width of the input plan
+    k_max_after: int     # width of the compacted plan
+    energy_tau: float
+    keep: np.ndarray     # (n+1,) bool keep mask (host copy)
+
+
+def prune_plan(
+    problem: SNTrainProblem,
+    state: SNTrainState | None,
+    plan,
+    *,
+    energy_tau,
+    ecoef: jax.Array | None = None,
+    spare: int = 0,
+):
+    """Compact ``plan``'s candidate lists to the kept sensors only.
+
+    Host-side: pulls the keep mask, drops pruned/dead entries from every
+    cell's candidate row, left-packs the survivors, and re-pads to the new
+    ``K_max`` = widest surviving cell + ``spare``.  Returns
+    ``(compacted_plan, PruneReport)``.
+
+    The compacted plan serves EXACT kNN over the kept subnetwork: pruning
+    only deletes candidates, and every kept sensor inside a cell's
+    exactness radius remains listed, so top-k over the survivors is the
+    true top-k of the pruned network.  Answers are identical to the
+    ``prune_mask`` fast path (same surviving candidate sets, same
+    tie-breaking).  Compacted plans are serving-frozen: churn repairs
+    belong on the unpruned capacity plan, with pruning re-derived on top.
+    """
+    import dataclasses
+
+    keep_dev = prune_mask(
+        problem, state, energy_tau=energy_tau, ecoef=ecoef
+    )
+    keep = np.asarray(keep_dev)
+    cells = np.asarray(plan.cells)
+    mask = np.asarray(plan.cell_mask).astype(bool)
+    c, k_max = cells.shape
+    sentinel = problem.n  # padded problem row n is always masked
+
+    new_mask = mask & keep[cells]
+    counts = new_mask.sum(axis=1)
+    # never narrower than the plan's nominal k: top_k over the candidate
+    # axis needs K_max >= k even when aggressive pruning empties cells
+    k_floor = int(getattr(plan, "k", 1))
+    k_new = int(max(counts.max(initial=0), k_floor, 1)) + int(spare)
+    new_cells = np.full((c, k_new), sentinel, dtype=cells.dtype)
+    packed = np.zeros((c, k_new), dtype=bool)
+    for i in range(c):
+        surv = cells[i, new_mask[i]]
+        new_cells[i, : surv.size] = surv
+        packed[i, : surv.size] = True
+
+    compacted = dataclasses.replace(
+        plan,
+        cells=jnp.asarray(new_cells),
+        cell_mask=jnp.asarray(packed),
+    )
+    alive = np.asarray(problem.alive) != 0
+    n_live = int(alive[:sentinel].sum())
+    n_kept = int(keep[:sentinel].sum())
+    report = PruneReport(
+        n_live=n_live,
+        n_kept=n_kept,
+        n_pruned=n_live - n_kept,
+        k_max_before=k_max,
+        k_max_after=k_new,
+        energy_tau=float(energy_tau),
+        keep=keep,
+    )
+    return compacted, report
+
+
+def answer_bound(
+    energy: np.ndarray,
+    sel_u: np.ndarray,
+    valid_u: np.ndarray,
+    sel_p: np.ndarray,
+    valid_p: np.ndarray,
+) -> np.ndarray:
+    """Per-query bound on |unpruned answer - pruned answer|, (Q,).
+
+    Both answers are means of per-sensor predictions over their VALID
+    selections; with U/P those selected sets, C = U ∩ P, and v_u/v_p the
+    counts, the difference telescopes to
+
+        |u - p| <= |1/v_u - 1/v_p| * sum_{s in C} E_s
+                   + (1/v_u) * sum_{s in U \\ C} E_s
+                   + (1/v_p) * sum_{s in P \\ C} E_s
+
+    using |f_s(x)| <= E_s (``representer_energy``; exact for sup-1 kernels
+    like rbf).  When pruning changes no selection the bound is exactly 0 —
+    serving answers are then bitwise-identical.  An empty selection
+    contributes 0 (the engines answer 0 there), which the safe reciprocal
+    handles.  Host-side / numpy; this is the oracle the hypothesis
+    property tests hold serving to, not a hot path.
+    """
+    energy = np.asarray(energy)
+    sel_u, valid_u = np.asarray(sel_u), np.asarray(valid_u).astype(bool)
+    sel_p, valid_p = np.asarray(sel_p), np.asarray(valid_p).astype(bool)
+    q = sel_u.shape[0]
+    out = np.zeros((q,), energy.dtype)
+    for i in range(q):
+        u = set(sel_u[i, valid_u[i]].tolist())
+        p = set(sel_p[i, valid_p[i]].tolist())
+        common = u & p
+        vu, vp = len(u), len(p)
+        inv_u = 1.0 / vu if vu else 0.0
+        inv_p = 1.0 / vp if vp else 0.0
+        e = lambda s: float(sum(energy[j] for j in s))
+        out[i] = (
+            abs(inv_u - inv_p) * e(common)
+            + inv_u * e(u - common)
+            + inv_p * e(p - common)
+        )
+    return out

@@ -61,6 +61,24 @@ than erroring.  Distance ties are broken toward the lower sensor index by
 every engine (top_k and the selection network both scan ascending), so
 engines agree bit-for-bit on the selected set except on exact ties between
 equidistant sensors at different indices.
+
+Quantized + sparsified path: ``compute_dtype="bf16"`` stores the anchor
+tables — serving's VMEM-dominant operand, O(B*n*D*d) vs O(n*d) for the
+sensor positions — in bf16, halving the resident footprint so the Pallas
+query tile doubles, with kernel-value arithmetic upconverted to >= f32 in
+registers and the representer contraction accumulating in the COEFFICIENT
+dtype (f32/f64 — ``ecoef`` is never downcast).  Selection is EXACT under
+quantization: queries, positions, distances, and top-k keep full
+precision, so both engines select the same sensors as the f32 path
+(quantizing selection was measured at ~2.3% field RMSE at n=1000 — over
+the 1% budget — vs ~0.1% for anchors-only; ``knn_select_valid`` keeps an
+opt-in ``compute_dtype`` for measuring that trade).  ``prune=`` ANDs a
+``pruning.prune_mask`` keep mask into the liveness gate so near-zero-energy
+representers drop out of selection exactly like dead sensors.
+``prune_plan`` (re-exported from ``core.pruning``) compacts the candidate
+lists to the kept sensors for a smaller ``K_max``.  Cell lookup
+(``query_cells``) always stays full-precision: candidate-list exactness
+depends on the query landing in the right cell.
 """
 
 from __future__ import annotations
@@ -222,10 +240,38 @@ def query_cells(plan: ServingPlan, xq: jax.Array) -> jax.Array:
     return idx @ jnp.asarray(strides)
 
 
-@partial(jax.jit, static_argnames=("k",))
+def _norm_compute_dtype(compute_dtype):
+    """Canonical static name for the serving compute dtype (None = native).
+
+    Accepts None, "f32"/"float32", "bf16"/"bfloat16", or any float dtype
+    object; returns the numpy dtype-name string (hashable, stable as a jit
+    static argument) or None.
+    """
+    if compute_dtype is None:
+        return None
+    aliases = {"bf16": "bfloat16", "f32": "float32", "f64": "float64",
+               "f16": "float16"}
+    if isinstance(compute_dtype, str):
+        compute_dtype = aliases.get(compute_dtype, compute_dtype)
+    try:
+        dt = jnp.dtype(compute_dtype)
+    except TypeError as e:
+        raise ValueError(
+            f"compute_dtype must be None or a float dtype "
+            f"(e.g. 'bf16', 'f32'); got {compute_dtype!r}"
+        ) from e
+    if not jnp.issubdtype(dt, jnp.floating):
+        raise ValueError(
+            f"compute_dtype must be a float dtype, got {dt.name!r}"
+        )
+    return dt.name
+
+
+@partial(jax.jit, static_argnames=("k", "compute_dtype"))
 def knn_select_valid(
     plan: ServingPlan, positions: jax.Array, xq: jax.Array, k: int,
     alive: jax.Array | None = None,
+    compute_dtype: str | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """((Q, k) selected ids, (Q, k) validity) via the cell plan.
 
@@ -233,17 +279,28 @@ def knn_select_valid(
     indices; the overflow picks +inf-distance (dead / padded) entries and
     ``valid`` marks them False so callers average the live selections only
     — matching the dense oracle ``fusion.knn_fusion`` at every liveness
-    fraction (all-dead included: zero predictions).
+    fraction (all-dead included: zero predictions).  ``compute_dtype``
+    (normalized name, e.g. "bfloat16") is an OPT-IN measurement knob that
+    rounds the query/candidate coordinates to a storage dtype before the
+    (>= f32) distance/top-k arithmetic — the production quantized path
+    does NOT use it (selection-exact; see the module docstring), but the
+    quant bench and tests use it to quantify the selection-flip cost.
+    Cell lookup stays full-precision.
     """
-    cid = query_cells(plan, xq)  # (Q,)
+    cid = query_cells(plan, xq)  # (Q,) — always full precision
     cand = plan.cells[cid]  # (Q, K_max)
     cmask = plan.cell_mask[cid]  # (Q, K_max)
     if alive is not None:
-        cmask = cmask & alive[cand]
+        cmask = cmask & (alive[cand] != 0)
     pos_pad = jnp.concatenate(
         [positions, jnp.zeros((1, positions.shape[1]), positions.dtype)]
     )
     cpos = pos_pad[cand]  # (Q, K_max, d)
+    if compute_dtype is not None:
+        cdt = jnp.dtype(compute_dtype)
+        ar = cdt if cdt.itemsize >= 4 else jnp.dtype(jnp.float32)
+        xq = xq.astype(cdt).astype(ar)  # round to storage, compute wide
+        cpos = cpos.astype(cdt).astype(ar)
     d2 = jnp.sum((xq[:, None, :] - cpos) ** 2, axis=-1)
     d2 = jnp.where(cmask, d2, jnp.inf)
     neg, top = jax.lax.top_k(-d2, k)  # (Q, k) candidate positions
@@ -266,19 +323,40 @@ def knn_select(
     return knn_select_valid(plan, positions, xq, k, alive)[0]
 
 
-@partial(jax.jit, static_argnames=("kernel", "k"))
-def _eval_selected(kernel, nbr_pos, nbr_mask, coef, sel, valid, xq, k: int):
-    """mean over VALID selections of f_{sel[q,j]}(xq[q]): O(Q*k*D)."""
+@partial(jax.jit, static_argnames=("kernel", "k", "compute_dtype"))
+def _eval_selected(
+    kernel, nbr_pos, nbr_mask, coef, sel, valid, xq, k: int,
+    compute_dtype: str | None = None,
+):
+    """mean over VALID selections of f_{sel[q,j]}(xq[q]): O(Q*k*D).
+
+    ``compute_dtype`` rounds the ANCHOR coordinates (the storage dtype of
+    the quantized path's VMEM-dominant table) before evaluating K(x, x_j)
+    at >= f32 (the Pallas kernel's register-level upconversion contract);
+    queries stay full-precision and the representer contraction and the
+    average accumulate in the coefficient dtype regardless.
+    """
     d = xq.shape[-1]
     d_max = nbr_pos.shape[-2]
+    cdt = None if compute_dtype is None else jnp.dtype(compute_dtype)
 
     def per_query(x, sel_q, valid_q):
         npos = nbr_pos[sel_q]  # (k, D, d)
         cf = jnp.where(nbr_mask[sel_q], coef[sel_q], 0.0)  # (k, D)
-        kv = kernel(x[None, :], npos.reshape(k * d_max, d))[0].reshape(
-            k, d_max
-        )
-        f = jnp.sum(kv * cf, axis=-1)  # (k,)
+        if cdt is not None:
+            ar = x.dtype if x.dtype.itemsize >= 4 else jnp.dtype(jnp.float32)
+            npos = npos.astype(cdt).astype(ar)
+        if cdt is not None and kernel.name == "rbf":
+            # Direct (x - x_j)^2 form, not the matmul expansion the generic
+            # kernel uses — matches the Pallas kernel bit-for-bit on the
+            # same rounded inputs.
+            dd = jnp.sum((x[None, None, :] - npos) ** 2, axis=-1)  # (k, D)
+            kv = jnp.exp(-kernel.gamma * dd)
+        else:
+            kv = kernel(x[None, :], npos.reshape(k * d_max, d))[0].reshape(
+                k, d_max
+            )
+        f = jnp.sum(kv.astype(cf.dtype) * cf, axis=-1)  # (k,) coef dtype
         cnt = jnp.sum(valid_q)
         return jnp.sum(jnp.where(valid_q, f, 0.0)) / jnp.maximum(cnt, 1)
 
@@ -294,6 +372,9 @@ def knn_fuse(
     plan: ServingPlan | None = None,
     engine: str = "plan",
     ecoef: jax.Array | None = None,
+    compute_dtype=None,
+    prune: jax.Array | None = None,
+    block_q: int | None = None,
 ) -> jax.Array:
     """Plan-based kNN fusion (paper Eq. 19) — O(Q*k*D) per field.
 
@@ -306,9 +387,22 @@ def knn_fuse(
     a snapshot-serving process (``launch.daemon``) publishes an immutable
     (problem, state) pair and pays the anchor-weight rescale ONCE per
     published snapshot instead of once per query dispatch.
+
+    ``compute_dtype`` ("bf16"/"f32"/None=native) sets the storage dtype of
+    the anchor tables on both engines (selection-exact quantization — see
+    the module docstring); accumulation and the output stay in the
+    coefficient dtype.  ``prune`` is an optional (n+1,) keep mask
+    (``pruning.prune_mask``) ANDed into the liveness gate — pruned sensors
+    drop out of selection exactly like dead ones, with zero recompiles
+    across tau changes (mask values only).  ``block_q`` overrides the
+    Pallas query tile (None = ``default_block_q(compute_dtype)``): the
+    latency-oriented default stays small so bucketed small requests pad
+    little; bulk offline sweeps tune it up (see benchmarks/quant_bench).
     """
     if engine not in ("plan", "pallas"):
         raise ValueError(f"engine must be 'plan' or 'pallas', got {engine!r}")
+    if block_q is not None and engine != "pallas":
+        raise ValueError("block_q applies to engine='pallas' only")
     if k < 1 or k > problem.n:
         raise ValueError(f"k must be in [1, n={problem.n}], got {k}")
     if plan is None:
@@ -318,6 +412,10 @@ def knn_fuse(
             f"plan guarantees exact kNN only up to k={plan.k}; got k={k} "
             "(rebuild with make_serving_plan(problem, k=...))"
         )
+    cdt_name = _norm_compute_dtype(compute_dtype)
+    alive = problem.alive
+    if prune is not None:
+        alive = ((alive != 0) & (prune != 0)).astype(alive.dtype)
     dt = problem.nbr_pos.dtype
     xq = jnp.atleast_2d(jnp.asarray(xq, dt))
     positions = problem.topology.positions.astype(dt)
@@ -351,19 +449,31 @@ def knn_fuse(
         out = knn_fuse_fused(
             xq, cid, plan.cells, plan.cell_mask, pos_pad,
             nbr_pos, nbr_mask, coef,
-            alive=problem.alive, gamma=problem.kernel.gamma, k=k,
+            alive=alive, gamma=problem.kernel.gamma, k=k,
+            block_q=block_q, compute_dtype=cdt_name,
         )
         return out if problem.batched else out[0]
 
     # (Q, k) shared across fields (liveness is network-level, not per-field)
-    sel, valid = knn_select_valid(plan, positions, xq, k, problem.alive)
+    # Selection is ALWAYS full-precision — the quantized path is
+    # selection-exact (see the module docstring); compute_dtype reaches
+    # only the anchor-table evaluation below.
+    sel, valid = knn_select_valid(plan, positions, xq, k, alive)
     if problem.batched:
         return jax.vmap(
             lambda np_, nm, cf: _eval_selected(
-                problem.kernel, np_, nm, cf, sel, valid, xq, k
+                problem.kernel, np_, nm, cf, sel, valid, xq, k,
+                compute_dtype=cdt_name,
             )
         )(problem.nbr_pos, problem.nbr_mask, ecoef)
     return _eval_selected(
         problem.kernel, problem.nbr_pos, problem.nbr_mask, ecoef,
-        sel, valid, xq, k,
+        sel, valid, xq, k, compute_dtype=cdt_name,
     )
+
+
+# Sparsified-serving surface (ISSUE: serving.prune_plan): implemented in
+# core.pruning, re-exported here because they operate on ServingPlans.
+from .pruning import (  # noqa: E402
+    PruneReport, answer_bound, prune_mask, prune_plan, representer_energy,
+)

@@ -23,11 +23,30 @@ tables / anchor tables / coefficients stay resident in VMEM while the query
 tiles stream through — HBM traffic is O(B*n*D + Q), compute O(B*Q*k*D),
 versus O(B*Q*n*D) compute and O(B*Q*n) HBM for the dense oracle.
 
-dtype follows the inputs (f32, or f64 under JAX_ENABLE_X64 — the kernel is
-pure gathers + VPU elementwise math).  On non-TPU backends the wrapper runs
-in interpret mode (the repo's validation mode, see ``kernels.ops``); the
-in-kernel gathers use dynamic indices, which interpret mode executes
-exactly.
+Mixed precision (``compute_dtype=``): the neighborhood ANCHOR tables —
+the VMEM-dominant operand at O(B*n*D*d) elements, an order of magnitude
+above the O(n*d) sensor-position table — are STORED in the compute dtype
+(bf16 for the quantized serving path), halving the resident footprint per
+program so the default query tile doubles (``default_block_q``: 128 at
+f32, 256 at bf16).  Gathered anchor tiles are upconverted at the register
+level and all arithmetic runs at (at least) f32 — the same contract as a
+bf16-in/f32-out MXU contraction — while the representer contraction and
+the running average ALWAYS accumulate in the coefficient dtype (f32, or
+f64 under JAX_ENABLE_X64 — ``ecoef`` is never downcast).  Selection stays
+EXACT: queries, sensor positions, the distance tile, and the top-k
+network keep full precision, so the quantized path selects the same
+sensors as the f32 path and the only perturbation is the bf16 rounding of
+the anchors inside exp(-gamma ||x - x_j||^2).  (Quantizing selection too
+was measured and rejected: at n=1000 serving geometry, bf16 position
+rounding flips ~5% of selected sets and costs ~2.3% field RMSE — over the
+quantized path's 1% budget — while anchors-only costs ~0.1%; see
+BENCH_quant.json and tests/test_quant_serving.py.)
+
+The output dtype follows the COEFFICIENTS, not the queries — an f64
+problem served with bf16 selection still answers in f64.  On non-TPU
+backends the wrapper runs in interpret mode (the repo's validation mode,
+see ``kernels.ops``); the in-kernel gathers use dynamic indices, which
+interpret mode executes exactly.
 """
 
 from __future__ import annotations
@@ -39,30 +58,52 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def default_block_q(compute_dtype=None) -> int:
+    """Query-tile rows per program, derived from the VMEM footprint.
+
+    The per-program footprint is dominated by the position tables and the
+    query tile; halving their element width (f32 -> bf16) frees room to
+    double the tile, halving the number of grid steps per launch.
+    """
+    if compute_dtype is not None and jnp.dtype(compute_dtype).itemsize <= 2:
+        return 256
+    return 128
+
+
 def _knn_fuse_kernel(
     xq_ref, cid_ref, cells_ref, cmask_ref, alive_ref, spos_ref,
     npos_ref, nmask_ref, coef_ref, out_ref,
     *, gamma: float, k: int,
 ):
-    xq = xq_ref[...]  # (BQ, d)
+    raw = xq_ref[...]  # (BQ, d)
+    # Arithmetic runs at (at least) f32; anchor refs may be stored
+    # narrower (bf16) and are upconverted in registers after the gather.
+    ar_dt = raw.dtype if raw.dtype.itemsize >= 4 else jnp.float32
+    xq = raw.astype(ar_dt)
     cid = cid_ref[...]  # (BQ,)
-    alive = alive_ref[...]  # (n+1,) row liveness (network lifecycle)
+    alive = alive_ref[...]  # (n+1,) row liveness (lifecycle AND pruning)
     cand = cells_ref[...][cid]  # (BQ, K) this tile's candidate rows
-    # Candidate validity = plan mask & liveness: a removed sensor drops out
-    # even before the serving plan's candidate lists are repaired.
+    # Candidate validity = plan mask & liveness: a removed (or pruned-out)
+    # sensor drops out even before the serving plan's candidate lists are
+    # repaired/compacted.
     cmask = (cmask_ref[...][cid] != 0) & (alive[cand] != 0)  # (BQ, K)
-    cpos = spos_ref[...][cand]  # (BQ, K, d)
-    npos = npos_ref[0]  # (n+1, D, d) — this field's anchors
+    cpos = spos_ref[...][cand].astype(ar_dt)  # (BQ, K, d) full precision
+    # Upconvert the anchor block ONCE per program, right after the ref
+    # load: the VMEM-resident copy is the narrow storage dtype; the wide
+    # working copy lives only for this grid step (and the per-step cast is
+    # one table-sized op instead of k gather-sized ones).
+    npos = npos_ref[0].astype(ar_dt)  # (n+1, D, d)
     nmask = nmask_ref[0]  # (n+1, D)
-    coef = coef_ref[0]  # (n+1, D)
+    coef = coef_ref[0]  # (n+1, D) accumulation dtype — NEVER downcast
 
     bq, kmax = cand.shape
-    inf = jnp.asarray(jnp.inf, xq.dtype)
+    acc_dt = coef.dtype
+    inf = jnp.asarray(jnp.inf, ar_dt)
     d2 = jnp.sum((xq[:, None, :] - cpos) ** 2, axis=-1)  # (BQ, K)
     d2 = jnp.where(cmask, d2, inf)
     cols = jax.lax.broadcasted_iota(jnp.int32, (bq, kmax), 1)
 
-    acc = jnp.zeros((bq,), xq.dtype)
+    acc = jnp.zeros((bq,), acc_dt)
     cnt = jnp.zeros((bq,), jnp.int32)
     for _ in range(k):  # masked selection network, k unrolled steps
         best = jnp.argmin(d2, axis=1)  # (BQ,) first-min == lowest id
@@ -74,12 +115,12 @@ def _knn_fuse_kernel(
         )
         sel = jnp.take_along_axis(cand, best[:, None], axis=1)[:, 0]
         d2 = jnp.where(cols == best[:, None], inf, d2)  # disable selected
-        cf = jnp.where(nmask[sel] != 0, coef[sel], 0.0)  # (BQ, D)
+        cf = jnp.where(nmask[sel] != 0, coef[sel], 0.0)  # (BQ, D) acc dtype
         dd = jnp.sum((xq[:, None, :] - npos[sel]) ** 2, axis=-1)  # (BQ, D)
-        f = jnp.sum(jnp.exp(-gamma * dd) * cf, axis=-1)
+        f = jnp.sum(jnp.exp(-gamma * dd).astype(acc_dt) * cf, axis=-1)
         acc += jnp.where(ok, f, 0.0)
         cnt += ok.astype(jnp.int32)
-    out_ref[0, :] = acc / jnp.maximum(cnt, 1).astype(xq.dtype)
+    out_ref[0, :] = acc / jnp.maximum(cnt, 1).astype(acc_dt)
 
 
 @functools.partial(
@@ -107,7 +148,11 @@ def knn_fuse_pallas(
     xq (Q, d); qcell (Q,) int32 flattened cell ids; cells (C, K) int32;
     cmask (C, K) int8; alive (n+1,) int8 sensor-row liveness;
     spos (n+1, d) padded sensor positions; nbr_pos (B, n+1, D, d);
-    nbr_mask (B, n+1, D) int8; coef (B, n+1, D).  Returns (B, Q).
+    nbr_mask (B, n+1, D) int8; coef (B, n+1, D).  Returns (B, Q) in the
+    COEFFICIENT dtype.  ``nbr_pos`` may be stored in a narrower compute
+    dtype (bf16) than the rest — its VMEM tiles stay narrow, gathers are
+    upconverted in registers, and the arithmetic runs at >= f32 while the
+    contraction accumulates in coef.dtype.
     """
     q, d = xq.shape
     c, kmax = cells.shape
@@ -131,7 +176,7 @@ def knn_fuse_pallas(
             pl.BlockSpec((1, r, d_max), lambda b, i: (b, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
-        out_shape=jax.ShapeDtypeStruct((b, q), xq.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, q), coef.dtype),
         interpret=interpret,
     )(xq, qcell, cells, cmask, alive, spos, nbr_pos, nbr_mask, coef)
 
@@ -149,7 +194,8 @@ def knn_fuse_fused(
     alive: jax.Array | None = None,
     gamma: float = 1.0,
     k: int = 1,
-    block_q: int = 128,
+    block_q: int | None = None,
+    compute_dtype=None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """General-shape wrapper: pad the query axis, launch, slice back.
@@ -159,10 +205,23 @@ def knn_fuse_fused(
     sizes compiles O(log Q) programs; padded rows point at cell 0 and are
     sliced off.  ``alive`` is the (n+1,) sensor-row liveness mask (None =
     fully alive): dead candidates never get selected, independent of the
-    serving plan's repair state.  Returns (B, Q) in the input dtype.
+    serving plan's repair state.
+
+    ``compute_dtype`` (e.g. ``jnp.bfloat16``) rounds the anchor tables
+    (``nbr_pos``, the VMEM-dominant operand) to the storage dtype the
+    kernel keeps in VMEM; queries, sensor positions, and the top-k
+    selection stay full-precision (selection-exact quantization),
+    arithmetic upconverts to >= f32 in registers, ``coef`` is never cast,
+    and the contraction accumulates — and the output returns — in
+    ``coef.dtype``.  ``block_q`` defaults to
+    ``default_block_q(compute_dtype)`` (128 f32 / 256 bf16).
     """
     from .ops import _auto_interpret, bucket_rows
 
+    if compute_dtype is not None:
+        nbr_pos = nbr_pos.astype(jnp.dtype(compute_dtype))
+    if block_q is None:
+        block_q = default_block_q(compute_dtype)
     q = xq.shape[0]
     r = nbr_pos.shape[1]
     if alive is None:

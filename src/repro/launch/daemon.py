@@ -75,6 +75,7 @@ from repro.core import (
     fusion,
     make_serving_plan,
     monitor,
+    pruning,
     streaming,
 )
 from repro.core import faults as faults_mod
@@ -100,6 +101,8 @@ class DaemonConfig:
     on_full: str = "drop"  # over-capacity arrival policy
     ckpt_every: int = 0  # ticks between checkpoints (0 = off)
     snapshot_dir: str | None = None  # warm-restart / checkpoint home
+    serve_dtype: str = "f32"  # anchor storage dtype: "f32" | "bf16"
+    energy_tau: float = 0.0  # representer-pruning threshold (0 = off)
 
 
 class Snapshot(NamedTuple):
@@ -108,6 +111,13 @@ class Snapshot(NamedTuple):
     ``ecoef`` is ``effective_coef(problem, state)`` materialized at
     publish time, so every query dispatch against this snapshot skips
     the per-call anchor-weight rescale (``serving.knn_fuse(ecoef=...)``).
+    ``ecoef`` stays in the COEFFICIENT dtype (f32/f64) regardless of the
+    serving ``serve_dtype`` — bf16 rounds the stored anchor tables only
+    (selection-exact; see ``core.serving``), never the coefficients or
+    the accumulated contraction.  ``keep`` is the representer-prune
+    mask re-derived from this snapshot's coefficients at publish time
+    (``pruning.prune_mask``; None when pruning is off): values-only, so
+    per-publish re-pruning compiles nothing.
     """
 
     version: int
@@ -115,6 +125,9 @@ class Snapshot(NamedTuple):
     state: object
     plan: object
     ecoef: jax.Array
+    serve_dtype: str = "f32"
+    keep: object = None  # (n+1,) bool keep mask, or None
+    pruned: int = 0  # live sensors pruned out of this snapshot
 
 
 class QueryTicket(NamedTuple):
@@ -200,7 +213,15 @@ class Daemon:
             raise ValueError("the daemon serves batched problems (use B=1)")
         if config.on_full not in ("drop", "evict"):
             raise ValueError(f"bad on_full {config.on_full!r}")
+        if config.serve_dtype not in ("f32", "bf16"):
+            raise ValueError(f"bad serve_dtype {config.serve_dtype!r}")
         self.config = config
+        # "f32" means the problem's native dtype (f64 problems serve f64);
+        # bf16 rounds the stored anchor tables only (selection-exact).
+        self._compute_dtype = (
+            None if config.serve_dtype == "f32" else config.serve_dtype
+        )
+        self._energy_tau = float(config.energy_tau)
         self.restored_step: int | None = None
         if config.snapshot_dir is not None:
             from repro import checkpoint as ckpt
@@ -248,7 +269,34 @@ class Daemon:
     def _make_snapshot(self, version, problem, state, plan) -> Snapshot:
         ecoef = _ecoef_jit(problem, state)
         ecoef.block_until_ready()  # publish COMPLETE buffers only
-        return Snapshot(version, problem, state, plan, ecoef)
+        keep = None
+        pruned = 0
+        if self._energy_tau > 0.0:
+            # Re-prune on EVERY publish: fresh coefficients (beta decay,
+            # absorbs, churn) move sensor energies, and tau is a traced
+            # operand of one compiled program — zero recompiles per
+            # publish or per set_energy_tau change.
+            keep = pruning.prune_mask(
+                problem, ecoef=ecoef, energy_tau=self._energy_tau
+            )
+            keep.block_until_ready()
+            n = problem.n
+            pruned = int(
+                np.asarray(problem.alive[:n]).astype(bool).sum()
+                - np.asarray(keep[:n]).sum()
+            )
+        return Snapshot(
+            version, problem, state, plan, ecoef,
+            serve_dtype=self.config.serve_dtype, keep=keep, pruned=pruned,
+        )
+
+    def set_energy_tau(self, tau: float) -> None:
+        """Change the pruning threshold; takes effect at the next publish.
+
+        Values-only (the prune-mask program traces tau), so sweeping tau
+        on a live daemon never compiles anything.
+        """
+        self._energy_tau = float(tau)
 
     @property
     def snapshot(self) -> Snapshot:
@@ -324,6 +372,7 @@ class Daemon:
                 snap.problem, snap.state, xq, "knn",
                 k=self.config.k, engine=self.config.engine,
                 plan=snap.plan, ecoef=snap.ecoef,
+                compute_dtype=self._compute_dtype, prune=snap.keep,
             )
             out.block_until_ready()
             done = time.perf_counter()
@@ -532,6 +581,9 @@ class Daemon:
             "queue_rows": int(self._pending_rows),
             "queued_arrivals": len(self._arrivals),
             "restored_step": self.restored_step,
+            "serve_dtype": self.config.serve_dtype,
+            "energy_tau": float(self._energy_tau),
+            "pruned": int(self._snap.pruned),
             "last_tick": None if t is None else {
                 "tick": t.tick,
                 "published": t.published,
@@ -603,6 +655,13 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--k", type=int, default=3)
     ap.add_argument("--engine", default="plan", choices=["plan", "pallas"])
+    ap.add_argument("--serve-dtype", default="f32", choices=["f32", "bf16"],
+                    help="anchor-table storage dtype (bf16 rounds stored "
+                         "anchors only; selection and accumulation stay "
+                         "full precision)")
+    ap.add_argument("--energy-tau", type=float, default=0.0,
+                    help="representer-pruning energy threshold, re-derived "
+                         "per publish (0 = off)")
     ap.add_argument("--ticks", type=int, default=10,
                     help="training ticks to run (0: restart-verify only)")
     ap.add_argument("--queries-per-tick", type=int, default=2)
@@ -629,6 +688,7 @@ def main(argv=None):
         k=args.k, engine=args.engine,
         sweeps_per_tick=args.sweeps_per_tick,
         ckpt_every=args.ckpt_every, snapshot_dir=args.snapshot_dir,
+        serve_dtype=args.serve_dtype, energy_tau=args.energy_tau,
     )
     model = (
         faults_mod.parse_fault_spec(args.faults, dtype=state.z.dtype)
@@ -651,6 +711,9 @@ def main(argv=None):
         out = fusion.fuse(
             snap.problem, snap.state, probe, "knn", k=args.k,
             engine=args.engine, plan=snap.plan, ecoef=snap.ecoef,
+            compute_dtype=(None if snap.serve_dtype == "f32"
+                           else snap.serve_dtype),
+            prune=snap.keep,
         )
         return np.asarray(out)
 

@@ -1,0 +1,48 @@
+#!/bin/sh
+# Hardened launch environment for the serving processes (exec-style
+# wrapper, after the HomebrewNLP run.sh pattern in SNIPPETS.md):
+#
+#   sh src/repro/launch/env.sh python -m repro.launch.serve --mode daemon ...
+#
+# Python twin: `python -m repro.launch.serve --hardened-env ...` re-execs
+# itself under the same environment.  Everything is setdefault-style —
+# values you exported beforehand win — and the tcmalloc preload is
+# skipped (with a note) when the library is absent, so this wrapper is
+# safe on any box.
+
+# tcmalloc: long-lived serving churns many small host allocations; glibc
+# malloc fragments under it.  Preload the first tcmalloc found.
+if [ -z "${LD_PRELOAD:-}" ]; then
+    for lib in \
+        /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+        /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4 \
+        /usr/lib/libtcmalloc.so.4 \
+        /usr/local/lib/libtcmalloc.so.4; do
+        if [ -e "$lib" ]; then
+            LD_PRELOAD="$lib"
+            export LD_PRELOAD
+            break
+        fi
+    done
+    if [ -z "${LD_PRELOAD:-}" ]; then
+        echo "env.sh: tcmalloc absent, preload skipped" >&2
+    fi
+fi
+
+# Don't report individual large allocations below 60 GB — snapshot
+# buffers at serving batch sizes trip the default threshold constantly.
+: "${TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD:=60000000000}"
+export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD
+
+# Keep XLA/TF C++ logging off the serving stdout (the daemon prints
+# line-oriented JSON health there).
+: "${TF_CPP_MIN_LOG_LEVEL:=4}"
+export TF_CPP_MIN_LOG_LEVEL
+
+# One host platform device: serving dispatches must never be sharded
+# across virtual CPU devices (tests that WANT multiple set XLA_FLAGS
+# themselves, which wins over this default).
+: "${XLA_FLAGS:=--xla_force_host_platform_device_count=1}"
+export XLA_FLAGS
+
+exec "$@"

@@ -59,6 +59,8 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
 import jax
@@ -66,6 +68,64 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.models import decode_step, init_cache, init_params, prefill
+
+# Hardened launch environment (the HomebrewNLP run.sh pattern, see
+# SNIPPETS.md): tcmalloc beats glibc malloc under the daemon's sustained
+# small-allocation churn, the TCMALLOC threshold silences its large-alloc
+# warnings at serving batch sizes, TF_CPP_MIN_LOG_LEVEL keeps XLA's C++
+# logging off the serving stdout, and the XLA flag pins one host device so
+# serving never shards a query dispatch across virtual CPU devices.  The
+# shell twin is launch/env.sh (exec-style wrapper); both skip gracefully
+# when tcmalloc is absent.
+_TCMALLOC_PATHS = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+    "/usr/lib/libtcmalloc.so.4",
+    "/usr/local/lib/libtcmalloc.so.4",
+)
+_HARDENED_GUARD = "_REPRO_HARDENED_ENV"
+
+
+def hardened_env(base=None) -> tuple[dict, list[str]]:
+    """Build the hardened serving environment; returns (env, notes).
+
+    Never overrides values the caller already exported (setdefault
+    semantics), and skips the tcmalloc preload with a note — not an error
+    — when no known library path exists.
+    """
+    env = dict(os.environ if base is None else base)
+    notes = []
+    lib = next((p for p in _TCMALLOC_PATHS if os.path.exists(p)), None)
+    if lib is not None:
+        pre = env.get("LD_PRELOAD", "")
+        if lib not in pre.split(":"):
+            env["LD_PRELOAD"] = f"{lib}:{pre}" if pre else lib
+        env.setdefault(
+            "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD", "60000000000"
+        )
+        notes.append(f"tcmalloc={lib}")
+    else:
+        notes.append("tcmalloc absent (preload skipped)")
+    env.setdefault("TF_CPP_MIN_LOG_LEVEL", "4")
+    env.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
+    notes.append(f"XLA_FLAGS={env['XLA_FLAGS']!r}")
+    return env, notes
+
+
+def _reexec_hardened() -> None:
+    """Replace this process with one running under the hardened env.
+
+    LD_PRELOAD only takes effect at process start, so the flag re-execs
+    the identical command line once (the guard variable stops the loop).
+    """
+    env, notes = hardened_env()
+    env[_HARDENED_GUARD] = "1"
+    print("hardened-env: " + "; ".join(notes), flush=True)
+    os.execve(
+        sys.executable,
+        [sys.executable, "-m", "repro.launch.serve"] + sys.argv[1:],
+        env,
+    )
 
 
 def serve_lm(args):
@@ -395,10 +455,31 @@ def serve_fields(args):
             else (churn_plan if churn_plan is not None
                   else make_serving_plan(prob, k=args.k))
         )
-        run = lambda: fusion.fuse(
-            prob, state, xq, "knn", k=args.k, engine=args.engine, plan=plan
+        cdt = (
+            None if args.engine == "dense" or args.serve_dtype == "f32"
+            else args.serve_dtype
         )
         note = f"knn k={args.k} engine={args.engine}"
+        if plan is not None and args.energy_tau > 0:
+            # Offline compaction: drop representers under the energy
+            # threshold and shrink the candidate-list gather width.  Churn
+            # repairs happened on the UNPRUNED plan above; pruning is
+            # derived on top of the repaired lists.
+            from repro.core import pruning
+
+            plan, rep = pruning.prune_plan(
+                prob, state, plan, energy_tau=args.energy_tau
+            )
+            note += (
+                f" tau={args.energy_tau:g} pruned {rep.n_pruned}/"
+                f"{rep.n_live}"
+            )
+        run = lambda: fusion.fuse(
+            prob, state, xq, "knn", k=args.k, engine=args.engine, plan=plan,
+            compute_dtype=cdt,
+        )
+        if cdt is not None:
+            note += f" dtype={args.serve_dtype}"
         if plan is not None:
             note += f" (plan: {plan.n_cells} cells, K_max={plan.k_max})"
     else:
@@ -420,14 +501,15 @@ def serve_fields(args):
 
 
 def main():
-    import sys
-
-    # daemon mode has its own flag set — peel --mode off and delegate the
-    # rest of argv to repro.launch.daemon untouched
+    # daemon mode has its own flag set — peel --mode (and the env re-exec
+    # flag) off and delegate the rest of argv to repro.launch.daemon
     pre = argparse.ArgumentParser(add_help=False)
     pre.add_argument("--mode", default="lm",
                      choices=["lm", "field", "daemon"])
+    pre.add_argument("--hardened-env", action="store_true")
     ns, rest = pre.parse_known_args()
+    if ns.hardened_env and os.environ.get(_HARDENED_GUARD) != "1":
+        _reexec_hardened()  # never returns
     if ns.mode == "daemon":
         from repro.launch import daemon
 
@@ -484,6 +566,20 @@ def main():
     ap.add_argument("--k", type=int, default=3, help="kNN order for --fusion knn")
     ap.add_argument("--engine", default="plan", choices=["dense", "plan", "pallas"],
                     help="kNN serving engine for --fusion knn")
+    ap.add_argument("--serve_dtype", default="f32", choices=["f32", "bf16"],
+                    help="anchor-table storage dtype for the plan/pallas "
+                         "kNN engines (bf16 rounds the stored anchors "
+                         "only; selection and accumulation stay in full "
+                         "precision — selection-exact)")
+    ap.add_argument("--energy_tau", type=float, default=0.0,
+                    help="representer-pruning energy threshold: compact "
+                         "the query plan to sensors with coefficient "
+                         "energy above tau before serving (plan/pallas "
+                         "engines; 0 = off)")
+    ap.add_argument("--hardened-env", action="store_true",
+                    help="re-exec under the hardened launch env (tcmalloc "
+                         "LD_PRELOAD + XLA/logging flags; see launch/"
+                         "env.sh), skipped gracefully when libs are absent")
     args = ap.parse_args()
     if args.mode == "field":
         serve_fields(args)

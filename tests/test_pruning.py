@@ -1,0 +1,219 @@
+"""Representer pruning (ISSUE-9 sparsified serving path).
+
+Covers:
+  (a) the energy bound itself: |f_s(x)| <= E_s for the sup-1 serving
+      kernel (``representer_energy``);
+  (b) hypothesis property: pruned serving stays within ``answer_bound``
+      of unpruned serving — mask path AND compacted path — across dead
+      fractions {0, 1/n, k/n, 1} and drawn tau;
+  (c) mask path == compacted plan (same surviving candidates -> identical
+      answers), and tau = 0 compaction is EXACT while reclaiming the
+      spare/dead candidate columns;
+  (d) lifecycle composition: a pruned-out sensor that then DIES can never
+      be resurrected by pruning alone — only a real re-join (alive +
+      energetic) re-enters selection or a recompacted plan;
+  (e) tau monotonicity and PruneReport bookkeeping.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core import (
+    Kernel,
+    add_sensor,
+    build_topology,
+    colored_sweep,
+    fusion,
+    init_state,
+    make_batch_problem,
+    make_serving_plan,
+    pruning,
+    remove_sensor,
+    serving,
+    uniform_sensors,
+)
+
+KERN = Kernel("rbf", gamma=1.0)
+
+
+def _problem(n=24, b=2, spares=4, radius=0.7, seed=0, lam=0.1, sweeps=5):
+    pos = uniform_sensors(n, d=1, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    ys = np.sin(np.pi * pos[None, :, 0]) + 0.2 * rng.normal(size=(b, n))
+    topo = build_topology(pos, radius)
+    d_max = int(np.asarray(topo.degrees).max()) + 2
+    topo = build_topology(pos, radius, d_max=d_max, n_max=n + spares)
+    prob = make_batch_problem(topo, KERN, ys, jnp.full((n,), lam))
+    state = colored_sweep(prob, init_state(prob), n_sweeps=sweeps)
+    return prob, state, pos, rng
+
+
+def _kill(prob, dead_ids):
+    """Serving-level death: flip alive rows (factors untouched — serving
+    only reads alive + tables, so this is valid for read-out tests)."""
+    alive = np.asarray(prob.alive).copy()
+    alive[np.asarray(dead_ids, dtype=int)] = 0
+    return dataclasses.replace(prob, alive=jnp.asarray(alive))
+
+
+def test_energy_bounds_prediction():
+    """|f_s(x)| <= E_s everywhere (sup-1 kernel), per field."""
+    prob, state, pos, rng = _problem()
+    xq = np.linspace(-1.2, 1.2, 301)[:, None].astype(np.float32)
+    energy = np.asarray(pruning.representer_energy(prob, state))
+    preds = np.asarray(fusion.evaluate_sensors(prob, state, xq))
+    # (B, n, Q) or (n, Q); reduce over fields and queries
+    worst = np.abs(preds).max(axis=-1)
+    if worst.ndim == 2:
+        worst = worst.max(axis=0)
+    assert (worst <= energy[: worst.shape[0]] + 1e-5).all()
+
+
+def test_lane_energy_shape_and_sum():
+    prob, state, _, _ = _problem()
+    lane = np.asarray(
+        pruning.representer_energy(prob, state, per_lane=True)
+    )
+    total = np.asarray(pruning.representer_energy(prob, state))
+    assert lane.ndim == 2 and lane.shape[0] == total.shape[0]
+    np.testing.assert_allclose(lane.sum(axis=-1), total, rtol=1e-6)
+    assert total[-1] == 0.0  # sentinel row carries no energy
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    dead_mode=st.sampled_from(["none", "one", "k", "all"]),
+    tau_frac=st.floats(min_value=0.0, max_value=0.6),
+    seed=st.integers(min_value=0, max_value=3),
+)
+def test_pruned_within_answer_bound(dead_mode, tau_frac, seed):
+    """|unpruned - pruned| <= answer_bound, mask AND compacted paths,
+    at dead fractions {0, 1/n, k/n, 1}."""
+    k = 3
+    prob, state, pos, rng = _problem(seed=seed)
+    # plan built on the all-alive network; deaths flow through the alive
+    # gate (the serving invariant the churn tests pin)
+    plan = make_serving_plan(prob, k=k, spare=2, slack=1)
+    live_ids = np.flatnonzero(np.asarray(prob.alive)[:-1])
+    count = {"none": 0, "one": 1, "k": k, "all": live_ids.size}[dead_mode]
+    dead = np.random.default_rng(seed + 7).choice(
+        live_ids, size=count, replace=False
+    )
+    prob = _kill(prob, dead)
+    energy = np.asarray(pruning.representer_energy(prob, state))
+    tau = tau_frac * float(energy.max())
+    keep = pruning.prune_mask(prob, state, energy_tau=tau)
+
+    xq = rng.uniform(-1, 1, size=(64, 1)).astype(np.float32)
+    u = np.asarray(
+        serving.knn_fuse(prob, state, xq, k=k, plan=plan, engine="plan")
+    )
+    p_mask = np.asarray(
+        serving.knn_fuse(
+            prob, state, xq, k=k, plan=plan, engine="plan", prune=keep
+        )
+    )
+    positions = prob.topology.positions
+    sel_u, val_u = serving.knn_select_valid(plan, positions, xq, k, prob.alive)
+    alive_p = ((np.asarray(prob.alive) != 0) & np.asarray(keep)).astype(np.int8)
+    sel_p, val_p = serving.knn_select_valid(
+        plan, positions, xq, k, jnp.asarray(alive_p)
+    )
+    bound = pruning.answer_bound(energy, sel_u, val_u, sel_p, val_p)
+    gap = np.abs(u - p_mask).max(axis=0)  # worst field per query
+    assert (gap <= bound + 1e-5).all(), (gap - bound).max()
+
+    # compacted path obeys the same bound (identical answers to the mask
+    # path: same surviving candidate sets)
+    plan_c, rep = pruning.prune_plan(prob, state, plan, energy_tau=tau)
+    p_comp = np.asarray(
+        serving.knn_fuse(prob, state, xq, k=k, plan=plan_c, engine="plan")
+    )
+    np.testing.assert_allclose(p_comp, p_mask, atol=1e-6)
+    assert rep.k_max_after <= rep.k_max_before
+
+
+def test_tau0_compaction_exact_and_reclaims_capacity():
+    """tau = 0 drops only dead/spare candidate entries: answers are
+    bitwise the capacity plan's, and the gather width shrinks."""
+    prob, state, pos, rng = _problem(spares=6)
+    k = 3
+    plan = make_serving_plan(prob, k=k, spare=6, slack=2)
+    plan0, rep = pruning.prune_plan(prob, state, plan, energy_tau=0.0)
+    assert rep.n_pruned == 0
+    assert rep.k_max_after < rep.k_max_before
+    xq = rng.uniform(-1, 1, size=(128, 1)).astype(np.float32)
+    for engine in ("plan", "pallas"):
+        a = np.asarray(
+            serving.knn_fuse(prob, state, xq, k=k, plan=plan, engine=engine)
+        )
+        b = np.asarray(
+            serving.knn_fuse(prob, state, xq, k=k, plan=plan0, engine=engine)
+        )
+        np.testing.assert_array_equal(a, b, err_msg=engine)
+
+
+def test_no_resurrection_after_leave():
+    """prune -> leave: the dead sensor stays out of the keep mask (even at
+    tau = 0 with nonzero coefficients), out of every compacted candidate
+    list, and out of every selection; a true re-join re-enters."""
+    prob, state, pos, rng = _problem()
+    k = 2
+    victim = 5
+    plan = make_serving_plan(prob, k=k, spare=2, slack=1)
+    prob2, state2, ok = remove_sensor(prob, state, victim)
+    assert bool(ok)
+    keep = np.asarray(pruning.prune_mask(prob2, state2, energy_tau=0.0))
+    assert not keep[victim]  # dead -> never kept, energy is irrelevant
+    plan_c, _ = pruning.prune_plan(prob2, state2, plan, energy_tau=0.0)
+    cells = np.asarray(plan_c.cells)[np.asarray(plan_c.cell_mask).astype(bool)]
+    assert victim not in cells
+    xq = rng.uniform(-1, 1, size=(64, 1)).astype(np.float32)
+    sel, valid = serving.knn_select_valid(
+        plan_c, prob2.topology.positions, xq, k,
+        jnp.asarray(keep.astype(np.int8)),
+    )
+    assert victim not in np.asarray(sel)[np.asarray(valid)]
+
+    # a REAL re-join (alive + energetic) is eligible again
+    x_new = np.asarray(pos[victim], np.float32)
+    ys_new = np.array([0.4, -0.2], np.float32)  # one per field (b = 2)
+    prob3, state3, rec = add_sensor(prob2, state2, x_new, ys_new, lam=0.1)
+    assert bool(rec.joined)
+    # the row joins with zero coefficients — it earns energy by training
+    state3 = colored_sweep(prob3, state3, n_sweeps=3)
+    keep3 = np.asarray(pruning.prune_mask(prob3, state3, energy_tau=0.0))
+    assert keep3[int(rec.slot)]
+
+
+def test_tau_monotone_and_report():
+    prob, state, _, _ = _problem()
+    plan = make_serving_plan(prob, k=3, spare=2, slack=1)
+    energy = np.asarray(pruning.representer_energy(prob, state))
+    prev_kept = None
+    prev_kmax = None
+    for tau_frac in (0.0, 0.1, 0.3, 0.6):
+        tau = tau_frac * float(energy.max())
+        keep = np.asarray(pruning.prune_mask(prob, state, energy_tau=tau))
+        plan_c, rep = pruning.prune_plan(prob, state, plan, energy_tau=tau)
+        assert rep.n_live == rep.n_kept + rep.n_pruned
+        assert rep.n_kept == int(keep[:-1].sum())
+        np.testing.assert_array_equal(rep.keep, keep)
+        if prev_kept is not None:
+            # larger tau keeps a SUBSET, and the compacted width shrinks
+            assert not np.any(keep & ~prev_kept)
+            assert rep.k_max_after <= prev_kmax
+        prev_kept, prev_kmax = keep, rep.k_max_after
+
+
+def test_prune_needs_state_or_ecoef():
+    prob, state, _, _ = _problem()
+    try:
+        pruning.prune_mask(prob, energy_tau=0.0)
+    except ValueError as e:
+        assert "state or ecoef" in str(e)
+    else:  # pragma: no cover
+        raise AssertionError("expected ValueError")
