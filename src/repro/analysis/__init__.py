@@ -1,0 +1,33 @@
+"""Static-analysis layer: mechanical proofs of the repo's invariants.
+
+Three auditors, one CLI (``tools/audit.py``):
+
+  * :mod:`repro.analysis.jaxpr_audit` — traces every registered public
+    entry point with ``jax.make_jaxpr`` on canonical shapes and walks the
+    ClosedJaxpr for implicit dtype casts, host callbacks, traced values
+    leaking into static positions (the zero-recompile claims), and
+    scatters that bypass the ``alive`` liveness gate.
+  * :mod:`repro.analysis.compile_ledger` — the central registry of
+    jitted programs and their declared compile-cache budgets; tests and
+    ``launch/serve.py --churn`` consume it instead of hand-counting
+    ``_cache_size`` deltas.
+  * :mod:`repro.analysis.ast_lint` — repo-specific AST rules (no host
+    syncs inside jitted bodies, ``alive`` parameters must be threaded,
+    receipts must expose ``to_json``) with a checked-in baseline so any
+    pre-existing finding is explicit, never silent.
+
+Findings are keyed stably (:class:`repro.analysis.report.Finding`) so a
+baseline file can pin them; the audit fails on NEW findings and on STALE
+baseline entries, which makes the baseline shrink-only by construction.
+"""
+
+from .report import Finding, compare_with_baseline, load_baseline
+
+__all__ = [
+    "Finding",
+    "compare_with_baseline",
+    "load_baseline",
+    "ast_lint",
+    "compile_ledger",
+    "jaxpr_audit",
+]

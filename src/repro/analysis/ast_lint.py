@@ -1,0 +1,216 @@
+"""Repo-specific AST lint rules for ``src/repro``.
+
+Three rules, each encoding a convention the runtime auditors cannot see
+from a jaxpr alone:
+
+``ast-host-sync``
+    Inside a jit-compiled function body in ``core/`` or ``kernels/``
+    (decorated with ``jax.jit`` / ``partial(jax.jit, ...)`` or wrapped
+    module-level via ``name = jax.jit(fn, ...)``), no ``float(x)``,
+    ``x.item()``, ``np.asarray(x)`` or ``np.array(x)``: each forces a
+    trace-time concretization (a recompile per value) or a device sync.
+
+``ast-alive-thread``
+    Every public ``core/`` function that accepts an ``alive`` parameter
+    must actually thread it onward — the name must be read somewhere
+    beyond its ``alive is None`` default guard.  Accepting the mask and
+    dropping it silently disables liveness gating for every caller.
+
+``ast-receipt-json``
+    Every ``*Receipt`` class in ``core/`` and ``launch/`` must expose a
+    ``to_json`` method: receipts are the machine-readable audit trail
+    (``WatchdogReceipt.to_json`` set the contract) and a receipt that
+    cannot be serialized disappears from daemon health endpoints.
+
+Pre-existing violations live in the checked-in baseline
+(``tools/audit_baseline.json``) with a justification each; the audit
+fails on anything new and on stale baseline entries (shrink-only).
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+from .report import Finding
+
+_HOST_NP_FUNCS = {"asarray", "array"}
+
+
+def _is_jit_decorator(node: ast.expr) -> bool:
+    """True for jax.jit / jit / partial(jax.jit, ...) decorator shapes."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr == "jit":
+            return True
+        if isinstance(sub, ast.Name) and sub.id == "jit":
+            return True
+    return False
+
+
+def _jit_wrapped_names(tree: ast.Module) -> set[str]:
+    """Function names wrapped module-level: ``x = jax.jit(fn, ...)`` or
+    ``x = jax.jit(partial(fn, ...), ...)``."""
+    names: set[str] = set()
+    for node in tree.body:
+        if not isinstance(node, ast.Assign):
+            continue
+        call = node.value
+        if not (isinstance(call, ast.Call) and _is_jit_decorator(call.func)):
+            continue
+        for arg in call.args[:1]:
+            if isinstance(arg, ast.Name):
+                names.add(arg.id)
+            elif isinstance(arg, ast.Call):  # jax.jit(partial(fn, ...))
+                for inner in arg.args[:1]:
+                    if isinstance(inner, ast.Name):
+                        names.add(inner.id)
+    return names
+
+
+def _np_aliases(tree: ast.Module) -> set[str]:
+    aliases = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "numpy":
+                    aliases.add(a.asname or "numpy")
+    return aliases
+
+
+def _host_sync_calls(fn: ast.FunctionDef, np_aliases: set[str]):
+    """Yield (tag, lineno) for host-sync'ing calls inside ``fn``."""
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Name) and f.id == "float" and node.args:
+            if not isinstance(node.args[0], ast.Constant):
+                yield "float", node.lineno
+        elif isinstance(f, ast.Attribute) and f.attr == "item":
+            yield "item", node.lineno
+        elif (
+            isinstance(f, ast.Attribute)
+            and isinstance(f.value, ast.Name)
+            and f.value.id in np_aliases
+            and f.attr in _HOST_NP_FUNCS
+        ):
+            yield f"np.{f.attr}", node.lineno
+
+
+def _accepts_alive(fn: ast.FunctionDef) -> bool:
+    args = fn.args
+    every = (
+        list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs)
+    )
+    return any(a.arg == "alive" for a in every)
+
+
+def _alive_threaded(fn: ast.FunctionDef) -> bool:
+    """``alive`` is READ beyond its ``alive is (not) None`` default guard."""
+    guard_reads = set()
+    for node in ast.walk(fn):
+        if (
+            isinstance(node, ast.Compare)
+            and len(node.ops) == 1
+            and isinstance(node.ops[0], (ast.Is, ast.IsNot))
+            and isinstance(node.left, ast.Name)
+            and node.left.id == "alive"
+        ):
+            guard_reads.add(id(node.left))
+    for node in ast.walk(fn):
+        if (
+            isinstance(node, ast.Name)
+            and node.id == "alive"
+            and isinstance(node.ctx, ast.Load)
+            and id(node) not in guard_reads
+        ):
+            return True
+    return False
+
+
+def lint_file(path: str, repo_root: str) -> list[Finding]:
+    rel = os.path.relpath(path, repo_root).replace(os.sep, "/")
+    with open(path) as f:
+        tree = ast.parse(f.read(), filename=path)
+
+    in_core = "/core/" in f"/{rel}"
+    in_kernels = "/kernels/" in f"/{rel}"
+    findings: list[Finding] = []
+    np_aliases = _np_aliases(tree)
+    wrapped = _jit_wrapped_names(tree)
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            jitted = node.name in wrapped or any(
+                _is_jit_decorator(d) for d in node.decorator_list
+            )
+            if jitted and (in_core or in_kernels):
+                for tag, lineno in _host_sync_calls(node, np_aliases):
+                    findings.append(Finding(
+                        "ast-host-sync", f"{rel}:{node.name}", tag,
+                        f"line {lineno}: {tag} on a value inside a "
+                        "jit-compiled body — trace-time concretization "
+                        "or a device sync",
+                    ))
+            if (
+                in_core
+                and not node.name.startswith("_")
+                and isinstance(node, ast.FunctionDef)
+                and _accepts_alive(node)
+                and not _alive_threaded(node)
+            ):
+                findings.append(Finding(
+                    "ast-alive-thread", f"{rel}:{node.name}", "",
+                    f"line {node.lineno}: public function accepts "
+                    "'alive' but never threads it into a call or "
+                    "return — the liveness gate is dropped",
+                ))
+        elif isinstance(node, ast.ClassDef):
+            if node.name.endswith("Receipt"):
+                has = any(
+                    (isinstance(b, ast.FunctionDef) and b.name == "to_json")
+                    or (
+                        isinstance(b, ast.Assign)
+                        and any(
+                            isinstance(t, ast.Name) and t.id == "to_json"
+                            for t in b.targets
+                        )
+                    )
+                    for b in node.body
+                )
+                if not has:
+                    findings.append(Finding(
+                        "ast-receipt-json", f"{rel}:{node.name}", "",
+                        f"line {node.lineno}: receipt class without "
+                        "to_json — unserializable audit trail",
+                    ))
+    # dedupe by key (one finding per rule x location x tag)
+    return list({f.key: f for f in findings}.values())
+
+
+def default_paths(repo_root: str) -> list[str]:
+    """All lintable modules: core/, kernels/, launch/, analysis/."""
+    out = []
+    for sub in ("core", "kernels", "launch", "analysis"):
+        d = os.path.join(repo_root, "src", "repro", sub)
+        if not os.path.isdir(d):
+            continue
+        for name in sorted(os.listdir(d)):
+            if name.endswith(".py"):
+                out.append(os.path.join(d, name))
+    return out
+
+
+def lint_paths(
+    paths: list[str] | None = None, repo_root: str | None = None
+) -> list[Finding]:
+    if repo_root is None:
+        repo_root = os.path.abspath(
+            os.path.join(os.path.dirname(__file__), "..", "..", "..")
+        )
+    if paths is None:
+        paths = default_paths(repo_root)
+    findings: list[Finding] = []
+    for p in paths:
+        findings += lint_file(p, repo_root)
+    return findings

@@ -119,16 +119,23 @@ def link_masks(
     pi_bad = jnp.where(
         denom > 0, model.burst_to_bad / jnp.maximum(denom, 1e-20), 0.0
     )
-    bad0 = jax.random.uniform(k_init, lane_shape) < pi_bad
+    # Sample in the model dtype: the default uniform dtype is float64
+    # under JAX_ENABLE_X64 and would promote every threshold compare.
+    udt = model.drop.dtype
+    bad0 = jax.random.uniform(k_init, lane_shape, dtype=udt) < pi_bad
 
     def step(bad, k):
         ku, kb, kg = jax.random.split(k, 3)
         p_drop = 1.0 - (1.0 - model.drop) * (
             1.0 - jnp.where(bad, model.drop_bad, 0.0)
         )
-        delivered = jax.random.uniform(ku, lane_shape) >= p_drop
-        go_bad = jax.random.uniform(kb, lane_shape) < model.burst_to_bad
-        go_good = jax.random.uniform(kg, lane_shape) < model.burst_to_good
+        delivered = jax.random.uniform(ku, lane_shape, dtype=udt) >= p_drop
+        go_bad = jax.random.uniform(kb, lane_shape, dtype=udt) < (
+            model.burst_to_bad
+        )
+        go_good = jax.random.uniform(kg, lane_shape, dtype=udt) < (
+            model.burst_to_good
+        )
         bad = jnp.where(bad, ~go_good, go_bad)
         return bad, delivered
 
@@ -149,8 +156,9 @@ def crash_schedule(
 
     def step(up, k):
         kc, kr = jax.random.split(k)
-        crash = jax.random.uniform(kc, (n,)) < model.crash
-        restart = jax.random.uniform(kr, (n,)) < model.restart
+        udt = model.crash.dtype
+        crash = jax.random.uniform(kc, (n,), dtype=udt) < model.crash
+        restart = jax.random.uniform(kr, (n,), dtype=udt) < model.restart
         up = jnp.where(up, ~crash, restart)
         return up, up
 

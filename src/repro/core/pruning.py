@@ -118,7 +118,10 @@ def prune_mask(
         if state is None:
             raise ValueError("prune_mask needs state or ecoef")
         ecoef = effective_coef(problem, state)
-    tau = jnp.asarray(energy_tau, jnp.result_type(float))
+    # Cast to the energy dtype up front: ``jnp.result_type(float)`` is
+    # float64 under JAX_ENABLE_X64 and would thread a strong f64 scalar
+    # through an f32 problem.
+    tau = jnp.asarray(energy_tau, ecoef.dtype)
     return _keep_mask(problem.nbr_mask, problem.alive, ecoef, tau)
 
 

@@ -112,6 +112,21 @@ class JoinReceipt(NamedTuple):
     skipped_mask: jax.Array
     dropped_newest: jax.Array
 
+    def to_json(self) -> dict:
+        """Plain-JSON receipt (schema-tagged; device syncs happen here,
+        at the caller's chosen reporting point, never inside jit)."""
+        return {
+            "schema": "join_receipt/1",
+            "joined": bool(self.joined),
+            "slot": int(self.slot),
+            "adopted": np.asarray(self.adopted).tolist(),
+            "adopted_mask": np.asarray(self.adopted_mask).astype(bool).tolist(),
+            "skipped": np.asarray(self.skipped).tolist(),
+            "skipped_mask": np.asarray(self.skipped_mask).astype(bool).tolist(),
+            "dropped_newest": np.asarray(self.dropped_newest)
+            .astype(bool).tolist(),
+        }
+
 
 class AbsorbReceipt(NamedTuple):
     """Per-arrival outcome flags of ``absorb_many`` (both (A,) bool).
@@ -124,6 +139,14 @@ class AbsorbReceipt(NamedTuple):
 
     absorbed: jax.Array
     evicted: jax.Array
+
+    def to_json(self) -> dict:
+        """Plain-JSON receipt (schema-tagged; syncs at the call site)."""
+        return {
+            "schema": "absorb_receipt/1",
+            "absorbed": np.asarray(self.absorbed).astype(bool).tolist(),
+            "evicted": np.asarray(self.evicted).astype(bool).tolist(),
+        }
 
 
 def capacity_left(problem: SNTrainProblem) -> jnp.ndarray:

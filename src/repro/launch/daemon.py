@@ -169,6 +169,23 @@ class TickReceipt(NamedTuple):
     watchdog: monitor.WatchdogReceipt
     ckpt_step: int | None  # checkpoint written this tick (None: none)
 
+    def to_json(self) -> dict:
+        """Plain-JSON receipt (the /health payload's per-tick record)."""
+        return {
+            "schema": "tick_receipt/1",
+            "tick": int(self.tick),
+            "published": bool(self.published),
+            "degraded": bool(self.degraded),
+            "version": int(self.version),
+            "absorbed": int(self.absorbed),
+            "arrival_drops": int(self.arrival_drops),
+            "arrivals_rolled_back": int(self.arrivals_rolled_back),
+            "joins": int(self.joins),
+            "leaves": int(self.leaves),
+            "watchdog": self.watchdog.to_json(),
+            "ckpt_step": None if self.ckpt_step is None else int(self.ckpt_step),
+        }
+
 
 _ecoef_jit = jax.jit(effective_coef)
 

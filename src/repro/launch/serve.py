@@ -324,9 +324,7 @@ def serve_fields(args):
     churn_plan = None
     if args.churn:
         from repro.core import add_sensor, remove_sensor
-        from repro.core.serving import (
-            knn_select_valid, plan_add_sensor, plan_remove_sensor,
-        )
+        from repro.core.serving import plan_add_sensor, plan_remove_sensor
 
         # Slack >= the worst-case removals keeps the repaired query plan's
         # kNN exactness bound valid across the whole trace.
@@ -394,21 +392,16 @@ def serve_fields(args):
         # join+leave program sets are compiled before counting.
         prob, state, churn_plan = churn_round(prob, state, churn_plan, 0)
         prob, state, churn_plan = churn_round(prob, state, churn_plan, 1)
-        tracked = [
-            streaming._add_sensor_donate, streaming._remove_sensor_donate,
-            streaming._absorb_many_evict_donate if args.on_full == "evict"
-            else streaming._absorb_many_drop_donate,
-            colored_sweep, knn_select_valid, plan_add_sensor,
-            plan_remove_sensor,
-        ]
-        warm_sizes = [f._cache_size() for f in tracked]
+        from repro.analysis import compile_ledger
+
+        snap = compile_ledger.snapshot(
+            compile_ledger.churn_group(on_full=args.on_full, donate=True)
+        )
         t0 = time.time()
         for i in range(2, args.churn):
             prob, state, churn_plan = churn_round(prob, state, churn_plan, i)
         dt = time.time() - t0
-        recompiles = sum(
-            f._cache_size() - s for f, s in zip(tracked, warm_sizes)
-        )
+        recompiles = snap.total_growth()
         per_round = dt / max(args.churn - 2, 1) * 1e3
         from repro.core import plans as _plans
 

@@ -1,0 +1,155 @@
+"""Seeded-violation fixtures for the static auditor's self-tests.
+
+Each entry below plants exactly one violation class the jaxpr auditor
+must catch — a constant-folded sweep rate, an ungated table write, a
+host sync in a hot path, an implicit precision narrowing, a
+cache-signature change across a value grid — plus one clean entry that
+must produce no findings.  ``tests/test_audit.py`` runs them through
+:func:`repro.analysis.jaxpr_audit.audit_entry` and asserts detection.
+
+The AST-rule fixtures (which are parsed, never imported) live in
+``tests/fixtures/core/``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.jaxpr_audit import MAGIC, Built, EntrySpec
+
+
+# --- seeded violations -----------------------------------------------------
+
+
+def _synced(x):
+    jax.debug.print("x = {}", x)  # seeded host sync
+    return x * 2.0
+
+
+def _narrowed(x):
+    return x.astype(jnp.float16).astype(jnp.float32) * 2.0  # seeded narrow
+
+
+def _gate_dropped(alive, x):
+    del alive  # seeded: mask accepted, never used
+    return x * 2.0
+
+
+def _ungated_write(alive, table):
+    out = table.at[0].set(1.0)  # seeded: write independent of the mask
+    return out + alive.sum()  # (output still depends on alive)
+
+
+def _baked_rate(rate):
+    del rate  # seeded: the swept value was closed over instead
+    return jnp.ones((3,), jnp.float32) * MAGIC
+
+
+def _concretized_rate(rate):
+    if rate > 0.5:  # seeded: Python branch on a traced value
+        return jnp.ones((3,), jnp.float32)
+    return jnp.zeros((3,), jnp.float32)
+
+
+def _shape_varying_args(v):
+    # seeded: the call signature (shape) depends on the swept value
+    n = 2 if v < 0.5 else 3
+    return (jnp.zeros((n,), jnp.float32),)
+
+
+# --- one clean entry -------------------------------------------------------
+
+
+def _clean(alive, table, rate):
+    gated = table.at[0].set(alive[0].astype(table.dtype) * rate)
+    return jnp.where(alive[:, None] != 0, gated, table)
+
+
+def _clean_built():
+    alive = jnp.ones((4,), jnp.int32)
+    table = jnp.zeros((4, 3), jnp.float32)
+    rate = jnp.float32(0.1)
+    return Built(
+        fn=_clean,
+        args=(alive, table, rate),
+        alive=(_clean, (alive, table, rate)),
+        param=lambda r: _clean(alive, table, r),
+        grid=(0.0, MAGIC, 0.9),
+        build_call=lambda v: (alive, table, jnp.float32(v)),
+    )
+
+
+def _x():
+    return jnp.arange(4, dtype=jnp.float32)
+
+
+def _mask_and_table():
+    return jnp.ones((4,), jnp.int32), jnp.zeros((4, 3), jnp.float32)
+
+
+FULL = ("host-sync", "dtype", "alive", "alive-scatter", "param")
+
+# (spec, rules the auditor MUST report for it)
+SEEDED: list[tuple[EntrySpec, set[str]]] = [
+    (
+        EntrySpec(
+            "fixture.host_sync",
+            lambda: Built(fn=_synced, args=(_x(),)),
+            checks=FULL,
+        ),
+        {"host-sync"},
+    ),
+    (
+        EntrySpec(
+            "fixture.narrow",
+            lambda: Built(fn=_narrowed, args=(_x(),)),
+            checks=FULL,
+        ),
+        {"dtype-narrow"},
+    ),
+    (
+        EntrySpec(
+            "fixture.gate_dropped",
+            lambda: Built(alive=(_gate_dropped, (*_mask_and_table(),))),
+            checks=FULL,
+        ),
+        {"alive-dead"},
+    ),
+    (
+        EntrySpec(
+            "fixture.ungated_write",
+            lambda: Built(alive=(_ungated_write, (*_mask_and_table(),))),
+            checks=FULL,
+        ),
+        {"alive-scatter"},
+    ),
+    (
+        EntrySpec(
+            "fixture.baked_rate",
+            lambda: Built(param=_baked_rate),
+            checks=FULL,
+        ),
+        {"const-leak"},
+    ),
+    (
+        EntrySpec(
+            "fixture.concretized_rate",
+            lambda: Built(param=_concretized_rate),
+            checks=FULL,
+        ),
+        {"const-leak"},
+    ),
+    (
+        EntrySpec(
+            "fixture.shape_varying_grid",
+            lambda: Built(
+                param=lambda r: jnp.zeros((2,), jnp.float32) * r,
+                grid=(0.1, 0.9),
+                build_call=_shape_varying_args,
+            ),
+            checks=FULL,
+        ),
+        {"grid-recompile"},
+    ),
+]
+
+CLEAN = EntrySpec("fixture.clean", _clean_built, checks=FULL)

@@ -1,0 +1,23 @@
+"""AST-lint fixture: every rule violated once.  Parsed, never imported."""
+
+import numpy as np
+
+import jax
+
+
+@jax.jit
+def synced_step(x):
+    host = float(x)  # ast-host-sync: float
+    val = x.item()  # ast-host-sync: item
+    arr = np.asarray(x)  # ast-host-sync: np.asarray
+    return x * host + val + arr.sum()
+
+
+def dropped_gate(z, alive=None):
+    if alive is None:
+        pass
+    return z * 2  # ast-alive-thread: mask accepted, never read
+
+
+class LostReceipt:  # ast-receipt-json: no to_json
+    pass

@@ -1,0 +1,20 @@
+"""AST-lint fixture: conventions followed — must lint clean."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def gated_step(z, alive):
+    return jnp.where(alive != 0, z * 2, z)
+
+
+def threaded(z, alive=None):
+    if alive is None:
+        alive = jnp.ones_like(z)
+    return gated_step(z, alive)
+
+
+class TraceReceipt:
+    def to_json(self):
+        return {"schema": "trace_receipt/1"}

@@ -1,0 +1,164 @@
+"""Static-auditor self-tests (ISSUE 10).
+
+The load-bearing pins:
+
+  * every seeded violation fixture (constant-folded rate, ungated
+    scatter, dropped liveness gate, host sync, implicit narrowing,
+    grid-signature drift) is DETECTED, and the clean fixture is not;
+  * the AST rules fire on the parsed-only fixture tree and stay quiet
+    on the conventions-followed one;
+  * the real registry audits clean at float32 against the shrink-only
+    baseline — in particular the traced-parameter checks statically
+    prove the zero-recompile claim for the fault-rate / tau / beta
+    grids without executing a sweep;
+  * the compile ledger resolves every declared program, and snapshot /
+    assert_within enforce the FROZEN and BUCKETS budgets.
+"""
+
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import ast_lint, compile_ledger, jaxpr_audit
+from repro.analysis.report import (
+    Finding, compare_with_baseline, load_baseline,
+)
+
+import audit_fixtures
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(ROOT, "tools", "audit_baseline.json")
+FIXTURE_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "fixtures")
+
+
+# --- seeded jaxpr violations ----------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "spec,expected",
+    [(s, e) for s, e in audit_fixtures.SEEDED],
+    ids=[s.name for s, _ in audit_fixtures.SEEDED],
+)
+def test_seeded_violation_detected(spec, expected):
+    rules = {f.rule for f in jaxpr_audit.audit_entry(spec)}
+    missing = expected - rules
+    assert not missing, (
+        f"{spec.name}: auditor missed seeded rule(s) {missing}; got {rules}"
+    )
+
+
+def test_clean_fixture_has_no_findings():
+    findings = jaxpr_audit.audit_entry(audit_fixtures.CLEAN)
+    assert findings == [], [str(f) for f in findings]
+
+
+# --- AST rules -------------------------------------------------------------
+
+
+def test_ast_rules_fire_on_bad_fixture():
+    path = os.path.join(FIXTURE_ROOT, "core", "bad_ast.py")
+    keys = {f.key for f in ast_lint.lint_file(path, FIXTURE_ROOT)}
+    assert keys == {
+        "ast-host-sync:core/bad_ast.py:synced_step:float",
+        "ast-host-sync:core/bad_ast.py:synced_step:item",
+        "ast-host-sync:core/bad_ast.py:synced_step:np.asarray",
+        "ast-alive-thread:core/bad_ast.py:dropped_gate",
+        "ast-receipt-json:core/bad_ast.py:LostReceipt",
+    }
+
+
+def test_ast_rules_quiet_on_clean_fixture():
+    path = os.path.join(FIXTURE_ROOT, "core", "clean_ast.py")
+    findings = ast_lint.lint_file(path, FIXTURE_ROOT)
+    assert findings == [], [str(f) for f in findings]
+
+
+def test_repo_ast_lint_is_baselined():
+    findings = ast_lint.lint_paths(repo_root=ROOT)
+    new, _ = compare_with_baseline(findings, load_baseline(BASELINE))
+    assert new == [], [str(f) for f in new]
+
+
+# --- the real registry at float32 -----------------------------------------
+
+
+def test_registry_audits_clean_at_f32():
+    findings = jaxpr_audit.run(trace_dtype="float32")
+    new, _ = compare_with_baseline(findings, load_baseline(BASELINE))
+    assert new == [], [str(f) for f in new]
+
+
+def test_zero_recompile_grids_proven_statically():
+    """Fault-rate / tau / beta sweeps: one program per shape, proven
+    from jaxpr + cache signatures alone — nothing is executed."""
+    entries = {
+        e.name: e for e in jaxpr_audit.default_entries("float32")
+    }
+    swept = [
+        "faults.plan", "faults.serial", "faults.crash",
+        "pruning.keep", "stream.absorb",
+    ]
+    for name in swept:
+        spec = entries[name]
+        assert "param" in spec.checks, f"{name} lost its param check"
+        bad = [
+            f for f in jaxpr_audit.audit_entry(spec)
+            if f.rule in ("const-leak", "grid-recompile")
+        ]
+        assert bad == [], [str(f) for f in bad]
+
+
+# --- compile ledger --------------------------------------------------------
+
+
+def test_ledger_audits_clean():
+    findings = compile_ledger.audit()
+    assert findings == [], [str(f) for f in findings]
+
+
+def test_ledger_snapshot_frozen_budget():
+    fn = compile_ledger.LEDGER["pruning.keep"].resolve()
+    nbr_mask = jnp.ones((3, 2), bool)
+    alive = jnp.ones((3,), jnp.int32)
+    ecoef = jnp.ones((3, 2), jnp.float32)
+    fn(nbr_mask, alive, ecoef, jnp.float32(0.1))  # warmup
+    snap = compile_ledger.snapshot(("pruning.keep",))
+    for tau in (0.0, 0.25, 0.9):  # value sweep: FROZEN ⇒ no growth
+        fn(nbr_mask, alive, ecoef, jnp.float32(tau))
+    growth = snap.assert_within(context="tau sweep")
+    assert growth == {"pruning.keep": 0}
+    assert snap.total_growth() == 0
+
+
+def test_ledger_buckets_budget_requires_count():
+    snap = compile_ledger.snapshot("daemon")  # BUCKETS-budgeted group
+    with pytest.raises(ValueError, match="bucket"):
+        snap.assert_within()
+    snap.assert_within(buckets=0)  # no traffic since snapshot: within
+
+
+def test_ledger_rejects_unknown_names():
+    with pytest.raises(KeyError, match="not in the compile ledger"):
+        compile_ledger.snapshot(("no.such.program",))
+
+
+def test_churn_group_tracks_policy_variants():
+    g = compile_ledger.churn_group(on_full="evict", donate=False)
+    assert "stream.absorb_many.evict.copy" in g
+    assert all(n in compile_ledger.LEDGER for n in g)
+
+
+# --- baseline mechanics ----------------------------------------------------
+
+
+def test_baseline_compare_shrink_only():
+    f1 = Finding("rule-a", "spot", "t")
+    f2 = Finding("rule-b", "other")
+    baseline = {f1.key: "justified"}
+    new, stale = compare_with_baseline([f1, f2], baseline)
+    assert [f.key for f in new] == [f2.key]
+    assert stale == []
+    new, stale = compare_with_baseline([], baseline)
+    assert new == [] and stale == [f1.key]

@@ -46,10 +46,10 @@ from repro.core import (
     init_state,
     make_batch_problem,
     make_serving_plan,
-    serving,
     streaming,
     uniform_sensors,
 )
+from repro.analysis import compile_ledger
 from repro.core import faults
 from repro.kernels.ops import bucket_rows
 from repro.launch.daemon import Daemon, DaemonConfig
@@ -96,10 +96,8 @@ def test_any_interleaving_drains_through_buckets(sizes):
     most one per distinct power-of-two bucket — and every request's
     answer slice is exact vs the dense oracle."""
     prob, state, pos, _ = _fix()
-    tracked = (serving.knn_select_valid, serving._eval_selected)
     if not _CACHE_BASE:
-        for f in tracked:
-            _CACHE_BASE[f] = f._cache_size()
+        _CACHE_BASE["snap"] = compile_ledger.snapshot("daemon")
     d = Daemon(prob, state, config=DaemonConfig(k=3, max_batch_rows=64))
     rng = np.random.default_rng(sum(sizes))
     grids = [
@@ -120,9 +118,9 @@ def test_any_interleaving_drains_through_buckets(sizes):
     assert all(
         b & (b - 1) == 0 and b <= bucket_rows(64) for b in _BUCKETS_SEEN
     )
-    for f in tracked:
-        grown = f._cache_size() - _CACHE_BASE[f]
-        assert grown <= len(_BUCKETS_SEEN), (f, grown, _BUCKETS_SEEN)
+    _CACHE_BASE["snap"].assert_within(
+        buckets=len(_BUCKETS_SEEN), context="daemon interleavings"
+    )
 
 
 def test_pad_arrivals_is_bitwise_noop():
@@ -265,12 +263,12 @@ def test_fault_drill_zero_recompiles():
     prob, state, _, _ = _build(seed=8)
     d = Daemon(prob, state, config=DaemonConfig(k=3))
     d.tick()  # warm the training program set
-    warm = faults._faulty_colored._cache_size()
+    snap = compile_ledger.snapshot("faults")
     d.set_fault_model(faults.make_fault_model(0.25))
     d.tick()
     d.set_fault_model(faults.make_fault_model(0.0))
     d.tick()
-    assert faults._faulty_colored._cache_size() == warm
+    snap.assert_within(context="fault drill rate flips")
     # crash structure is static — swapping it in is a refused recompile
     with pytest.raises(ValueError):
         d.set_fault_model(faults.make_fault_model(0.1, crash=(0.1, 0.5)))

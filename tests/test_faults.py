@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro import checkpoint as ckpt
+from repro.analysis import compile_ledger
 from repro.core import (
     Kernel,
     build_topology,
@@ -378,10 +379,10 @@ def test_one_program_serves_all_fault_rates():
         prob, state, faults.make_fault_model(0.05), key, n_sweeps=2,
         engine="plan",
     ).z.block_until_ready()
-    warm = faults._faulty_colored._cache_size()
+    snap = compile_ledger.snapshot("faults")
     for p in (0.0, 0.1, 0.3, 0.6, 0.9):
         faults.faulty_sweep(
             prob, state, faults.make_fault_model(p), key, n_sweeps=2,
             engine="plan",
         ).z.block_until_ready()
-    assert faults._faulty_colored._cache_size() == warm
+    snap.assert_within(context="drop-rate grid")

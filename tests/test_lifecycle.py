@@ -547,12 +547,7 @@ def test_robust_legacy_link_trace_still_routes():
 def test_churn_trace_compiles_zero_programs_after_warmup():
     """Acceptance: a join -> leave -> absorb -> sweep -> query trace at
     fixed n_max triggers zero recompilations after warmup."""
-    from repro.core.serving import knn_select_valid
-    from repro.core.streaming import (
-        _absorb_many_drop_copy,
-        _add_sensor_copy,
-        _remove_sensor_copy,
-    )
+    from repro.analysis import compile_ledger
 
     prob, state, pos, rng = _lifecycle_problem(n=30, b=2, spares=4)
     plan = make_serving_plan(prob, k=3, spare=6, slack=8)
@@ -581,16 +576,14 @@ def test_churn_trace_compiles_zero_programs_after_warmup():
         return prob, state, plan
 
     prob, state, plan = trace_round(prob, state, plan, 0)  # warmup
-    tracked = [
-        _add_sensor_copy, _remove_sensor_copy, _absorb_many_drop_copy,
-        colored_sweep, knn_select_valid, plan_add_sensor,
-        plan_remove_sensor,
-    ]
-    sizes = [f._cache_size() for f in tracked]
+    snap = compile_ledger.snapshot(
+        compile_ledger.churn_group(on_full="drop", donate=False)
+    )
     for i in range(1, 4):
         prob, state, plan = trace_round(prob, state, plan, i)
-    growth = [f._cache_size() - s for f, s in zip(tracked, sizes)]
-    assert growth == [0] * len(tracked), growth
+    # buckets=0: the warmup round already compiled the only query bucket
+    snap.assert_within(buckets=0, context="churn trace")
+    assert snap.total_growth() == 0, snap.growth()
 
 
 # ---------------------------------------------------------------------------

@@ -119,15 +119,12 @@ def test_selection_exact_vs_optin_knob():
 
 
 def test_quant_zero_recompiles_across_taus_and_buckets():
-    from repro.core.pruning import _keep_mask
-    from repro.core.serving import _eval_selected, knn_select_valid
+    from repro.analysis import compile_ledger
     from repro.kernels import bucket_rows
-    from repro.kernels.knn_fuse import knn_fuse_pallas
 
     prob, state, pos, rng = _batched(seed=5)
     k = 3
     plan = make_serving_plan(prob, k=k)
-    tracked = (knn_fuse_pallas, knn_select_valid, _eval_selected, _keep_mask)
     sizes = [5, 33, 100, 180]
     # warmup: one call per (engine, size) at one tau; tau is TRACED so a
     # single tau warms every tau
@@ -139,7 +136,7 @@ def test_quant_zero_recompiles_across_taus_and_buckets():
                 prob, state, xq, "knn", k=k, engine=engine, plan=plan,
                 compute_dtype="bf16", prune=keep,
             ).block_until_ready()
-    warm = [f._cache_size() for f in tracked]
+    snap = compile_ledger.snapshot("quant")
     for i, s in enumerate(sizes):
         xq = rng.uniform(-1, 1, size=(s, 2)).astype(np.float32)
         keep = pruning.prune_mask(prob, state, energy_tau=0.003 * i)
@@ -148,12 +145,12 @@ def test_quant_zero_recompiles_across_taus_and_buckets():
                 prob, state, xq, "knn", k=k, engine=engine, plan=plan,
                 compute_dtype="bf16", prune=keep,
             ).block_until_ready()
-    extra = sum(f._cache_size() - w for f, w in zip(tracked, warm))
-    assert extra == 0, f"tau sweep compiled {extra} extra programs"
+    # buckets=0: the warmup above already covered every query bucket
+    snap.assert_within(buckets=0, context="tau sweep")
 
     # the Pallas KERNEL additionally buckets query sizes: fresh sizes in
     # already-warmed buckets lower zero new programs
-    base = knn_fuse_pallas._cache_size()
+    snap2 = compile_ledger.snapshot(("serving.knn_kernel",))
     for s in (7, 40, 101, 170):
         assert any(bucket_rows(s) == bucket_rows(w) for w in sizes), s
         xq = rng.uniform(-1, 1, size=(s, 2)).astype(np.float32)
@@ -161,7 +158,7 @@ def test_quant_zero_recompiles_across_taus_and_buckets():
             prob, state, xq, "knn", k=k, engine="pallas", plan=plan,
             compute_dtype="bf16", prune=keep,
         ).block_until_ready()
-    assert knn_fuse_pallas._cache_size() == base
+    snap2.assert_within(buckets=0, context="warm-bucket fresh sizes")
 
 
 def test_bf16_anchors_keep_f64_output_subprocess():

@@ -289,8 +289,8 @@ print("OK")
 
 
 def test_kernel_matvec_buckets_query_sizes():
+    from repro.analysis import compile_ledger
     from repro.kernels import bucket_rows, kernel_matvec
-    from repro.kernels.kernel_matvec import kernel_matvec_pallas
     from repro.kernels.ref import kernel_matvec_ref
 
     rng = np.random.default_rng(0)
@@ -298,33 +298,32 @@ def test_kernel_matvec_buckets_query_sizes():
     cf = rng.normal(size=(40,)).astype(np.float32)
     sizes = list(range(1, 230, 11))
     buckets = {bucket_rows(q) for q in sizes}
-    base = kernel_matvec_pallas._cache_size()
+    snap = compile_ledger.snapshot(("serving.matvec",))
     for q in sizes:
         xq = rng.normal(size=(q, 2)).astype(np.float32)
         out = kernel_matvec(xq, an, cf, gamma=1.0)
         assert out.shape == (q,)
         ref = kernel_matvec_ref(jnp.asarray(xq), jnp.asarray(an), jnp.asarray(cf), 1.0)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
-    compiled = kernel_matvec_pallas._cache_size() - base
-    assert compiled <= len(buckets), (compiled, buckets)
+    snap.assert_within(buckets=len(buckets), context="matvec query sizes")
 
 
 def test_knn_fuse_buckets_query_sizes():
-    from repro.kernels.knn_fuse import knn_fuse_pallas
+    from repro.analysis import compile_ledger
+    from repro.kernels import bucket_rows
 
     prob, state, pos, rng = _single(n=30, seed=6)
     plan = make_serving_plan(prob, k=1)
     dense = lambda xq: np.asarray(fusion.fuse(prob, state, xq, "nn"))
-    base = knn_fuse_pallas._cache_size()
+    snap = compile_ledger.snapshot(("serving.knn_kernel",))
     sizes = [3, 9, 17, 33, 65, 100]
     for q in sizes:
         xq = rng.uniform(-0.9, 0.9, size=(q, 1)).astype(np.float32)
         out = fusion.fuse(prob, state, xq, "nn", engine="pallas", plan=plan)
         np.testing.assert_allclose(np.asarray(out), dense(xq), atol=1e-5)
-    from repro.kernels import bucket_rows
-
-    assert knn_fuse_pallas._cache_size() - base <= len(
-        {bucket_rows(q) for q in sizes}
+    snap.assert_within(
+        buckets=len({bucket_rows(q) for q in sizes}),
+        context="knn_fuse query sizes",
     )
 
 

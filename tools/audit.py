@@ -1,0 +1,119 @@
+#!/usr/bin/env python
+"""Static invariant audit: jaxpr checks + compile ledger + AST lint.
+
+Runs the three auditors in :mod:`repro.analysis` and compares the union
+of findings against the shrink-only baseline
+(``tools/audit_baseline.json``).  Exit status:
+
+  0  every finding is baselined and every baseline entry still fires
+  1  NEW findings (not baselined) or STALE baseline entries (fix the
+     code or delete the entry — the baseline only shrinks)
+  2  the audit itself crashed
+
+By default JAX_ENABLE_X64 is switched on and the jaxpr audit traces the
+registry at BOTH float32 and float64 canonical dtypes: the f32-under-x64
+trace catches Python/NumPy float64 scalar contamination (``weak-promo``)
+and the f64 trace catches silent truncation (``dtype-narrow``) — the
+"f64 problems are never downcast" claim.  ``--no-x64`` restricts to the
+f32 trace (what the test suite runs in-process).
+
+  python tools/audit.py -v                 # full audit
+  python tools/audit.py --skip jaxpr       # AST + ledger only
+  python tools/audit.py --write-baseline   # re-pin current findings
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINE = os.path.join(ROOT, "tools", "audit_baseline.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument(
+        "--write-baseline", action="store_true",
+        help="overwrite the baseline with the current findings",
+    )
+    ap.add_argument(
+        "--skip", default="",
+        help="comma list of auditors to skip: jaxpr,ast,ledger",
+    )
+    ap.add_argument(
+        "--no-x64", action="store_true",
+        help="trace float32 only (skip the x64 promotion/truncation runs)",
+    )
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+    skip = {s.strip() for s in args.skip.split(",") if s.strip()}
+
+    if not args.no_x64:
+        # must precede the first jax import anywhere in the process
+        os.environ.setdefault("JAX_ENABLE_X64", "1")
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+
+    from repro.analysis import ast_lint, compile_ledger, jaxpr_audit
+    from repro.analysis.report import (
+        compare_with_baseline, load_baseline, save_baseline,
+    )
+
+    findings = []
+    if "ast" not in skip:
+        findings += ast_lint.lint_paths(repo_root=ROOT)
+    if "ledger" not in skip:
+        findings += compile_ledger.audit()
+    if "jaxpr" not in skip:
+        import jax
+
+        dtypes = ["float32"]
+        if jax.config.jax_enable_x64:
+            dtypes.append("float64")
+        for dt in dtypes:
+            findings += jaxpr_audit.run(trace_dtype=dt)
+    # one finding per key across dtype runs
+    findings = list({f.key: f for f in findings}.values())
+
+    if args.write_baseline:
+        save_baseline(args.baseline, findings)
+        print(f"wrote {len(findings)} finding(s) to {args.baseline}")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    new, stale = compare_with_baseline(findings, baseline)
+    # Staleness (a baselined finding that no longer fires) is only
+    # provable on a FULL audit — a --skip / --no-x64 run never traces
+    # the paths some baseline entries live on.
+    if skip or args.no_x64:
+        stale = []
+
+    if args.verbose or new or stale:
+        print(
+            f"audit: {len(findings)} finding(s), "
+            f"{len(findings) - len(new)} baselined, {len(new)} new, "
+            f"{len(stale)} stale baseline entr(y/ies)"
+        )
+    for f in new:
+        print(f"  NEW   {f}")
+    for k in stale:
+        print(f"  STALE {k}  (fixed? delete it from the baseline)")
+    if new or stale:
+        return 1
+    if args.verbose:
+        print("audit: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except SystemExit:
+        raise
+    except Exception:  # pragma: no cover
+        import traceback
+
+        traceback.print_exc()
+        sys.exit(2)
